@@ -1,0 +1,55 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark prints a small CSV table and returns the rows, so
+``benchmarks.run`` can aggregate and EXPERIMENTS.md can quote them.
+Backends: the contention ladders use the queueing model (the `simulate`
+backend — this container has one CPU device); fig10 additionally
+*executes* the Pallas kernels (interpret mode) to cross-validate.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, Iterable, List
+
+from repro.core.coordinator import (ActivitySpec, CoreCoordinator,
+                                    ExperimentConfig)
+from repro.core.devicetree import detect_platform
+from repro.core.pools import PoolManager
+
+
+def coordinator(platform: str = None, backend: str = "simulate"):
+    plat = detect_platform(platform)
+    return CoreCoordinator(PoolManager(plat), plat, backend=backend)
+
+
+def ladder_rows(coord, main: ActivitySpec, stress: ActivitySpec,
+                label: str, iters: int = 500) -> List[Dict]:
+    res = coord.run(ExperimentConfig(main=main, stress=stress, iters=iters))
+    rows = []
+    for s in res.scenarios:
+        rows.append({
+            "case": label,
+            "stressors": s.n_stressors,
+            "bw_GBps": round(s.modeled_bw_gbps, 3),
+            "lat_ns": round(s.modeled_lat_ns, 2),
+            "stress_bw_GBps": round(s.stress_bw_gbps, 3),
+        })
+    return rows
+
+
+def print_table(title: str, rows: Iterable[Dict]) -> List[Dict]:
+    rows = list(rows)
+    print(f"\n## {title}")
+    if not rows:
+        print("(no rows)")
+        return rows
+    cols = []
+    for r in rows:
+        for c in r:
+            if c not in cols:
+                cols.append(c)
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    sys.stdout.flush()
+    return rows

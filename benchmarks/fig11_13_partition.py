@@ -1,0 +1,63 @@
+"""Fig. 11-13 — cache partitioning and bank contention.
+
+Paper (ZCU102 + Jailhouse page coloring, 25% private L2 as pvtpool):
+  Fig. 11: partitioning does NOT help when all cores hit in L2 —
+           hit-path bank contention survives partitioning.
+  Fig. 12: partitioning DOES help when stressors miss to DRAM —
+           except (r,w)/(w,w) miss-path bank contention.
+  Fig. 13: >=2 write-streaming (y) stressors collapse bandwidth ~40x
+           despite partitioning (writeback-buffer exhaustion).
+"""
+from repro.core.coordinator import ActivitySpec
+from benchmarks.common import coordinator, ladder_rows, print_table
+
+HIT = 256 << 10          # fits the 1 MiB L2 / 256 KiB partition
+MISS = 4 << 20           # forces DRAM misses
+
+
+def main() -> list:
+    shared = coordinator("zcu102")
+    import repro.core.devicetree as dt
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.pools import PoolManager
+    part_plat = dt.zcu102_partitioned()
+    part = CoreCoordinator(PoolManager(part_plat), part_plat,
+                           backend="simulate")
+
+    rows = []
+    # Fig. 11: all-hit, partition off vs on
+    for a, b in (("r", "r"), ("r", "w")):
+        rows += ladder_rows(shared, ActivitySpec(a, "dram", HIT),
+                            ActivitySpec(b, "dram", HIT),
+                            f"fig11/shared/({a},{b})")
+        rows += ladder_rows(part, ActivitySpec(a, "pvtpool", HIT),
+                            ActivitySpec(b, "dram", HIT),
+                            f"fig11/pvtpool/({a},{b})")
+    # Fig. 12: obs hits private pool, stressors miss to DRAM
+    for a, b in (("r", "r"), ("r", "w"), ("w", "w")):
+        rows += ladder_rows(part, ActivitySpec(a, "pvtpool", HIT),
+                            ActivitySpec(b, "dram", MISS),
+                            f"fig12/pvtpool/({a},{b})")
+    # Fig. 13: normal write stress vs write-streaming stress
+    rows += ladder_rows(part, ActivitySpec("r", "pvtpool", HIT),
+                        ActivitySpec("w", "dram", MISS), "fig13/(r,w*)=w")
+    rows += ladder_rows(part, ActivitySpec("r", "pvtpool", HIT),
+                        ActivitySpec("y", "dram", MISS), "fig13/(r,w*)=y")
+    print_table("Fig.11-13 cache partitioning / bank contention", rows)
+
+    def bw(case, k):
+        return next(r["bw_GBps"] for r in rows
+                    if r["case"] == case and r["stressors"] == k)
+
+    # Fig. 11: hit-path contention: partitioned still degrades notably
+    assert bw("fig11/pvtpool/(r,r)", 3) < 0.75 * bw("fig11/pvtpool/(r,r)", 0)
+    # Fig. 12: partitioning helps for read-miss stressors...
+    assert bw("fig12/pvtpool/(r,r)", 3) > bw("fig11/shared/(r,r)", 3)
+    # Fig. 13: y-streams collapse bandwidth at >=2 stressors, identical at 1
+    assert bw("fig13/(r,w*)=y", 1) > 0.5 * bw("fig13/(r,w*)=w", 1)
+    assert bw("fig13/(r,w*)=y", 3) < 0.2 * bw("fig13/(r,w*)=w", 3)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

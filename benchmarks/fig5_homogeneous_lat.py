@@ -1,0 +1,51 @@
+"""Fig. 5 — homogeneous latency ladders + buffer-size sweeps.
+
+Paper: (l,r)/(l,w) ladders for DRAM and PL-DRAM, plus latency-vs-buffer-
+size line plots where caching effects vanish beyond the effective cache
+share (1 MiB at 0 stressors, 256 KiB at 3).  The sweep reproduces that
+knee: cacheable chases below the L2 share resolve at cache latency.
+"""
+from repro.core.coordinator import ActivitySpec
+from benchmarks.common import coordinator, ladder_rows, print_table
+
+BUF = 4 << 20
+
+
+def main() -> list:
+    zc = coordinator("zcu102")
+    rows = []
+    for mem in ("dram", "pl-dram"):
+        for stress in ("r", "w"):
+            rows += ladder_rows(
+                zc, ActivitySpec("l", mem, BUF),
+                ActivitySpec(stress, mem, BUF),
+                f"zcu102/{mem}/(l,{stress})")
+    print_table("Fig.5 homogeneous latency ladders (ns vs stressors)",
+                rows)
+
+    sweep = []
+    for kib in (64, 128, 256, 512, 1024, 2048, 4096):
+        buf = kib << 10
+        for stressors, label in ((1, "0stress"), (4, "3stress")):
+            import dataclasses
+            from repro.core.coordinator import ExperimentConfig
+            res = zc.run(ExperimentConfig(
+                main=ActivitySpec("l", "dram", buf),
+                stress=ActivitySpec("w", "dram", BUF), iters=100,
+                scenarios=stressors))
+            sweep.append({"case": f"dram/(l,w)/{label}",
+                          "buffer_KiB": kib,
+                          "lat_ns": round(
+                              res.scenarios[-1].modeled_lat_ns, 2)})
+    print_table("Fig.5 (bottom) latency vs buffer size", sweep)
+    # knee check: small cacheable buffers resolve in cache, big ones in DRAM
+    small = next(r for r in sweep
+                 if r["buffer_KiB"] == 256 and "0stress" in r["case"])
+    big = next(r for r in sweep
+               if r["buffer_KiB"] == 4096 and "0stress" in r["case"])
+    assert small["lat_ns"] < 0.6 * big["lat_ns"], (small, big)
+    return rows + sweep
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 6/7 — heterogeneous bandwidth/latency: observed pool != stressed
+pool.  The paper's counterintuitive result: saturating the SLOW module
+(PL-DRAM) degrades the FAST module (DRAM), because slow transactions
+occupy shared CCI queue entries longer ("Obs: DRAM, Int: PL-DRAM" red
+curves).  The reverse case barely reacts.
+"""
+from repro.core.coordinator import ActivitySpec
+from benchmarks.common import coordinator, ladder_rows, print_table
+
+BUF = 4 << 20
+
+
+def main() -> list:
+    zc = coordinator("zcu102")
+    rows = []
+    for obs, intf in (("dram", "pl-dram"), ("pl-dram", "dram")):
+        for strat in ("s", "l"):
+            rows += ladder_rows(
+                zc, ActivitySpec(strat, obs, BUF),
+                ActivitySpec("x", intf, BUF),
+                f"obs:{obs}/int:{intf}/({strat},x)")
+    v5e = coordinator()
+    for obs, intf in (("hbm", "host"), ("host", "hbm")):
+        rows += ladder_rows(
+            v5e, ActivitySpec("s", obs, 64 << 20),
+            ActivitySpec("x", intf, 64 << 20),
+            f"obs:{obs}/int:{intf}/(s,x)")
+    print_table("Fig.6/7 heterogeneous ladders", rows)
+
+    def pick(case, k, field):
+        return next(r[field] for r in rows
+                    if r["case"] == case and r["stressors"] == k)
+
+    # DRAM observed under PL-DRAM stress: bandwidth drops, latency rises
+    assert pick("obs:dram/int:pl-dram/(s,x)", 3, "bw_GBps") < \
+        pick("obs:dram/int:pl-dram/(s,x)", 0, "bw_GBps")
+    assert pick("obs:dram/int:pl-dram/(l,x)", 3, "lat_ns") > \
+        pick("obs:dram/int:pl-dram/(l,x)", 0, "lat_ns")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

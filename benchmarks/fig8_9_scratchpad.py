@@ -1,0 +1,48 @@
+"""Fig. 8/9 — scratchpad (OCM/BRAM) analysis with non-cacheable ops.
+
+Paper: 32 KiB buffers (below L1/L2!), so only the non-cacheable
+strategies (s/x/y for bandwidth, m for latency) reach the module.  OCM
+beats BRAM in bandwidth and keeps tighter latency under interference.
+The v5e analog probes VMEM (software-managed scratchpad) vs HBM
+streaming.
+"""
+from repro.core.coordinator import ActivitySpec
+from benchmarks.common import coordinator, ladder_rows, print_table
+
+BUF = 32 << 10
+
+
+def main() -> list:
+    zc = coordinator("zcu102")
+    rows = []
+    for mem in ("ocm", "bram"):
+        for a, b in (("s", "s"), ("s", "x"), ("s", "y"), ("x", "y")):
+            rows += ladder_rows(zc, ActivitySpec(a, mem, BUF),
+                                ActivitySpec(b, mem, BUF),
+                                f"zcu102/{mem}/({a},{b})")
+        rows += ladder_rows(zc, ActivitySpec("m", mem, BUF),
+                            ActivitySpec("x", mem, BUF),
+                            f"zcu102/{mem}/(m,x)")
+    v5e = coordinator()
+    for a, b in (("s", "s"), ("s", "y")):
+        rows += ladder_rows(v5e, ActivitySpec(a, "vmem", BUF),
+                            ActivitySpec(b, "hbm", 64 << 20),
+                            f"v5e/vmem/({a},{b})")
+    print_table("Fig.8/9 scratchpad bandwidth/latency", rows)
+
+    def bw(case, k):
+        return next(r["bw_GBps"] for r in rows
+                    if r["case"] == case and r["stressors"] == k)
+
+    assert bw("zcu102/ocm/(s,s)", 0) > bw("zcu102/bram/(s,s)", 0), \
+        "paper: OCM bandwidth consistently above BRAM"
+    lat_ocm = next(r["lat_ns"] for r in rows
+                   if r["case"] == "zcu102/ocm/(m,x)" and r["stressors"] == 3)
+    lat_bram = next(r["lat_ns"] for r in rows
+                    if r["case"] == "zcu102/bram/(m,x)" and r["stressors"] == 3)
+    assert lat_ocm < lat_bram, "paper: BRAM more interference-sensitive"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline table — aggregates the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the per-(arch x shape x mesh) roofline terms, dominant bottleneck
+and MODEL_FLOPS/HLO_FLOPs ratio.  Single-pod rows are the §Roofline
+table; multipod rows prove the pod axis shards.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import print_table
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_rows(mesh_filter=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh_filter and ("multipod" if d.get("multi_pod") else "pod") \
+                != mesh_filter:
+            continue
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"],
+            "mesh": "2x16x16" if d.get("multi_pod") else "16x16",
+            "GiB_per_dev": round(d["bytes_per_device"] / 2**30, 2),
+            "compute_ms": round(d["t_compute"] * 1e3, 2),
+            "memory_ms": round(d["t_memory"] * 1e3, 2),
+            "collective_ms": round(d["t_collective"] * 1e3, 2),
+            "bottleneck": d["bottleneck"],
+            "useful": round(d["useful_ratio"], 3),
+            "roofline": round(d["roofline_fraction"], 3),
+        })
+    return rows
+
+
+def main() -> list:
+    rows = load_rows()
+    if not rows:
+        print(f"(no dry-run artifacts in {DRYRUN_DIR}; run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return []
+    print_table("Roofline terms per (arch x shape x mesh)", rows)
+    pods = [r for r in rows if r["mesh"] == "16x16"]
+    if pods:
+        worst = min(pods, key=lambda r: r["roofline"])
+        coll = max(pods, key=lambda r: r["collective_ms"])
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f" = {worst['roofline']}")
+        print(f"most collective-bound: {coll['arch']}/{coll['shape']}"
+              f" X={coll['collective_ms']}ms")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""The paper's Fig. 1 -> Fig. 14 loop, end to end:
+
+  1. characterize every (pool x strategy x contention) performance curve,
+  2. hand the curve database to the PlacementAdvisor,
+  3. place a serving workload's memory objects (params, KV cache) under
+     two contention assumptions and watch the decision flip.
+
+    PYTHONPATH=src python examples/characterize_and_place.py
+"""
+from repro.configs.base import get_config
+from repro.core.characterize import CurveDB, characterize, mlp_table
+from repro.core.coordinator import CoreCoordinator
+from repro.core.placement import (ContentionSpec, MemObject,
+                                  PlacementAdvisor, kv_cache_object,
+                                  params_object)
+from repro.serve.engine import cache_bytes
+
+coord = CoreCoordinator(backend="simulate")
+
+print("== 1. characterize (full ladder cross-product) ==")
+db = characterize(coord, pools=["hbm", "host"],
+                  obs_strategies=("r", "w", "l"),
+                  stress_strategies=("r", "w", "y"))
+print(f"curves collected: {len(db.curves)}")
+db.save("/tmp/memscope_curves.json")
+print("persisted to /tmp/memscope_curves.json (reloadable: CurveDB.load)")
+
+print("\n== 2. Little's-law MLP per pool ==")
+print(mlp_table(db, coord.platform))
+
+print("\n== 3. placement decisions ==")
+cfg = get_config("glm4-9b")
+adv = PlacementAdvisor(db, coord.platform, pools=["hbm", "host"])
+kv = kv_cache_object("kv_cache", cache_bytes(cfg, batch=32, max_len=32768),
+                     bytes_read_per_token=float(
+                         cache_bytes(cfg, 32, 32768)))
+objs = [
+    params_object("params", 2 * cfg.n_params(), reads_per_step=1.0),
+    kv,
+    MemObject("activations", 8 << 30, bytes_per_step=float(16 << 30)),
+]
+caps = {"hbm": 256 << 30, "host": 2 << 40}   # a 16-chip slice's HBM
+
+for label, contention in (
+        ("quiet system", ContentionSpec(0, "hbm", "w")),
+        ("7 writers hammering HBM", ContentionSpec(7, "hbm", "y"))):
+    plan = adv.advise(objs, contention, capacities=dict(caps))
+    print(f"\n-- contention: {label}")
+    print(plan.report())
+    print(f"   predicted step total: "
+          f"{plan.total_predicted_ns() / 1e6:.2f} ms")

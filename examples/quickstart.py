@@ -1,0 +1,35 @@
+"""Quickstart: MEMSCOPE-JAX in ~30 lines.
+
+Detect the platform memory tree, run one contention-ladder experiment
+(observed core reads HBM while stressors write it), and print the
+performance curve + Little's-law MLP.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.coordinator import (ActivitySpec, CoreCoordinator,
+                                    ExperimentConfig)
+
+coord = CoreCoordinator(backend="simulate")   # CPU container: modeled v5e
+
+print("== detected memory pools (device tree) ==")
+print(coord.pools.status())
+
+print("\n== experiment: observed (r, hbm, 64M) vs stressors (w, hbm, 64M) ==")
+result = coord.run(ExperimentConfig(
+    main=ActivitySpec("r", "hbm", 64 << 20),
+    stress=ActivitySpec("w", "hbm", 64 << 20),
+    iters=500))
+
+print("stressors  bandwidth GB/s")
+for n, bw in result.bandwidth_curve():
+    print(f"{n:9d}  {bw:10.1f}")
+
+lat = coord.run(ExperimentConfig(
+    main=ActivitySpec("l", "hbm", 64 << 20),
+    stress=ActivitySpec("w", "hbm", 64 << 20)))
+worst_lat = lat.latency_curve()[-1][1]
+worst_bw = result.bandwidth_curve()[-1][1]
+mlp = worst_lat * worst_bw / coord.platform.line_bytes
+print(f"\nLittle's law @ worst case: {worst_lat:.0f} ns x "
+      f"{worst_bw:.0f} GB/s / {coord.platform.line_bytes}B line "
+      f"=> MLP ~= {mlp:.1f}")

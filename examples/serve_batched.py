@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + decode on a reduced gemma3 (local
+sliding-window attention + ring KV caches), with the MEMSCOPE advisor
+choosing the KV-cache pool.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch import serve
+
+sys.exit(serve.main([
+    "--arch", "gemma3-1b", "--reduced",
+    "--batch", "4",
+    "--prompt-len", "24",
+    "--new-tokens", "24",
+    "--kv-placement", "auto",
+]))

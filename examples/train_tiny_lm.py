@@ -1,0 +1,21 @@
+"""End-to-end training example: a reduced qwen2 on synthetic data with
+checkpoint/restart fault drill, microbatching, ZeRO-1 and the MEMSCOPE
+placement advisory — the full driver stack on one CPU.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py
+"""
+import sys
+
+from repro.launch import train
+
+sys.exit(train.main([
+    "--arch", "qwen2-1.5b", "--reduced",
+    "--steps", "60",
+    "--batch", "8", "--seq", "64",
+    "--microbatches", "2",
+    "--lr", "3e-3",
+    "--checkpoint-every", "20",
+    "--ckpt-dir", "/tmp/repro_example_ckpt",
+    "--inject-fault-at", "30",      # chaos drill: recover from step-20 ckpt
+    "--log-every", "15",
+]))

@@ -1,0 +1,1 @@
+"""Post-compile analysis: while-aware HLO cost parser + roofline report."""

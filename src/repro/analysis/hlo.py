@@ -1,0 +1,550 @@
+"""While-aware HLO cost parser.
+
+``compiled.cost_analysis()`` counts each ``while`` body **once**, but our
+models deliberately scan over layer periods / microbatches / q-chunks to
+keep the HLO small (see models/blocks.py) — so XLA's numbers can be off
+by the total trip-count product (e.g. 34 layers x 8 microbatches).  This
+module re-derives the three roofline inputs directly from the
+post-optimization, post-SPMD HLO text:
+
+* ``flops``            — 2*M*N*K per dot (parsed dimension numbers),
+                         multiplied through while-loop trip counts;
+* ``bytes``            — operand+output bytes of every top-level
+                         instruction (fusions count their real in/outs,
+                         not their internals), while-multiplied;
+* ``collective_bytes`` — operand bytes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute
+                         (+ their -start variants), while-multiplied,
+                         with per-op detail retained for diagnosis.
+
+Trip counts are recovered from the canonical XLA while pattern: the
+condition computation compares the induction variable against a
+constant with direction=LT (lax.scan / fori_loop always lower to this).
+Everything is **per device**: the input is the SPMD-partitioned module.
+
+The parser is intentionally text-based: it must work on any backend
+(the CPU container included) and on modules too big to re-trace.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_shape(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """All array shapes in a (possibly tuple) shape string."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((dt, dims))
+    return out
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in parse_shape(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _num_elements(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Instruction / computation model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_text: str        # full result-shape text (may be a tuple)
+    opcode: str
+    operands: List[str]
+    attrs: str             # raw text after the operand list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+    def add(self, ins: Instr) -> None:
+        self.instrs[ins.name] = ins
+        self.order.append(ins.name)
+
+
+# one HLO instruction line:  [ROOT] %name = <shape> opcode(...), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\(.*?\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_NAME_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _split_operands(argtext: str) -> Tuple[List[str], str]:
+    """Split 'a, b, c), attr=...' into operand names + trailing attrs."""
+    depth = 0
+    for i, ch in enumerate(argtext):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                ops_text, attrs = argtext[:i], argtext[i + 1:]
+                break
+            depth -= 1
+    else:
+        ops_text, attrs = argtext, ""
+    ops = []
+    depth = 0
+    cur = ""
+    for ch in ops_text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            ops.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        ops.append(cur.strip())
+    names = []
+    for o in ops:
+        m = re.search(r"%([\w.\-]+)\s*$", o)
+        names.append(m.group(1) if m else o)
+    return names, attrs
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        # computation header: `[ENTRY] %name (params...) -> shape {` at
+        # column 0 (instructions are indented; /*index=N*/ comments inside
+        # tuple params mean we cannot key on '=' absence)
+        if not raw[:1].isspace() and line.endswith("{") and "->" in line:
+            mc = _COMP_NAME_RE.match(line)
+            if mc:
+                cur = Computation(mc.group(1))
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            # end of computation (module braces have no '-> ... {' header)
+            cur = None if cur is not None else cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, shape_text, opcode, rest = mi.groups()
+        operands, attrs = _split_operands(rest)
+        cur.add(Instr(name, shape_text, opcode, operands, attrs, line))
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Trip counts
+# ---------------------------------------------------------------------------
+
+
+def _const_value(ins: Instr) -> Optional[int]:
+    m = re.search(r"constant\((-?\d+)\)", ins.line)
+    return int(m.group(1)) if m else None
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def trip_count(while_ins: Instr, cond: Optional[Computation]) -> Optional[int]:
+    """XLA records `backend_config={"known_trip_count":{"n":N}}` on the
+    while op for counted loops (every lax.scan/fori_loop).  Fall back to
+    the condition-computation `compare(i, constant(N)), direction=LT`
+    pattern (possibly wrapped in a kLoop fusion)."""
+    m = _TRIP_RE.search(while_ins.attrs)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return None
+    for nm in cond.order:
+        ins = cond.instrs[nm]
+        if ins.opcode == "compare" and "direction=LT" not in ins.attrs:
+            continue
+        if ins.opcode not in ("compare", "fusion"):
+            continue
+        for op in ins.operands:
+            src = cond.instrs.get(op)
+            if src is None:
+                continue
+            if src.opcode == "constant":
+                v = _const_value(src)
+                if v is not None:
+                    return v
+            # constant may be forwarded through a copy/convert
+            if src.opcode in ("copy", "convert") and src.operands:
+                src2 = cond.instrs.get(src.operands[0])
+                if src2 is not None and src2.opcode == "constant":
+                    v = _const_value(src2)
+                    if v is not None:
+                        return v
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Cost walk
+# ---------------------------------------------------------------------------
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+#: opcodes that move no HBM bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "rng-get-and-update-state",
+    "custom-call", "opt-barrier", "domain", "add-dependency",
+    "get-dimension-size",
+}
+
+_CALL_ATTRS = ("to_apply", "calls", "body", "condition", "branch_computations",
+               "called_computations")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_per_call: int
+    group_size: int
+    trips: int
+    name: str
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_per_call * self.trips
+
+
+#: ops that only re-arrange or re-type data.  The CPU backend legalizes
+#: bf16 dots by upconverting operands to f32 and copy-transposing them to
+#: the dot's preferred layout; on the TPU target the MXU consumes bf16 in
+#: either layout, so this traffic does not exist.  Fusions made ONLY of
+#: these ops are tallied in ``movement_bytes`` (reported separately as a
+#: host-compile artifact), not in the memory-roofline ``bytes``.
+_MOVEMENT_OPS = {"parameter", "constant", "copy", "convert", "bitcast",
+                 "transpose", "reshape", "tuple", "get-tuple-element"}
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    movement_bytes: float = 0.0      # layout/dtype-only traffic (see above)
+    collectives: List[CollectiveOp] = field(default_factory=list)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+    unknown_trip_whiles: List[str] = field(default_factory=list)
+
+    def collective_summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for c in self.collectives:
+            k = c.kind.replace("-start", "")
+            out[k] = out.get(k, 0.0) + c.total_bytes
+        return out
+
+
+def _group_size(attrs: str) -> int:
+    # iota form: replica_groups=[G,S]<=[N]  -> group size S
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", attrs)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2,3},...}
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = sum(_num_elements(d) for _, d in parse_shape(ins.shape_text))
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    k = 1
+    if m and ins.operands:
+        lhs = comp.instrs.get(ins.operands[0])
+        if lhs is not None:
+            shp = parse_shape(lhs.shape_text)
+            if shp:
+                dims = shp[0][1]
+                for ci in (int(x) for x in m.group(1).split(",") if x):
+                    if ci < len(dims):
+                        k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = sum(_num_elements(d) for _, d in parse_shape(ins.shape_text))
+    k = 1
+    if len(ins.operands) >= 2:
+        rhs = comp.instrs.get(ins.operands[1])
+        if rhs is not None:
+            shp = parse_shape(rhs.shape_text)
+            if shp:
+                # kernel: spatial dims x input feature; output feature excluded
+                dims = shp[0][1]
+                k = _num_elements(dims) // max(1, dims[-1])
+    return 2.0 * out_elems * k
+
+
+def _operand_bytes(ins: Instr, comp: Computation, idx: int) -> int:
+    if idx >= len(ins.operands):
+        return 0
+    src = comp.instrs.get(ins.operands[idx])
+    return shape_bytes(src.shape_text) if src is not None else 0
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> int:
+    """HBM bytes actually moved by one instruction.
+
+    Slice-family ops touch only the slice, not the whole operand — a
+    dynamic-slice of scan-stacked layer params reads ONE layer per trip,
+    and a decode-step dynamic-update-slice writes one token row of the KV
+    cache, not the cache.  Counting full operands there would inflate the
+    memory term by the layer count (and it did, before this existed)."""
+    op = ins.opcode
+    out = shape_bytes(ins.shape_text)
+    if op in ("dynamic-slice", "slice", "gather"):
+        return 2 * out                      # read slice + write result
+    if op == "dynamic-update-slice":
+        upd = _operand_bytes(ins, comp, 1)
+        return 2 * upd                      # read update + write region
+    if op == "scatter":
+        upd = _operand_bytes(ins, comp, 2)
+        return 2 * upd
+    if op in ("broadcast", "iota"):
+        return out                          # reads negligible
+    total = out
+    for i in range(len(ins.operands)):
+        total += _operand_bytes(ins, comp, i)
+    return total
+
+
+def _fusion_root(sub: Computation) -> Optional[Instr]:
+    return sub.instrs.get(sub.order[-1]) if sub.order else None
+
+
+def _fusion_bytes(ins: Instr, comp: Computation, sub: Computation) -> int:
+    """HBM bytes for a fusion, from how each *parameter* is used inside.
+
+    A parameter consumed only through dynamic-slice/slice/gather is read
+    only slice-by-slice (the scan-over-stacked-layers pattern); one that
+    is the target of a root dynamic-update-slice is updated in place
+    (the KV-cache-append pattern) — counting those operands at full size
+    inflates the memory term by the layer count.
+    """
+    # parameter name -> fusion operand position
+    param_pos: Dict[str, int] = {}
+    for nm in sub.order:
+        p = sub.instrs[nm]
+        if p.opcode == "parameter":
+            try:
+                param_pos[nm] = int(p.operands[0]) if p.operands else 0
+            except ValueError:
+                pass
+
+    reads: Dict[str, int] = {nm: 0 for nm in param_pos}
+    full: Dict[str, bool] = {nm: False for nm in param_pos}
+    for nm in sub.order:
+        q = sub.instrs[nm]
+        if q.opcode == "parameter":
+            continue
+        for pos, opnd in enumerate(q.operands):
+            if opnd not in param_pos:
+                continue
+            if q.opcode in ("dynamic-slice", "slice", "gather") and pos == 0:
+                reads[opnd] += shape_bytes(q.shape_text)
+            elif q.opcode == "dynamic-update-slice" and pos == 0:
+                pass                      # in-place target: write-counted below
+            else:
+                full[opnd] = True
+
+    total = 0
+    for nm, pos in param_pos.items():
+        if full[nm]:
+            total += _operand_bytes(ins, comp, pos)
+        else:
+            total += reads[nm]
+
+    # writes: root DUS writes the update region, anything else the output.
+    # We look THROUGH convert/copy/bitcast roots: the CPU backend
+    # legalizes bf16 dots via f32, hoisting a whole-buffer convert out of
+    # scan loops and re-converting the full stack per iteration — on the
+    # TPU target (native bf16 MXU) the convert does not exist, so
+    # counting it would charge the roofline for a host-only artifact.
+    root = _fusion_root(sub)
+    for _ in range(3):
+        if root is not None and root.opcode in ("convert", "copy",
+                                                "bitcast") and root.operands:
+            root = sub.instrs.get(root.operands[0])
+        else:
+            break
+    if root is not None and root.opcode == "dynamic-update-slice":
+        upd = 0
+        if len(root.operands) > 1 and root.operands[1] in sub.instrs:
+            upd = shape_bytes(sub.instrs[root.operands[1]].shape_text)
+        total += 2 * upd                  # read update + write region
+    else:
+        total += shape_bytes(ins.shape_text)
+    return total
+
+
+def _fusion_dot_flops(comp: Computation, comps: Dict[str, Computation]) -> float:
+    """dots/convs inside a fused computation still execute — count them."""
+    fl = 0.0
+    for nm in comp.order:
+        ins = comp.instrs[nm]
+        if ins.opcode == "dot":
+            fl += _dot_flops(ins, comp)
+        elif ins.opcode == "convolution":
+            fl += _conv_flops(ins, comp)
+        elif ins.opcode == "fusion":
+            sub = _called(ins, ("calls",), comps)
+            if sub:
+                fl += _fusion_dot_flops(sub[0], comps)
+    return fl
+
+
+def _called(ins: Instr, keys, comps: Dict[str, Computation]
+            ) -> List[Computation]:
+    out = []
+    for key in keys:
+        for m in re.finditer(key + r"=%?([\w.\-]+)", ins.attrs):
+            c = comps.get(m.group(1))
+            if c is not None:
+                out.append(c)
+        m = re.search(key + r"=\{([^}]*)\}", ins.attrs)
+        if m:
+            for nm in m.group(1).split(","):
+                c = comps.get(nm.strip().lstrip("%"))
+                if c is not None:
+                    out.append(c)
+    return out
+
+
+def analyze(hlo_text: str, entry: Optional[str] = None) -> HloCost:
+    comps = parse_module(hlo_text)
+    if not comps:
+        return HloCost()
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+        entry = m.group(1) if m else next(iter(comps))
+    cost = HloCost()
+    _walk(comps[entry], comps, 1, cost, seen=set())
+    return cost
+
+
+def _walk(comp: Computation, comps: Dict[str, Computation], mult: int,
+          cost: HloCost, seen: set) -> None:
+    for nm in comp.order:
+        ins = comp.instrs[nm]
+        op = ins.opcode
+        if op == "while":
+            bodies = _called(ins, ("body",), comps)
+            conds = _called(ins, ("condition",), comps)
+            trips = trip_count(ins, conds[0] if conds else None)
+            if trips is None:
+                trips = 1
+                cost.unknown_trip_whiles.append(ins.name)
+            cost.while_trips[ins.name] = trips
+            if bodies:
+                _walk(bodies[0], comps, mult * trips, cost, seen)
+            if conds:
+                _walk(conds[0], comps, mult * trips, cost, seen)
+            continue
+        if op == "conditional":
+            branches = _called(ins, ("branch_computations",
+                                     "true_computation",
+                                     "false_computation"), comps)
+            for b in branches:       # upper bound: all branches counted once
+                _walk(b, comps, mult, cost, seen)
+            continue
+        if op in ("call", "async-start"):
+            for c in _called(ins, ("to_apply", "called_computations",
+                                   "calls"), comps):
+                _walk(c, comps, mult, cost, seen)
+            continue
+        base = op.replace("-start", "")
+        if base in COLLECTIVES:
+            nbytes = 0
+            for o in ins.operands:
+                src = comp.instrs.get(o)
+                if src is not None:
+                    nbytes += shape_bytes(src.shape_text)
+            if nbytes == 0:          # operand defined elsewhere: use result
+                nbytes = shape_bytes(ins.shape_text)
+            if op.endswith("-done"):
+                continue
+            cop = CollectiveOp(kind=base, bytes_per_call=nbytes,
+                               group_size=_group_size(ins.attrs),
+                               trips=mult, name=ins.name)
+            cost.collectives.append(cop)
+            cost.collective_bytes += cop.total_bytes
+            continue
+        if op in _FREE_OPS or op.endswith("-done"):
+            continue
+        if op == "fusion":
+            subs = _called(ins, ("calls",), comps)
+            if subs:
+                cost.flops += mult * _fusion_dot_flops(subs[0], comps)
+                b = mult * _fusion_bytes(ins, comp, subs[0])
+                if all(q.opcode in _MOVEMENT_OPS
+                       for q in subs[0].instrs.values()):
+                    cost.movement_bytes += b
+                else:
+                    cost.bytes += b
+            else:
+                cost.bytes += mult * _instr_bytes(ins, comp)
+            continue
+        if op == "dot":
+            cost.flops += mult * _dot_flops(ins, comp)
+            cost.bytes += mult * _instr_bytes(ins, comp)
+            continue
+        if op == "convolution":
+            cost.flops += mult * _conv_flops(ins, comp)
+            cost.bytes += mult * _instr_bytes(ins, comp)
+            continue
+        if op in ("transpose", "convert", "reshape"):
+            cost.movement_bytes += mult * _instr_bytes(ins, comp)
+            continue
+        # generic data-moving op (copy, reduce, select, ...)
+        cost.bytes += mult * _instr_bytes(ins, comp)

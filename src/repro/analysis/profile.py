@@ -1,0 +1,124 @@
+"""Dry-run profiler: attribute parsed bytes/flops/collectives to model
+code via HLO ``op_name`` metadata.
+
+This is the §Perf loop's "profile": for a compiled cell it reports the
+top-N instructions by (while-multiplied) bytes, grouped by the JAX
+op_name path (e.g. ``jit(step)/while/body/.../bqkgh,bskh->bkgqs``), so a
+hypothesis can name the exact model-code line to change.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import hlo as H
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _op_name(ins: H.Instr) -> str:
+    m = _OPNAME_RE.search(ins.line)
+    if not m:
+        return f"<{ins.opcode}>"
+    name = m.group(1)
+    # strip jit wrapper and trailing uniquifiers for grouping
+    name = re.sub(r"^jit\([^)]*\)/", "", name)
+    return name
+
+
+def profile(hlo_text: str, top: int = 25) -> Dict:
+    comps = H.parse_module(hlo_text)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else next(iter(comps))
+
+    by_name_bytes: Dict[str, float] = defaultdict(float)
+    by_name_flops: Dict[str, float] = defaultdict(float)
+    coll_rows: List[Tuple[float, str, str]] = []
+
+    def walk(comp: H.Computation, mult: int):
+        for nm in comp.order:
+            ins = comp.instrs[nm]
+            op = ins.opcode
+            if op == "while":
+                bodies = H._called(ins, ("body",), comps)
+                conds = H._called(ins, ("condition",), comps)
+                trips = H.trip_count(ins, conds[0] if conds else None) or 1
+                if bodies:
+                    walk(bodies[0], mult * trips)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for c in H._called(ins, ("to_apply", "called_computations",
+                                          "calls", "branch_computations",
+                                          "true_computation",
+                                          "false_computation"), comps):
+                    walk(c, mult)
+                continue
+            base = op.replace("-start", "")
+            if base in H.COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                nbytes = 0
+                for o in ins.operands:
+                    src = comp.instrs.get(o)
+                    if src is not None:
+                        nbytes += H.shape_bytes(src.shape_text)
+                nbytes = nbytes or H.shape_bytes(ins.shape_text)
+                coll_rows.append((float(nbytes * mult), base, _op_name(ins)))
+                continue
+            if op in H._FREE_OPS or op.endswith("-done"):
+                continue
+            if op == "fusion":
+                subs = H._called(ins, ("calls",), comps)
+                b = H._fusion_bytes(ins, comp, subs[0]) if subs \
+                    else H._instr_bytes(ins, comp)
+                f = H._fusion_dot_flops(subs[0], comps) if subs else 0.0
+            elif op == "dot":
+                b = H._instr_bytes(ins, comp)
+                f = H._dot_flops(ins, comp)
+            else:
+                b = H._instr_bytes(ins, comp)
+                f = 0.0
+            key = _op_name(ins)
+            by_name_bytes[key] += float(b * mult)
+            by_name_flops[key] += float(f * mult)
+
+    walk(comps[entry], 1)
+    coll_rows.sort(reverse=True)
+    return {
+        "bytes_by_site": sorted(by_name_bytes.items(),
+                                key=lambda kv: -kv[1])[:top],
+        "flops_by_site": sorted(by_name_flops.items(),
+                                key=lambda kv: -kv[1])[:top],
+        "collectives": coll_rows[:top],
+        "total_bytes": sum(by_name_bytes.values()),
+        "total_flops": sum(by_name_flops.values()),
+        "total_collective_bytes": sum(r[0] for r in coll_rows),
+    }
+
+
+def render(p: Dict, top: int = 20) -> str:
+    out = []
+    out.append(f"total: {p['total_flops']:.3e} flops, "
+               f"{p['total_bytes'] / 2**30:.2f} GiB moved, "
+               f"{p['total_collective_bytes'] / 2**30:.2f} GiB collective")
+    out.append("\n-- top sites by bytes --")
+    for name, b in p["bytes_by_site"][:top]:
+        out.append(f"{b / 2**30:9.2f} GiB  {name[:110]}")
+    out.append("\n-- top sites by flops --")
+    for name, f in p["flops_by_site"][:top]:
+        out.append(f"{f:9.3e}      {name[:110]}")
+    out.append("\n-- top collectives --")
+    for b, kind, name in p["collectives"][:top]:
+        out.append(f"{b / 2**30:9.3f} GiB  {kind:18s} {name[:90]}")
+    return "\n".join(out)
+
+
+def profile_cell(arch: str, shape: str, *, multi_pod: bool = False,
+                 top: int = 20, train_overrides: Optional[dict] = None
+                 ) -> str:
+    """Lower+compile one cell and render its profile (dry-run only)."""
+    from repro.launch.dryrun import lower_cell
+    lowered, compiled, meta = lower_cell(arch, shape, multi_pod=multi_pod,
+                                         train_overrides=train_overrides)
+    return render(profile(compiled.as_text(), top=top), top=top)

@@ -1,0 +1,164 @@
+"""Roofline terms from a compiled dry-run (per DESIGN.md §7).
+
+Three terms, all **seconds per step, per device** (the SPMD program is
+identical on every device, so per-device == per-step wall time at the
+modeled peak):
+
+  compute    = device_FLOPs / peak_FLOPs
+  memory     = device_bytes / HBM_bw
+  collective = device_collective_bytes / ICI_bw
+
+Inputs are the while-aware HLO parse (``repro.analysis.hlo``) of the
+post-SPMD module — NOT ``cost_analysis()``, which undercounts scanned
+layers (the whole point of the parser).  ``model_flops_*`` provide the
+"useful work" yardstick: MODEL_FLOPS/HLO_FLOPs < 1 exposes remat
+recompute and redundancy; > 1 means the compiler found shortcuts (or the
+parser missed something — investigate either way).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.analysis.hlo import HloCost
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per chip) — the assignment's numbers.
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (2D torus: ~2 usable
+N_ICI_LINKS = 2              # concurrent links per chip for ring phases)
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device program cost (while-aware parse)
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    # usefulness
+    model_flops: float = 0.0          # global, analytic
+    useful_ratio: float = 0.0         # model_flops / (hlo_flops * devices)
+    # memory picture
+    bytes_per_device: int = 0         # allocation (args+temp+out)
+    # bookkeeping
+    unknown_trip_whiles: int = 0
+    note: str = ""
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (perfect overlap of the three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: 1.0 = MXU-saturated with zero
+        overhead.  The score we hillclimb."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_useful = (self.model_flops / max(self.n_devices, 1)) / PEAK_FLOPS
+        return t_useful / self.t_bound
+
+    def row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+                f"C={self.t_compute * 1e3:9.2f}ms "
+                f"M={self.t_memory * 1e3:9.2f}ms "
+                f"X={self.t_collective * 1e3:9.2f}ms "
+                f"-> {self.bottleneck:10s} "
+                f"useful={self.useful_ratio:6.3f} "
+                f"roofline={self.roofline_fraction:6.3f}")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N·D (train) or 2·N_active·D (one forward token batch)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def compute_terms(
+    cost: HloCost,
+    *,
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh_desc: str,
+    n_devices: int,
+    bytes_per_device: int = 0,
+    note: str = "",
+) -> RooflineTerms:
+    mf = model_flops(cfg, shape)
+    total_hlo_flops = cost.flops * n_devices
+    t = RooflineTerms(
+        arch=cfg.name, shape=shape.name, mesh=mesh_desc,
+        n_devices=n_devices,
+        hlo_flops=cost.flops,
+        hlo_bytes=cost.bytes,
+        collective_bytes=cost.collective_bytes,
+        collective_by_kind=cost.collective_summary(),
+        t_compute=cost.flops / PEAK_FLOPS,
+        t_memory=cost.bytes / HBM_BW,
+        t_collective=cost.collective_bytes / (ICI_BW * N_ICI_LINKS),
+        model_flops=mf,
+        useful_ratio=(mf / total_hlo_flops) if total_hlo_flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        unknown_trip_whiles=len(cost.unknown_trip_whiles),
+        note=note,
+    )
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Persistence for the experiment log
+# ---------------------------------------------------------------------------
+
+
+def save_terms(terms: RooflineTerms, path: str) -> None:
+    with open(path, "w") as f:
+        d = asdict(terms)
+        d["bottleneck"] = terms.bottleneck
+        d["t_bound"] = terms.t_bound
+        d["roofline_fraction"] = terms.roofline_fraction
+        json.dump(d, f, indent=1)
+
+
+def load_terms(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(rows: List[dict]) -> str:
+    """EXPERIMENTS.md §Roofline table from saved dicts."""
+    hdr = (f"| arch | shape | mesh | compute (ms) | memory (ms) | "
+           f"collective (ms) | bottleneck | MODEL/HLO | roofline |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for d in rows:
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['t_compute'] * 1e3:.2f} | {d['t_memory'] * 1e3:.2f} "
+            f"| {d['t_collective'] * 1e3:.2f} | {d['bottleneck']} "
+            f"| {d['useful_ratio']:.3f} | {d['roofline_fraction']:.3f} |")
+    return "\n".join(lines)

@@ -1,0 +1,157 @@
+"""Mesh-agnostic checkpointing: manifest + per-leaf arrays, atomic, async.
+
+Fault-tolerance contract (DESIGN.md §6):
+
+* **mesh-agnostic**: the manifest records only *global* shapes/dtypes and
+  the pytree structure; leaves are stored as full (gathered) arrays, so a
+  checkpoint written on a 256-chip mesh restores onto 8 chips or 512 —
+  the elastic-rescale path.
+* **atomic**: writes go to ``step_<n>.tmp/`` and are renamed into place
+  only after every leaf + manifest is fsynced — a killed job can never
+  leave a half-checkpoint that restore would pick up.
+* **async**: ``save_async`` snapshots device arrays to host, then writes
+  on a background thread — the train loop blocks only for the
+  device->host copy, not the filesystem.
+* **keep-N GC** with the newest checkpoints retained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for kp, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        items.append((path, leaf))
+    return items, tdef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, MANIFEST)):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ------------------------------------------------------------------
+    def save(self, state, step: int) -> None:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._write(host, step)
+
+    def save_async(self, state, step: int) -> None:
+        self.wait()                       # one in flight at a time
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                self._write(host, step)
+            except BaseException as e:    # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, host_state, step: int) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        items, _ = _flatten(host_state)
+        manifest = {"step": step, "leaves": {}}
+        for path, leaf in items:
+            fname = path.replace("/", ".") + ".npy"
+            arr = np.asarray(leaf)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"][path] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)             # the atomic commit point
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def restore(self, target, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of `target` (pytree of arrays or
+        ShapeDtypeStructs).  `shardings`: optional matching pytree of
+        NamedShardings — this is where elastic re-meshing happens: the
+        same checkpoint lands on whatever mesh the shardings describe."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, MANIFEST)) as f:
+            manifest = json.load(f)
+
+        items, tdef = _flatten(target)
+        shard_items = None
+        if shardings is not None:
+            shard_items, _ = _flatten(shardings)
+        leaves = []
+        for i, (path, tgt) in enumerate(items):
+            meta = manifest["leaves"].get(path)
+            if meta is None:
+                raise KeyError(
+                    f"checkpoint step {step} missing leaf {path!r}")
+            arr = np.load(os.path.join(d, meta["file"]))
+            if list(arr.shape) != list(tgt.shape):
+                raise ValueError(
+                    f"leaf {path}: checkpoint shape {arr.shape} != "
+                    f"target {tgt.shape}")
+            if shard_items is not None:
+                arr = jax.device_put(arr, shard_items[i][1])
+            else:
+                arr = jax.device_put(arr.astype(tgt.dtype))
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(tdef, leaves)

@@ -1,0 +1,147 @@
+"""Characterization driver — performance curves + Little's-law MLP.
+
+Runs the full cross-product of scenario ladders (obs pool x obs strategy
+x stress pool x stress strategy), persists the resulting *performance
+curves* (the right-hand side of the paper's Fig. 1), and derives the
+memory-level parallelism of each module via Little's law
+(Tables II/III):  MLP = latency[ns/Tx] x bandwidth[Tx/ns].
+
+The resulting :class:`CurveDB` is the contract consumed by the
+:mod:`repro.core.placement` advisor.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.coordinator import (ActivitySpec, CoreCoordinator,
+                                    ExperimentConfig)
+from repro.core.devicetree import Platform
+
+Key = Tuple[str, str, str, str]   # (obs_pool, obs_strat, stress_pool, stress_strat)
+
+
+@dataclass
+class CurvePoint:
+    n_stressors: int
+    bandwidth_gbps: float
+    latency_ns: float
+
+
+@dataclass
+class CurveDB:
+    platform: str
+    curves: Dict[str, List[CurvePoint]] = field(default_factory=dict)
+
+    @staticmethod
+    def key(obs_pool: str, obs_strat: str, stress_pool: str,
+            stress_strat: str) -> str:
+        return f"{obs_pool}:{obs_strat}|{stress_pool}:{stress_strat}"
+
+    def get(self, obs_pool: str, obs_strat: str, stress_pool: str,
+            stress_strat: str) -> List[CurvePoint]:
+        return self.curves[self.key(obs_pool, obs_strat, stress_pool,
+                                    stress_strat)]
+
+    # -- the numbers placement cares about --------------------------------
+    def effective_bw(self, pool: str, n_stressors: int,
+                     stress_pool: Optional[str] = None,
+                     strat: str = "r", stress_strat: str = "w") -> float:
+        pts = self.get(pool, strat, stress_pool or pool, stress_strat)
+        k = min(n_stressors, len(pts) - 1)
+        return pts[k].bandwidth_gbps
+
+    def effective_lat(self, pool: str, n_stressors: int,
+                      stress_pool: Optional[str] = None,
+                      stress_strat: str = "w") -> float:
+        pts = self.get(pool, "l", stress_pool or pool, stress_strat)
+        k = min(n_stressors, len(pts) - 1)
+        return pts[k].latency_ns
+
+    # -- Little's law -------------------------------------------------------
+    def mlp(self, pool: str, line_bytes: int,
+            stress_strat: str = "r") -> float:
+        """Avg MLP = Avg latency [ns/Tx] x Avg bandwidth [Tx/ns], computed
+        at the worst-case scenario like Tables II/III."""
+        lat = self.get(pool, "l", pool, stress_strat)[-1].latency_ns
+        bw = self.get(pool, "r", pool, stress_strat)[-1].bandwidth_gbps
+        return lat * (bw / line_bytes)
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"platform": self.platform,
+                       "curves": {k: [asdict(p) for p in v]
+                                  for k, v in self.curves.items()}}, f,
+                      indent=1)
+
+    @staticmethod
+    def load(path: str) -> "CurveDB":
+        with open(path) as f:
+            d = json.load(f)
+        return CurveDB(platform=d["platform"],
+                       curves={k: [CurvePoint(**p) for p in v]
+                               for k, v in d["curves"].items()})
+
+
+DEFAULT_BW_STRATS = ("r", "w")
+DEFAULT_STRESS_STRATS = ("r", "w", "y")
+
+
+def characterize(
+    coord: CoreCoordinator,
+    *,
+    pools: Optional[Iterable[str]] = None,
+    # default above the VMEM/cache budget: the curves must characterize
+    # the MODULE, not the cache in front of it (cache-fit behaviour is
+    # the fig5 buffer sweep's subject instead)
+    buffer_bytes: int = 256 << 20,
+    obs_strategies: Tuple[str, ...] = DEFAULT_BW_STRATS + ("l",),
+    stress_strategies: Tuple[str, ...] = DEFAULT_STRESS_STRATS,
+    iters: int = 500,
+) -> CurveDB:
+    """Run the full ladder cross-product and build the curve database."""
+    platform = coord.platform
+    pool_names = list(pools) if pools is not None else [
+        p.node.name for p in coord.pools.pools()
+        if p.node.kind != "vmem"]      # vmem probed via small buffers
+    db = CurveDB(platform=platform.name)
+    for obs_pool in pool_names:
+        cap = coord.pools.pool(obs_pool).node.size_bytes
+        nbytes = min(buffer_bytes, cap // 2)
+        for obs_strat in obs_strategies:
+            for stress_pool in pool_names:
+                s_cap = coord.pools.pool(stress_pool).node.size_bytes
+                s_bytes = min(buffer_bytes, s_cap // 2)
+                for stress_strat in stress_strategies:
+                    res = coord.run(ExperimentConfig(
+                        main=ActivitySpec(obs_strat, obs_pool, nbytes),
+                        stress=ActivitySpec(stress_strat, stress_pool,
+                                            s_bytes),
+                        iters=iters))
+                    pts = [CurvePoint(s.n_stressors,
+                                      s.modeled_bw_gbps,
+                                      s.modeled_lat_ns)
+                           for s in res.scenarios]
+                    db.curves[CurveDB.key(obs_pool, obs_strat,
+                                          stress_pool, stress_strat)] = pts
+    return db
+
+
+def mlp_table(db: CurveDB, platform: Platform) -> str:
+    """Tables II/III, for every characterized module."""
+    lines = ["pool      pairing        lat(ns/Tx)  BW(Tx/ns)   MLP"]
+    pools = sorted({k.split(":")[0] for k in db.curves})
+    for pool in pools:
+        for stress in ("r", "w"):
+            try:
+                lat = db.get(pool, "l", pool, stress)[-1].latency_ns
+                bw = db.get(pool, "r", pool, stress)[-1].bandwidth_gbps
+            except KeyError:
+                continue
+            tx = bw / platform.line_bytes
+            lines.append(
+                f"{pool:9s} (l,{stress})x(r,{stress})  {lat:10.2f}"
+                f"  {tx:9.4f}  {lat * tx:5.2f}")
+    return "\n".join(lines)

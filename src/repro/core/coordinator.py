@@ -1,0 +1,273 @@
+"""Core Coordinator — scenario ladders with the barrier "sandwich".
+
+Mirrors the paper's §III-D: an *Experiment Instantiator* validates the
+configuration and binds workloads; a *Multi-Engine Synchronizer* enforces
+the four measurement invariants.  On a TPU slice the synchronizer is an
+SPMD program over a 1-D "engine" mesh where engine 0 runs the main
+activity and engines 1..k the stress activity — the measured region is
+sandwiched between two all-reduce barriers, the collective analog of the
+paper's spin-lock sandwich:
+
+  (1) measurement starts only after every engine passed the start
+      barrier (psum #1);
+  (2) the scenario is stable: one fused SPMD program, engines run
+      lockstep until their activity completes;
+  (3) the stop barrier (psum #2) completes only after every engine's
+      activity finished — measurement closes before anything is torn
+      down;
+  (4) the next scenario is a new program dispatch, which cannot begin
+      until the previous one fully retired (host blocks on the result).
+
+Backends:
+  * ``simulate``  — closed queueing network (repro.core.simulate); full
+                    contention ladders at modeled v5e scale.
+  * ``interpret`` — really executes the observed activity's Pallas
+                    kernels (interpret mode, this container's CPU);
+                    contention scenarios beyond 0 stressors fall back to
+                    the model (single real device).
+  * ``tpu``       — same SPMD program, real hardware (not available in
+                    this container; code path kept identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulate as sim
+from repro.core.devicetree import Platform, detect_platform
+from repro.core.pools import MemoryPool, PoolManager
+from repro.core.workloads import Workload, WorkloadResult, make_workload
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ActivitySpec:
+    strategy: str              # Table-I letter
+    pool: str                  # pool name ("hbm", "host", ...)
+    buffer_bytes: int
+
+    def describe(self) -> str:
+        return f"({self.strategy},{self.pool},{self.buffer_bytes >> 10}K)"
+
+
+@dataclass(frozen=True)
+class ExperimentConfig:
+    main: ActivitySpec
+    stress: ActivitySpec
+    iters: int = 500
+    scenarios: Optional[int] = None      # default: platform.n_engines
+    counters: Tuple[str, ...] = ("WALL_NS", "HLO_FLOPS", "HLO_BYTES",
+                                 "TRANSACTIONS", "NS_PER_TX")
+
+
+@dataclass
+class ScenarioResult:
+    n_stressors: int
+    main: WorkloadResult
+    modeled_bw_gbps: float = 0.0
+    modeled_lat_ns: float = 0.0
+    stress_bw_gbps: float = 0.0
+
+
+@dataclass
+class ExperimentResult:
+    config: ExperimentConfig
+    scenarios: List[ScenarioResult] = field(default_factory=list)
+
+    def bandwidth_curve(self) -> List[Tuple[int, float]]:
+        return [(s.n_stressors,
+                 s.modeled_bw_gbps or s.main.bandwidth_gbps)
+                for s in self.scenarios]
+
+    def latency_curve(self) -> List[Tuple[int, float]]:
+        return [(s.n_stressors, s.modeled_lat_ns or s.main.latency_ns)
+                for s in self.scenarios]
+
+
+class ValidationError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+
+
+class CoreCoordinator:
+    def __init__(self, pool_mgr: Optional[PoolManager] = None,
+                 platform: Optional[Platform] = None,
+                 backend: str = "auto"):
+        self.platform = platform or detect_platform()
+        self.pools = pool_mgr or PoolManager(self.platform)
+        if backend == "auto":
+            backend = "tpu" if jax.default_backend() == "tpu" else "simulate"
+        assert backend in ("simulate", "interpret", "tpu"), backend
+        self.backend = backend
+
+    # -- Experiment Instantiator ----------------------------------------
+    def validate(self, cfg: ExperimentConfig) -> None:
+        from repro.core.workloads import _REGISTRY
+        for which, spec in (("main", cfg.main), ("stress", cfg.stress)):
+            if spec.strategy not in _REGISTRY:
+                raise ValidationError(
+                    f"{which}: unknown strategy {spec.strategy!r}")
+            pool = self.pools.pool(spec.pool)   # raises PoolError if absent
+            if spec.strategy != "i" and spec.buffer_bytes > pool.available:
+                raise ValidationError(
+                    f"{which}: buffer {spec.buffer_bytes}B exceeds free "
+                    f"space in pool {spec.pool} ({pool.available}B)")
+        if cfg.iters <= 0:
+            raise ValidationError("iters must be positive")
+        n = cfg.scenarios if cfg.scenarios is not None \
+            else self.platform.n_engines
+        if not 1 <= n <= self.platform.n_engines:
+            raise ValidationError(
+                f"scenarios must be in [1, {self.platform.n_engines}]")
+
+    # -- scenario ladder ----------------------------------------------------
+    def run(self, cfg: ExperimentConfig) -> ExperimentResult:
+        self.validate(cfg)
+        n_scen = cfg.scenarios if cfg.scenarios is not None \
+            else self.platform.n_engines
+        result = ExperimentResult(cfg)
+
+        main_pool = self.pools.pool(cfg.main.pool)
+        stress_pool = self.pools.pool(cfg.stress.pool)
+
+        measured: Optional[WorkloadResult] = None
+        if self.backend in ("interpret", "tpu"):
+            wl = make_workload(cfg.main.strategy, main_pool,
+                               cfg.main.buffer_bytes)
+            try:
+                measured = wl.run(cfg.iters)
+            finally:
+                wl.release()
+
+        for k in range(n_scen):
+            modeled = self._model_scenario(cfg, main_pool, stress_pool, k)  # noqa: E501
+            main_res = measured if measured is not None else WorkloadResult(
+                cfg.main.strategy, cfg.main.pool, cfg.main.buffer_bytes,
+                cfg.iters, 0, 0.0, 0)
+            result.scenarios.append(ScenarioResult(
+                n_stressors=k,
+                main=main_res,
+                modeled_bw_gbps=modeled[0],
+                modeled_lat_ns=modeled[1],
+                stress_bw_gbps=modeled[2],
+            ))
+        # per-scenario/experiment teardown (paper §III-A step 6) is done by
+        # wl.release() above; pools stay clean for the next experiment.
+        return result
+
+    def _model_scenario(self, cfg: ExperimentConfig, main_pool: MemoryPool,
+                        stress_pool: MemoryPool,
+                        k: int) -> Tuple[float, float, float]:
+        obs_node = self._model_node(cfg.main, main_pool,
+                                    other=cfg.stress, other_engines=k)
+        stress_node = self._model_node(cfg.stress, stress_pool,
+                                       other=cfg.main, other_engines=1)
+        classes = [sim.ActivityClass("obs", obs_node, cfg.main.strategy, 1)]
+        if k and cfg.stress.strategy != "i":
+            classes.append(sim.ActivityClass(
+                "stress", stress_node, cfg.stress.strategy, k))
+        res = sim.simulate_scenario(self.platform, classes)
+        obs = res.get("obs")
+        stress = res.get("stress")
+        return (obs.bw_gbps if obs else 0.0,
+                obs.lat_ns if obs else 0.0,
+                stress.bw_gbps if stress else 0.0)
+
+    # -- cache semantics ------------------------------------------------------
+    _CACHEABLE = ("r", "w", "l")
+
+    def _model_node(self, spec: ActivitySpec, pool: MemoryPool,
+                    other: Optional[ActivitySpec] = None,
+                    other_engines: int = 0):
+        """Where does this activity's traffic actually land?
+
+        Cacheable strategies on small buffers hit the platform's cache
+        (transparent shared L2 on the ZCU102; software-managed private
+        VMEM residency on v5e) — UNLESS, for a *shared* cache, the
+        combined cacheable footprint exceeds it (inter-engine evictions,
+        the red case of Fig. 12)."""
+        node = pool.node
+        if node.kind in ("vmem", "cache"):
+            return node
+        if spec.strategy not in self._CACHEABLE:
+            return node
+
+        cache_name = getattr(self.platform, "cache_node", None)
+        if cache_name:                     # transparent shared cache
+            cache = self.platform.memories[cache_name]
+            if spec.buffer_bytes > cache.size_bytes:
+                return node
+            footprint = spec.buffer_bytes
+            if other is not None and other.strategy in self._CACHEABLE:
+                other_pool = self.pools.pool(other.pool)
+                if other_pool.node.kind not in ("vmem", "cache"):
+                    footprint += other_engines * other.buffer_bytes
+            return cache if footprint <= cache.size_bytes else node
+
+        # v5e: private VMEM residency, no cross-engine eviction
+        from repro.core.workloads import models_as_vmem
+        vmem = self.platform.memories.get("vmem")
+        if vmem is not None and models_as_vmem(spec.buffer_bytes):
+            return vmem
+        return node
+
+    # -- ladder sweep used by characterize.py ------------------------------
+    def ladder(self, main: ActivitySpec, stress: ActivitySpec,
+               iters: int = 500) -> ExperimentResult:
+        return self.run(ExperimentConfig(main=main, stress=stress,
+                                         iters=iters))
+
+
+# ---------------------------------------------------------------------------
+# The SPMD scenario program (the spin-lock sandwich, collective edition).
+# Built for any 1-D mesh of engines; dry-runnable on host devices and
+# executable unchanged on a real slice.
+# ---------------------------------------------------------------------------
+
+
+def build_scenario_program(n_engines: int, n_stressors: int,
+                           main_fn, stress_fn, idle_fn):
+    """Returns f(main_x, stress_x) -> (main_out, barrier) running under
+    ``shard_map`` over an ("engine",) mesh: engine 0 = observed, engines
+    1..n_stressors = stress, rest idle.  The measured region is fenced by
+    two psum barriers (invariants 1-4 above)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    shard_map = jax.shard_map
+
+    devs = jax.devices()[:n_engines]
+    mesh = Mesh(np.array(devs), ("engine",))
+
+    def per_engine(main_x, stress_x):
+        eng = jax.lax.axis_index("engine")
+        # barrier #1: every engine signals ready before measurement starts
+        ready = jax.lax.psum(jnp.ones((), jnp.int32), "engine")
+
+        def run_main(_):
+            return main_fn(main_x)
+
+        def run_stress(_):
+            return stress_fn(stress_x)
+
+        def run_idle(_):
+            return idle_fn(stress_x)
+
+        branch = jnp.where(eng == 0, 0,
+                           jnp.where(eng <= n_stressors, 1, 2))
+        out = jax.lax.switch(branch, [run_main, run_stress, run_idle],
+                             operand=None)
+        # barrier #2: measurement closes only after every engine finished
+        done = jax.lax.psum(jnp.ones((), jnp.int32), "engine")
+        return out, ready + done
+
+    f = shard_map(per_engine, mesh=mesh,
+                  in_specs=(P("engine"), P("engine")),
+                  out_specs=(P("engine"), P()))
+    return mesh, f

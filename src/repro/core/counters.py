@@ -1,0 +1,98 @@
+"""Performance-counter analog — AOT program analysis + wall-clock timers.
+
+MEMSCOPE samples ARMv8 PMU events around the measured region.  A TPU
+exposes no user PMU, but an AOT-compiled XLA program is *fully analysable
+before it runs*: ``cost_analysis()`` gives exact FLOPs and bytes touched,
+``memory_analysis()`` gives the allocation picture, and the lowered HLO
+names every collective.  Together with wall-clock sandwich timing these
+cover the paper's Table-IV methodology (cycles, mem accesses, cache
+refills -> flops, HBM bytes, per-access cycles).
+
+Six "counters" per activity, mirroring the 6-counter/core ARM PMU limit.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MAX_COUNTERS = 6   # ARM PMU exposes 6 programmable counters per core
+
+#: available events (the pmevtyper analog)
+EVENTS = (
+    "WALL_NS",          # measured region wall time
+    "HLO_FLOPS",        # cost_analysis flops
+    "HLO_BYTES",        # cost_analysis bytes accessed
+    "TRANSACTIONS",     # bytes / line_bytes
+    "NS_PER_TX",        # wall / transactions
+    "PEAK_MEMORY",      # memory_analysis temp+arg bytes
+)
+
+
+@dataclass
+class CounterSample:
+    events: Dict[str, float] = field(default_factory=dict)
+
+    def __getitem__(self, k: str) -> float:
+        return self.events[k]
+
+    def as_row(self) -> str:
+        return " ".join(f"{k}={v:.4g}" for k, v in self.events.items())
+
+
+def select_events(names: Tuple[str, ...]) -> Tuple[str, ...]:
+    bad = [n for n in names if n not in EVENTS]
+    if bad:
+        raise KeyError(f"unknown events {bad}; available {EVENTS}")
+    if len(names) > MAX_COUNTERS:
+        raise ValueError(
+            f"at most {MAX_COUNTERS} counters per core (got {len(names)})")
+    return names
+
+
+def cost_of(fn: Callable, *args, **kw) -> Dict[str, float]:
+    """AOT cost analysis of fn(*args) without executing it."""
+    lowered = jax.jit(fn).lower(*args, **kw)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0) +
+            getattr(mem, "argument_size_in_bytes", 0) +
+            getattr(mem, "output_size_in_bytes", 0))
+    return {"HLO_FLOPS": flops, "HLO_BYTES": byts, "PEAK_MEMORY": peak}
+
+
+def sample(fn: Callable, *args, iters: int = 10, line_bytes: int = 512,
+           events: Tuple[str, ...] = EVENTS[:MAX_COUNTERS],
+           **kw) -> CounterSample:
+    """Run fn under the selected counters (compile excluded from timing)."""
+    events = select_events(tuple(events))
+    static = cost_of(fn, *args, **kw)
+    jfn = jax.jit(fn)
+    jfn(*args, **kw).block_until_ready()
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        out = jfn(*args, **kw)
+    jax.tree.map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    wall = (time.perf_counter_ns() - t0) / iters
+
+    tx = static["HLO_BYTES"] / line_bytes
+    all_events = {
+        "WALL_NS": wall,
+        "HLO_FLOPS": static["HLO_FLOPS"],
+        "HLO_BYTES": static["HLO_BYTES"],
+        "TRANSACTIONS": tx,
+        "NS_PER_TX": wall / tx if tx else 0.0,
+        "PEAK_MEMORY": static["PEAK_MEMORY"],
+    }
+    return CounterSample({k: all_events[k] for k in events})

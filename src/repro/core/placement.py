@@ -1,0 +1,172 @@
+"""Placement Advisor — characterization-driven memory management.
+
+The upool payoff (paper §IV-E): once the curves are known, framework
+objects are *deliberately* placed across heterogeneous memories — and the
+right answer is often counter-intuitive (Fig. 14: allocate the victim's
+heap in the module the stressors are NOT hammering... which can be the
+nominally slower one).
+
+The advisor solves a small assignment problem: given
+  * memory objects (size, bytes moved per step, latency sensitivity),
+  * candidate pools with capacities,
+  * an expected contention level (stressor count + their target pool),
+it minimises the predicted per-step time
+
+    t(obj, pool) = traffic_bytes / eff_bw(pool | contention)
+                 + lat_weight * eff_lat(pool | contention) * dependent_accesses
+
+greedily by "regret density" (largest time delta between best and
+second-best pool per byte first), respecting capacities.
+
+Framework integration: ``repro.serve.engine`` asks the advisor where the
+KV cache goes (HBM vs. host, under decode-time contention); the train
+loop asks where optimizer state lives (ZeRO-offload decision).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.characterize import CurveDB
+from repro.core.devicetree import Platform
+
+
+@dataclass(frozen=True)
+class MemObject:
+    """One placeable framework object."""
+    name: str
+    size_bytes: int
+    bytes_per_step: float          # streaming traffic it generates
+    dependent_accesses: float = 0.0  # serialized (latency-bound) accesses
+    pinned_pool: Optional[str] = None  # force placement (escape hatch)
+
+
+@dataclass(frozen=True)
+class ContentionSpec:
+    """Expected background load while this application runs."""
+    n_stressors: int = 0
+    stress_pool: str = "hbm"
+    stress_strategy: str = "w"
+
+
+@dataclass
+class PlacementDecision:
+    pool: str
+    predicted_step_ns: float
+    alternatives: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class PlacementPlan:
+    decisions: Dict[str, PlacementDecision] = field(default_factory=dict)
+
+    def pool_of(self, name: str) -> str:
+        return self.decisions[name].pool
+
+    def total_predicted_ns(self) -> float:
+        return sum(d.predicted_step_ns for d in self.decisions.values())
+
+    def report(self) -> str:
+        lines = ["object              pool     t_pred(us)   alternatives"]
+        for name, d in self.decisions.items():
+            alts = " ".join(f"{p}:{t / 1e3:.1f}" for p, t in
+                            sorted(d.alternatives.items()))
+            lines.append(f"{name:19s} {d.pool:8s} "
+                         f"{d.predicted_step_ns / 1e3:10.1f}   {alts}")
+        return "\n".join(lines)
+
+
+class PlacementAdvisor:
+    def __init__(self, db: CurveDB, platform: Platform,
+                 pools: Optional[Sequence[str]] = None):
+        self.db = db
+        self.platform = platform
+        self.pools = list(pools) if pools is not None else sorted(
+            {k.split(":")[0] for k in db.curves})
+
+    # -- cost model ---------------------------------------------------------
+    def predict_ns(self, obj: MemObject, pool: str,
+                   contention: ContentionSpec) -> float:
+        bw = self.db.effective_bw(
+            pool, contention.n_stressors,
+            stress_pool=contention.stress_pool,
+            stress_strat=contention.stress_strategy)
+        lat = self.db.effective_lat(
+            pool, contention.n_stressors,
+            stress_pool=contention.stress_pool,
+            stress_strat=contention.stress_strategy)
+        stream_ns = obj.bytes_per_step / max(bw, 1e-9)
+        lat_ns = obj.dependent_accesses * lat
+        return stream_ns + lat_ns
+
+    # -- solver ---------------------------------------------------------------
+    def advise(self, objects: Sequence[MemObject],
+               contention: ContentionSpec = ContentionSpec(),
+               capacities: Optional[Dict[str, int]] = None) -> PlacementPlan:
+        caps = dict(capacities) if capacities is not None else {
+            p: self.platform.memories[p].size_bytes
+            for p in self.pools if p in self.platform.memories}
+
+        costs: Dict[str, Dict[str, float]] = {}
+        for obj in objects:
+            costs[obj.name] = {
+                p: self.predict_ns(obj, p, contention)
+                for p in self.pools if p in caps}
+
+        # pinned objects first
+        plan = PlacementPlan()
+        todo = []
+        for obj in objects:
+            if obj.pinned_pool is not None:
+                p = obj.pinned_pool
+                caps[p] = caps.get(p, 0) - obj.size_bytes
+                plan.decisions[obj.name] = PlacementDecision(
+                    p, costs[obj.name].get(p, 0.0), costs[obj.name])
+            else:
+                todo.append(obj)
+
+        # greedy by regret: the object that loses most from a bad pool
+        # gets first pick
+        def regret(obj: MemObject) -> float:
+            c = sorted(costs[obj.name].values())
+            return (c[1] - c[0]) if len(c) > 1 else c[0]
+
+        for obj in sorted(todo, key=regret, reverse=True):
+            ranked = sorted(costs[obj.name].items(), key=lambda kv: kv[1])
+            placed = False
+            for pool, t in ranked:
+                if caps.get(pool, 0) >= obj.size_bytes:
+                    caps[pool] -= obj.size_bytes
+                    plan.decisions[obj.name] = PlacementDecision(
+                        pool, t, costs[obj.name])
+                    placed = True
+                    break
+            if not placed:
+                raise RuntimeError(
+                    f"object {obj.name} ({obj.size_bytes}B) fits no pool "
+                    f"(free: { {p: c for p, c in caps.items()} })")
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Framework object profiles (what serve/train hand to the advisor)
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_object(name: str, size_bytes: int,
+                    bytes_read_per_token: float) -> MemObject:
+    """Decode reads the whole cache once per generated token."""
+    return MemObject(name=name, size_bytes=size_bytes,
+                     bytes_per_step=bytes_read_per_token)
+
+
+def optimizer_state_object(name: str, size_bytes: int) -> MemObject:
+    """Touched exactly once per step (streamed read+write)."""
+    return MemObject(name=name, size_bytes=size_bytes,
+                     bytes_per_step=2.0 * size_bytes)
+
+
+def params_object(name: str, size_bytes: int,
+                  reads_per_step: float = 1.0) -> MemObject:
+    return MemObject(name=name, size_bytes=size_bytes,
+                     bytes_per_step=reads_per_step * size_bytes)

@@ -1,0 +1,315 @@
+"""Workload Library — registry of micro-benchmark activities (Table I).
+
+Each workload is keyed by its access-strategy letter and binds a memory
+pool + buffer size to a runnable activity.  Workloads carry:
+
+* a **buffer initialiser** (the paper's configurable init: sequential
+  ints for bandwidth sanity-checking, a Sattolo chain for latency);
+* an **executable** (jit'd Pallas kernel, interpret=True off-TPU) used by
+  the ``interpret``/``tpu`` backends;
+* the **queueing-class parameters** (strategy letter, traffic multiplier,
+  MLP) consumed by the ``simulate`` backend.
+
+The cacheable strategies (r/w/l) become VMEM-resident kernels when the
+buffer fits the VMEM budget and HBM-streaming kernels otherwise — the
+software-managed-hierarchy analog of "whether the buffer fits in L2",
+which is exactly how the paper's Fig. 5 buffer-size sweeps behave.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.devicetree import MemoryNode
+from repro.core.pools import Allocation, MemoryPool
+from repro.kernels import ops
+
+LANE = 128
+LINE_BYTES = LANE * 4          # one (1,128) f32 row = 512 B "line"
+VMEM_BUDGET = 64 << 20         # "cache size": cacheable buffers <= this
+                               # are VMEM-resident (the L2-fit analog)
+_EXEC_VMEM_CAP = 4 << 20       # interpret-mode practicality cap (CPU)
+
+
+@dataclass
+class WorkloadResult:
+    strategy: str
+    pool: str
+    buffer_bytes: int
+    iters: int
+    bytes_moved: int           # useful bytes touched (all iters)
+    elapsed_ns: float          # wall time (interpret/tpu backends)
+    transactions: int          # dependent loads for latency workloads
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        if self.elapsed_ns <= 0:
+            return 0.0
+        return self.bytes_moved / self.elapsed_ns
+
+    @property
+    def latency_ns(self) -> float:
+        if self.transactions <= 0:
+            return 0.0
+        return self.elapsed_ns / self.transactions
+
+
+@dataclass
+class Workload:
+    """A bound activity: strategy letter + pool + buffer."""
+    strategy: str
+    pool: MemoryPool
+    buffer_bytes: int
+    description: str
+    run_fn: Callable[[int], WorkloadResult]
+    alloc: Optional[Allocation] = None
+    is_memory_bound: bool = True
+
+    def run(self, iters: int = 500) -> WorkloadResult:
+        return self.run_fn(iters)
+
+    def release(self) -> None:
+        if self.alloc is not None:
+            self.pool.free(self.alloc)
+            self.alloc = None
+
+    @property
+    def node(self) -> MemoryNode:
+        return self.pool.node
+
+
+# ---------------------------------------------------------------------------
+# Buffer initialisers (paper: "Configurable Buffer Initialization")
+# ---------------------------------------------------------------------------
+
+
+def bw_buffer_init(shape, dtype):
+    """Sequential integers — lets experiments sanity-check corruption."""
+    n = int(np.prod(shape))
+    return jnp.arange(n, dtype=jnp.float32).reshape(shape).astype(dtype)
+
+
+def latency_buffer_init(n_lines: int, seed: int = 0):
+    return jnp.asarray(ops.chain_buffer(n_lines, seed))
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., Workload]] = {}
+
+
+def register_strategy(letter: str):
+    def deco(fn):
+        _REGISTRY[letter] = fn
+        return fn
+    return deco
+
+
+def strategies() -> Dict[str, str]:
+    return {k: (v.__doc__ or "").strip().splitlines()[0]
+            for k, v in sorted(_REGISTRY.items())}
+
+
+def make_workload(strategy: str, pool: MemoryPool, buffer_bytes: int,
+                  **kw) -> Workload:
+    if strategy not in _REGISTRY:
+        raise KeyError(
+            f"unknown access strategy {strategy!r}; have "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[strategy](pool, buffer_bytes, **kw)
+
+
+def _rows(buffer_bytes: int) -> int:
+    rows = max(1, buffer_bytes // LINE_BYTES)
+    # keep divisible by the largest block we use
+    block = 512 if rows >= 512 else rows
+    return (rows // block) * block or rows
+
+
+def _timed(fn, *args, iters: int, **kw) -> float:
+    """Median-of-3 wall time for `iters` back-to-back calls, ns."""
+    fn(*args, **kw).block_until_ready()          # compile + warm
+    samples = []
+    for _ in range(3):
+        t0 = time.perf_counter_ns()
+        for _ in range(iters):
+            out = fn(*args, **kw)
+        out.block_until_ready()
+        samples.append((time.perf_counter_ns() - t0) / iters)
+    return float(np.median(samples))
+
+
+def _fits_vmem(buffer_bytes: int) -> bool:
+    """Executable-kernel residency choice (capped for CPU interpret)."""
+    return buffer_bytes < min(VMEM_BUDGET, _EXEC_VMEM_CAP)
+
+
+def models_as_vmem(buffer_bytes: int) -> bool:
+    """Modeling-side 'fits the cache' rule (the Fig. 5 sweep knee)."""
+    return buffer_bytes < VMEM_BUDGET
+
+
+# ---- bandwidth strategies ---------------------------------------------------
+
+
+@register_strategy("r")
+def _mk_r(pool, buffer_bytes, **kw):
+    """sequential reads (cacheable) — read bandwidth"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, init=bw_buffer_init,
+                       tag="bw:r")
+    x = alloc.array if alloc.array is not None else bw_buffer_init(
+        (rows, LANE), jnp.float32)
+    vmem = _fits_vmem(buffer_bytes) or pool.node.kind == "vmem"
+
+    def run(iters):
+        if vmem:
+            t = _timed(ops.vmem_read, x, repeats=8, iters=iters) / 8
+        else:
+            t = _timed(ops.stream_read, x, block_rows=min(512, rows),
+                       iters=iters)
+        return WorkloadResult("r", pool.node.name, buffer_bytes, iters,
+                              rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("r", pool, buffer_bytes,
+                    "sequential cacheable read", run, alloc)
+
+
+@register_strategy("w")
+def _mk_w(pool, buffer_bytes, **kw):
+    """sequential writes (cacheable, write-allocate) — write bandwidth"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, tag="bw:w")
+    vmem = _fits_vmem(buffer_bytes) or pool.node.kind == "vmem"
+
+    def run(iters):
+        if vmem:
+            t = _timed(ops.vmem_write, rows=rows, repeats=8,
+                       iters=iters) / 8
+        else:
+            t = _timed(ops.stream_write, rows=rows,
+                       block_rows=min(512, rows), iters=iters)
+        return WorkloadResult("w", pool.node.name, buffer_bytes, iters,
+                              rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("w", pool, buffer_bytes,
+                    "sequential cacheable write", run, alloc)
+
+
+@register_strategy("s")
+def _mk_s(pool, buffer_bytes, **kw):
+    """non-cacheable sequential read (always streams from the module)"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, init=bw_buffer_init,
+                       tag="bw:s")
+    x = alloc.array if alloc.array is not None else bw_buffer_init(
+        (rows, LANE), jnp.float32)
+
+    def run(iters):
+        t = _timed(ops.stream_read, x, block_rows=min(512, rows),
+                   iters=iters)
+        return WorkloadResult("s", pool.node.name, buffer_bytes, iters,
+                              rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("s", pool, buffer_bytes, "non-cacheable read", run,
+                    alloc)
+
+
+@register_strategy("x")
+def _mk_x(pool, buffer_bytes, **kw):
+    """non-cacheable write (write-allocate: line read+written)"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, init=bw_buffer_init,
+                       tag="bw:x")
+    x = alloc.array if alloc.array is not None else bw_buffer_init(
+        (rows, LANE), jnp.float32)
+
+    def run(iters):
+        t = _timed(ops.stream_rmw, x, block_rows=min(512, rows),
+                   iters=iters)
+        return WorkloadResult("x", pool.node.name, buffer_bytes, iters,
+                              2 * rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("x", pool, buffer_bytes,
+                    "non-cacheable write (allocate)", run, alloc)
+
+
+@register_strategy("y")
+def _mk_y(pool, buffer_bytes, **kw):
+    """write-streaming (no write-allocate — the dc zva analog)"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, tag="bw:y")
+
+    def run(iters):
+        t = _timed(ops.stream_write, rows=rows, block_rows=min(512, rows),
+                   iters=iters)
+        return WorkloadResult("y", pool.node.name, buffer_bytes, iters,
+                              rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("y", pool, buffer_bytes, "write-streaming", run, alloc)
+
+
+# ---- latency strategies -----------------------------------------------------
+
+
+@register_strategy("l")
+def _mk_l(pool, buffer_bytes, *, seed: int = 0, **kw):
+    """data-dependent pointer chase (cacheable) — latency"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.int32, tag="lat:l")
+    buf = latency_buffer_init(rows, seed)
+    vmem = _fits_vmem(buffer_bytes) or pool.node.kind == "vmem"
+
+    def run(iters):
+        steps = rows                      # one full cycle per iteration
+        fn = ops.chase_vmem if vmem else ops.chase_hbm
+        t = _timed(fn, buf, n_steps=steps, iters=max(1, iters // 10))
+        return WorkloadResult("l", pool.node.name, buffer_bytes,
+                              iters, rows * LINE_BYTES, t,
+                              transactions=steps)
+
+    return Workload("l", pool, buffer_bytes, "pointer-chase latency", run,
+                    alloc)
+
+
+@register_strategy("m")
+def _mk_m(pool, buffer_bytes, *, seed: int = 0, **kw):
+    """non-cacheable pointer chase — module latency"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.int32, tag="lat:m")
+    buf = latency_buffer_init(rows, seed)
+
+    def run(iters):
+        steps = rows
+        t = _timed(ops.chase_hbm, buf, n_steps=steps,
+                   iters=max(1, iters // 10))
+        return WorkloadResult("m", pool.node.name, buffer_bytes,
+                              iters, rows * LINE_BYTES, t,
+                              transactions=steps)
+
+    return Workload("m", pool, buffer_bytes,
+                    "non-cacheable pointer-chase", run, alloc)
+
+
+# ---- memory-idle -------------------------------------------------------------
+
+
+@register_strategy("i")
+def _mk_idle(pool, buffer_bytes, **kw):
+    """memory-idle MXU busy loop (zero memory traffic)"""
+    a = jnp.eye(128, dtype=jnp.float32) * 0.99
+
+    def run(iters):
+        t = _timed(lambda aa: ops.mxu_probe(aa, iters=64), a, iters=iters)
+        return WorkloadResult("i", pool.node.name, 0, iters, 0, t * iters,
+                              0)
+
+    return Workload("i", pool, 0, "memory-idle busy loop", run, None,
+                    is_memory_bound=False)

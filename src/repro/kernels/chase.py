@@ -1,0 +1,113 @@
+"""Data-dependent pointer-chase latency kernels (the paper's l / m).
+
+MEMSCOPE measures round-trip latency by ensuring exactly one outstanding
+memory transaction: the next address is only known once the previous load
+returns.  The buffer is initialised as a single permutation *cycle*
+(Sattolo's algorithm — the TPU-native equivalent of the paper's
+Appendix-A swap-based shuffle: full coverage, no repeats, unprefetchable).
+
+Two TPU-native variants:
+
+* ``chase_vmem`` (strategy ``l``) — the chain lives in a VMEM-resident
+  block; an inner ``fori_loop`` performs truly dependent loads
+  (``idx = buf[idx]``).  Measures on-chip (VMEM) load-to-use latency.
+* ``chase_hbm``  (strategy ``m``) — the chain lives in HBM
+  (``memory_space=ANY``); every step issues a single-line DMA
+  HBM->VMEM, waits for it, and reads the next index from the landed
+  line.  One outstanding transaction by construction — this is the
+  ``dc civac`` non-cacheable chase, adapted to a software-managed
+  memory hierarchy.
+
+Line layout: (n_lines, 128) int32 — one 512-byte lane-row per "cache
+line"; element [i, 0] holds the successor of line i.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+# ---------------------------------------------------------------------------
+# Chain initialisation (the paper's Fig. 16, steps 1-3)
+# ---------------------------------------------------------------------------
+
+
+def make_chain(n_lines: int, seed: int = 0) -> np.ndarray:
+    """Sattolo cyclic permutation: following next[i] from 0 visits every
+    line exactly once before returning to 0."""
+    rng = np.random.default_rng(seed)
+    p = np.arange(n_lines)
+    for i in range(n_lines - 1, 0, -1):
+        j = rng.integers(0, i)
+        p[i], p[j] = p[j], p[i]
+    return p.astype(np.int32)
+
+
+def chain_buffer(n_lines: int, seed: int = 0) -> np.ndarray:
+    """(n_lines, 128) int32 buffer with the successor in lane 0."""
+    buf = np.zeros((n_lines, LANE), np.int32)
+    buf[:, 0] = make_chain(n_lines, seed)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# VMEM chase (l)
+# ---------------------------------------------------------------------------
+
+
+def _chase_vmem_body(x_ref, o_ref, *, n_steps: int):
+    def step(_, idx):
+        return x_ref[idx, 0]
+
+    o_ref[0, 0] = jax.lax.fori_loop(0, n_steps, step, jnp.int32(0))
+
+
+def chase_vmem(buf: jnp.ndarray, *, n_steps: int,
+               interpret: bool = False) -> jnp.ndarray:
+    """buf: (n_lines, 128) int32, VMEM-resident. Returns the final index
+    (data-dependent on every intermediate load)."""
+    return pl.pallas_call(
+        functools.partial(_chase_vmem_body, n_steps=n_steps),
+        in_specs=[pl.BlockSpec(buf.shape, lambda: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(buf)[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# HBM chase (m): one line DMA'd per dependent step
+# ---------------------------------------------------------------------------
+
+
+def _chase_hbm_body(x_hbm_ref, o_ref, line_ref, sem, *, n_steps: int):
+    def step(_, idx):
+        cp = pltpu.make_async_copy(
+            x_hbm_ref.at[pl.ds(idx, 1)], line_ref, sem)
+        cp.start()
+        cp.wait()
+        return line_ref[0, 0]
+
+    o_ref[0, 0] = jax.lax.fori_loop(0, n_steps, step, jnp.int32(0))
+
+
+def chase_hbm(buf: jnp.ndarray, *, n_steps: int,
+              interpret: bool = False) -> jnp.ndarray:
+    """buf: (n_lines, 128) int32 staying in HBM; exactly one outstanding
+    single-line DMA at any time."""
+    return pl.pallas_call(
+        functools.partial(_chase_hbm_body, n_steps=n_steps),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, 1), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1, LANE), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(buf)[0, 0]

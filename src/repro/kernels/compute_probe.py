@@ -1,0 +1,38 @@
+"""MXU busy-loop — the paper's "memory-idle" activity, TPU-native.
+
+MEMSCOPE keeps non-stressor cores *memory-idle* with a CPU-bound busy
+loop so they contribute zero memory traffic while still being online.
+The TPU analog: a chain of (128, 128) matmuls on a VMEM-resident operand.
+After the single initial DMA the kernel generates no HBM traffic at all —
+it just occupies the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MXU = 128
+
+
+def _probe_body(a_ref, o_ref, *, iters: int):
+    def step(i, acc):
+        return jnp.dot(acc, a_ref[...],
+                       preferred_element_type=jnp.float32)
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, iters, step, a_ref[...].astype(jnp.float32))
+
+
+def mxu_probe(a: jnp.ndarray, *, iters: int = 64,
+              interpret: bool = False) -> jnp.ndarray:
+    """a: (128, 128) f32. Returns a^(iters+1) — MXU-bound, memory-idle."""
+    return pl.pallas_call(
+        functools.partial(_probe_body, iters=iters),
+        in_specs=[pl.BlockSpec((MXU, MXU), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((MXU, MXU), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((MXU, MXU), jnp.float32),
+        interpret=interpret,
+    )(a)

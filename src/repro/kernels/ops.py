@@ -1,0 +1,118 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) and False on real
+hardware, so the same call sites work in both environments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chase as _chase
+from repro.kernels import compute_probe as _probe
+from repro.kernels import flash_attention as _flash
+from repro.kernels import stream as _stream
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp(override: Optional[bool]) -> bool:
+    return (not on_tpu()) if override is None else override
+
+
+# --- stream ------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_read(x, *, block_rows: int = 512, interpret: Optional[bool] = None):
+    return _stream.read_hbm(x, block_rows=block_rows,
+                            interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows", "block_rows", "interpret"))
+def stream_write(*, rows: int, block_rows: int = 512,
+                 interpret: Optional[bool] = None):
+    return _stream.write_hbm(rows, block_rows=block_rows,
+                             interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_rmw(x, *, block_rows: int = 512,
+               interpret: Optional[bool] = None):
+    return _stream.rmw_hbm(x, block_rows=block_rows,
+                           interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_copy(x, *, block_rows: int = 512,
+                interpret: Optional[bool] = None):
+    return _stream.copy_hbm(x, block_rows=block_rows,
+                            interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scalar", "block_rows", "interpret"))
+def stream_triad(b, c, *, scalar: float = 3.0, block_rows: int = 512,
+                 interpret: Optional[bool] = None):
+    return _stream.triad_hbm(b, c, scalar=scalar, block_rows=block_rows,
+                             interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("repeats", "interpret"))
+def vmem_read(x, *, repeats: int = 16, interpret: Optional[bool] = None):
+    return _stream.read_vmem(x, repeats=repeats,
+                             interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows", "repeats", "interpret"))
+def vmem_write(*, rows: int, repeats: int = 16,
+               interpret: Optional[bool] = None):
+    return _stream.write_vmem(rows, repeats=repeats,
+                              interpret=_interp(interpret))
+
+
+# --- chase -------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "interpret"))
+def chase_vmem(buf, *, n_steps: int, interpret: Optional[bool] = None):
+    return _chase.chase_vmem(buf, n_steps=n_steps,
+                             interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "interpret"))
+def chase_hbm(buf, *, n_steps: int, interpret: Optional[bool] = None):
+    return _chase.chase_hbm(buf, n_steps=n_steps,
+                            interpret=_interp(interpret))
+
+
+make_chain = _chase.make_chain
+chain_buffer = _chase.chain_buffer
+
+
+# --- compute probe -------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def mxu_probe(a, *, iters: int = 64, interpret: Optional[bool] = None):
+    return _probe.mxu_probe(a, iters=iters, interpret=_interp(interpret))
+
+
+# --- flash attention -----------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "sm_scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    sm_scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=_interp(interpret))

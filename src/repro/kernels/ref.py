@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# --- stream ----------------------------------------------------------------
+
+
+def read_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(x, dtype=jnp.float32)
+
+
+def write_ref(shape_rows: int, value: float = 1.0) -> jnp.ndarray:
+    return jnp.full((shape_rows, 128), value, jnp.float32)
+
+
+def rmw_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return x + 1.0
+
+
+def copy_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return x
+
+
+def triad_ref(b: jnp.ndarray, c: jnp.ndarray, scalar: float = 3.0):
+    return b + scalar * c
+
+
+def read_vmem_ref(x: jnp.ndarray, repeats: int) -> jnp.ndarray:
+    return jnp.sum(x, dtype=jnp.float32) * repeats
+
+
+def write_vmem_ref(shape_rows: int, repeats: int) -> jnp.ndarray:
+    return jnp.full((shape_rows, 128), float(repeats - 1), jnp.float32)
+
+
+# --- chase -----------------------------------------------------------------
+
+
+def chase_ref(buf: np.ndarray, n_steps: int) -> int:
+    idx = 0
+    nxt = np.asarray(buf)[:, 0]
+    for _ in range(n_steps):
+        idx = int(nxt[idx])
+    return idx
+
+
+# --- compute probe ----------------------------------------------------------
+
+
+def mxu_probe_ref(a: jnp.ndarray, iters: int) -> jnp.ndarray:
+    out = a.astype(jnp.float32)
+    for _ in range(iters):
+        out = out @ a.astype(jnp.float32)
+    return out
+
+
+# --- flash attention ---------------------------------------------------------
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,H,Sq,D); k,v: (B,KVH,Sk,D) -> (B,H,Sq,D). Dense oracle."""
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    g = h // kvh
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

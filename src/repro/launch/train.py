@@ -1,0 +1,181 @@
+"""End-to-end training driver.
+
+Wires every substrate layer together: config -> mesh -> sharding rules ->
+data pipeline -> jit'd train step (microbatched, remat, ZeRO-1, optional
+int8-EF compression) -> resilient loop (checkpoint/restart, straggler
+monitor) -> MEMSCOPE-advised placement of optimizer state.
+
+On this CPU container run a reduced config::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+On a real slice drop ``--reduced`` and point --mesh at the pod.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import (SHAPES, MeshConfig, ShapeSpec, TrainConfig,
+                                get_config)
+from repro.core.characterize import CurveDB, characterize
+from repro.core.coordinator import CoreCoordinator
+from repro.core.placement import (ContentionSpec, PlacementAdvisor,
+                                  optimizer_state_object, params_object)
+from repro.data.pipeline import DataLoader
+from repro.launch.mesh import describe, make_host_mesh, mesh_from_config
+from repro.models import lm
+from repro.parallel.sharding import make_rules
+from repro.runtime.fault_tolerance import (InjectedFault, ResilientLoop,
+                                           StragglerMonitor)
+from repro.train import step as step_mod
+
+
+def advise_placement(cfg, tcfg, verbose: bool = True):
+    """MEMSCOPE loop: characterize -> advise where optimizer state lives.
+
+    The decision is advisory on this container (CPU has one memory), but
+    it is the real Fig.-14 pipeline: the curve DB comes from the
+    contention simulator and the advisor solves the placement problem."""
+    coord = CoreCoordinator(backend="simulate")
+    db = characterize(coord, pools=["hbm", "host"],
+                      obs_strategies=("r", "l"),
+                      stress_strategies=("w",), iters=10)
+    advisor = PlacementAdvisor(db, coord.platform)
+    n_params = cfg.n_params()
+    objs = [
+        params_object("params", 2 * n_params, reads_per_step=2.0),
+        optimizer_state_object("opt_m", 4 * n_params),
+        optimizer_state_object("opt_v", 4 * n_params),
+    ]
+    plan = advisor.advise(objs, ContentionSpec(n_stressors=0))
+    if verbose:
+        print("[memscope] placement plan:")
+        print(plan.report())
+    return plan
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.data, args.model)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    rules = make_rules(cfg, mesh, global_batch=args.batch,
+                       shape_kind="train")
+    tcfg = TrainConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(1, args.steps // 10),
+        microbatches=args.microbatches, remat=args.remat,
+        zero1=not args.no_zero1, grad_compression=args.compression,
+        loss_chunk=min(1024, args.seq), seed=args.seed,
+        checkpoint_every=args.checkpoint_every)
+    return cfg, mesh, shape, rules, tcfg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.train")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="layer", choices=["none", "layer"])
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--inject-fault-at", type=int, default=-1,
+                    help="raise InjectedFault at this step once (drill)")
+    ap.add_argument("--no-advice", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, mesh, shape, rules, tcfg = build(args)
+    print(f"[train] arch={cfg.name} params={cfg.n_params() / 1e6:.1f}M "
+          f"mesh={describe(mesh)} steps={args.steps} "
+          f"batch={args.batch}x{args.seq}")
+
+    if not args.no_advice:
+        advise_placement(cfg, tcfg)
+
+    # --- state + shardings --------------------------------------------------
+    state = step_mod.init_state(cfg, tcfg, jax.random.PRNGKey(tcfg.seed))
+    specs = step_mod.state_specs(cfg, rules, tcfg, state["params"])
+    shardings = jax.tree.map(lambda s, sp: NamedSharding(mesh, sp),
+                             state, specs)
+    state = jax.tree.map(lambda x, sh: jax.device_put(x, sh), state,
+                         shardings)
+
+    b_axes = rules.batch if rules.batch else None
+    batch_sharding = NamedSharding(mesh, P(b_axes, None))
+    loader = DataLoader(cfg, shape, mesh=mesh,
+                        batch_sharding=batch_sharding, seed=tcfg.seed)
+
+    step_fn = jax.jit(
+        step_mod.make_train_step(cfg, rules, tcfg,
+                                 microbatches=tcfg.microbatches),
+        donate_argnums=(0,))
+
+    def wrapped_step(state, batch):
+        return step_fn(state, batch.tokens, batch.labels, batch.frontend)
+
+    # --- resilient loop -------------------------------------------------------
+    ckpt = CheckpointManager(args.ckpt_dir, keep=tcfg.keep_checkpoints)
+    fault_state = {"fired": False}
+
+    def fault_hook(step: int):
+        if step == args.inject_fault_at and not fault_state["fired"]:
+            fault_state["fired"] = True
+            raise InjectedFault(f"drill at step {step}")
+
+    t0 = time.time()
+    metrics_log = []
+
+    def logging_step(state, batch):
+        state, metrics = wrapped_step(state, batch)
+        return state, metrics
+
+    loop = ResilientLoop(
+        logging_step, loader.device_batch, ckpt,
+        checkpoint_every=tcfg.checkpoint_every,
+        fault_hook=fault_hook if args.inject_fault_at >= 0 else None,
+        monitor=StragglerMonitor())
+    result = loop.run(state, args.steps)
+
+    wall = time.time() - t0
+    toks = args.steps * shape.tokens
+    hist = result.metrics_history
+    for i, m in enumerate(hist):
+        if i % args.log_every == 0 or i == len(hist) - 1:
+            print(f"  step {i:5d} loss={m.get('loss', float('nan')):.4f} "
+                  f"gnorm={m.get('grad_norm', float('nan')):.3f}")
+    print(f"[train] done: {result.final_step} steps in {wall:.1f}s "
+          f"({toks / wall:.0f} tok/s), restarts={result.restarts}, "
+          f"stragglers={len(result.straggler_events)}")
+    first = next((m["loss"] for m in hist if "loss" in m), float("nan"))
+    last = next((m["loss"] for m in reversed(hist) if "loss" in m),
+                float("nan"))
+    print(f"[train] loss {first:.4f} -> {last:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,425 @@
+"""GQA attention: chunked full-context, sliding-window, and decode paths.
+
+Memory discipline (DESIGN.md §6):
+  * no (Sq, Sk) score tensor is materialised for the full sequence — the q
+    dimension is processed in chunks via ``lax.scan`` (trip counts are
+    recovered by the while-aware HLO cost parser, ``repro.analysis.hlo``);
+  * sliding-window layers slice a fixed-width KV extent per q-chunk
+    (``dynamic_slice``), so local attention is O(S * window) exactly — this
+    is what makes the gemma3 long-context cells sub-quadratic;
+  * decode attends one query position against the (possibly sequence-
+    sharded) KV cache; softmax statistics combine via XLA collectives.
+
+KV caches for sliding-window layers are ring buffers of size ``window``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (
+    apply_rope, dense_init, rmsnorm, rmsnorm_init, rope_sincos, softcap,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (h, hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core scoring helper (GQA): one q-chunk against a KV extent.
+# ---------------------------------------------------------------------------
+
+
+def _gqa_attend(q, k, v, mask, scale: float, cap: float):
+    """q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd); mask: (B?, Sq, Sk) bool.
+
+    Returns (B, Sq, KV, G, hd). Scores accumulate in f32.
+    """
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype)
+
+
+def _split_heads(q, n_kv: int):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def _merge_heads(o):
+    b, s, kv, g, hd = o.shape
+    return o.reshape(b, s, kv * g, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full-context causal attention, q-chunked.
+# ---------------------------------------------------------------------------
+
+
+def causal_attention(q, k, v, *, q_positions, k_positions, scale, cap=0.0,
+                     q_chunk: int = 256, k_valid=None):
+    """q: (B,Sq,H,hd) | k,v: (B,Sk,KV,hd). Positions are absolute (int32).
+
+    k_valid: optional (B, Sk) bool — entries beyond the written cache length.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _split_heads(q, kvh)
+    if sq <= q_chunk:
+        mask = k_positions[None, None, :] <= q_positions[None, :, None]
+        mask = jnp.broadcast_to(mask, (b, sq, k.shape[1]))
+        if k_valid is not None:
+            mask = mask & k_valid[:, None, :]
+        return _merge_heads(_gqa_attend(qg, k, v, mask, scale, cap))
+
+    n_chunks = sq // q_chunk
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    qg = qg.reshape(b, n_chunks, q_chunk, kvh, h // kvh, hd)
+    qpos = q_positions.reshape(n_chunks, q_chunk)
+
+    # checkpoint per chunk: without it the backward of the scan SAVES the
+    # (b, kv, g, q_chunk, Sk) attention probabilities of every chunk into
+    # a stacked residual (the dominant HBM traffic of the train cells —
+    # see EXPERIMENTS.md §Perf iteration 2); recomputing them per-chunk
+    # in the backward turns a cross-scan save/load into chunk-local temps
+    @jax.checkpoint
+    def chunk_attend(qc, qp):
+        mask = k_positions[None, None, :] <= qp[None, :, None]
+        mask = jnp.broadcast_to(mask, (b, q_chunk, k.shape[1]))
+        if k_valid is not None:
+            mask = mask & k_valid[:, None, :]
+        return _gqa_attend(qc, k, v, mask, scale, cap)
+
+    def body(_, inp):
+        qc, qp = inp
+        return None, chunk_attend(qc, qp)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qg, 1, 0), qpos))
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kvh, h // kvh, hd)
+    return _merge_heads(outs)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention via OVERLAPPING BLOCKS (exact O(S*W)).
+#
+# q is reshaped to (B, nb, block, ...) and k/v are gathered into
+# (B, nb, block+window, ...) overlapping extents, so every block's
+# attention is a fully LOCAL batched einsum — the blocks dim shards over
+# the "model" mesh axis (constrain "blocked"), which removes both the
+# per-chunk scan residual stacks AND every intra-attention collective
+# that the seq-sharded-KV formulation paid (EXPERIMENTS.md §Perf it.2).
+# The band mask is static per (block-row, extent-col) up to edge
+# validity, shared by all blocks.
+# ---------------------------------------------------------------------------
+
+
+def window_attention(q, k, v, *, window: int, scale, cap=0.0,
+                     q_chunk: int = 256, constrain=None):
+    """Self-attention where q index i attends k indices (i-window, i].
+
+    q: (B,S,H,hd); k,v: (B,S,KV,hd) aligned with q.
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if s <= window + q_chunk:
+        pos = jnp.arange(s, dtype=jnp.int32)
+        return causal_window_fallback(q, k, v, pos, window, scale, cap,
+                                      q_chunk)
+    block = q_chunk
+    assert s % block == 0
+    nb = s // block
+    ext = window + block
+    cst = constrain or (lambda x, _n: x)
+
+    # (nb, ext) absolute k row index per block, clipped at the left edge
+    starts = jnp.arange(nb, dtype=jnp.int32) * block - window
+    idx = starts[:, None] + jnp.arange(ext, dtype=jnp.int32)[None, :]
+    valid_edge = idx >= 0
+    idx = jnp.maximum(idx, 0)
+
+    qb = _split_heads(q, kvh).reshape(b, nb, block, kvh, h // kvh, hd)
+    kb = jnp.take(k, idx, axis=1)          # (B, nb, ext, KV, hd)
+    vb = jnp.take(v, idx, axis=1)
+    qb = cst(qb, "blocked_q")
+    kb = cst(kb, "blocked_kv")
+    vb = cst(vb, "blocked_kv")
+
+    # band mask: qpos = n*block + qi ; kpos = n*block - window + ei
+    qi = jnp.arange(block, dtype=jnp.int32)
+    ei = jnp.arange(ext, dtype=jnp.int32)
+    rel = ei[None, :] - window - qi[:, None]      # kpos - qpos
+    band = (rel <= 0) & (rel > -window)           # (block, ext)
+    mask = band[None, :, :] & valid_edge[:, None, :]   # (nb, block, ext)
+
+    sc = jnp.einsum("bnqkgh,bnekh->bnkgqe", qb, kb,
+                    preferred_element_type=jnp.float32) * scale
+    sc = softcap(sc, cap)
+    sc = jnp.where(mask[None, :, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bnkgqe,bnekh->bnqkgh", p.astype(vb.dtype), vb,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
+    o = cst(o, "blocked_q")
+    return o.reshape(b, s, kvh, h // kvh, hd).reshape(b, s, h, hd)
+
+
+def causal_window_fallback(q, k, v, positions, window, scale, cap, q_chunk):
+    """Small-S path: full mask with window band."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _split_heads(q, kvh)
+    mask = (positions[None, :] <= positions[:, None]) & \
+           (positions[None, :] > positions[:, None] - window)
+    mask = jnp.broadcast_to(mask[None], (b, s, s))
+    return _merge_heads(_gqa_attend(qg, k, v, mask, scale, cap))
+
+
+# ---------------------------------------------------------------------------
+# Decode: one query position against the cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q1, cache_k, cache_v, *, write_pos, scale, cap=0.0,
+                     ring: bool = False, window: int = 0):
+    """q1: (B,1,H,hd); cache_k/v: (B,Sbuf,KV,hd); write_pos: scalar int32 —
+    the absolute position just written (valid entries: <= write_pos).
+
+    ring=True: the buffer is a ring of size `window` holding the last
+    `window` positions — everything currently in it is valid once
+    write_pos >= window-1.
+    """
+    b, sbuf = cache_k.shape[0], cache_k.shape[1]
+    idx = jnp.arange(sbuf, dtype=jnp.int32)
+    if ring:
+        valid = (idx <= write_pos) | (write_pos >= sbuf)
+    else:
+        valid = idx <= write_pos
+        if window:
+            valid = valid & (idx > write_pos - window)
+    kvh = cache_k.shape[2]
+    qg = _split_heads(q1, kvh)
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, sbuf))
+    return _merge_heads(_gqa_attend(qg, cache_k, cache_v, mask, scale, cap))
+
+
+def decode_attention_delta(q1, cache_k, cache_v, k_new, v_new, *,
+                           write_pos, scale, cap=0.0, ring: bool = False,
+                           window: int = 0):
+    """Decode WITHOUT materializing an updated cache: attends the OLD
+    cache (entries < write_pos) plus the new token's (k,v) via a
+    two-part softmax.  The caller appends (k_new, v_new) to the cache
+    out-of-band (one token-sized dynamic-update-slice after the layer
+    scan, instead of re-emitting the whole cache through the scan — the
+    full-cache copy was the dominant decode traffic, EXPERIMENTS.md
+    §Perf C3).
+
+    q1, k_new, v_new: (B, 1, H|KV, hd).  Returns (B, 1, H, hd).
+    """
+    b, sbuf, kvh, hd = cache_k.shape
+    idx = jnp.arange(sbuf, dtype=jnp.int32)
+    if ring:
+        slot = write_pos % sbuf
+        # cache holds positions write_pos-sbuf .. write_pos-1; the slot
+        # about to be overwritten (oldest) leaves the window
+        valid = ((idx < write_pos) | (write_pos >= sbuf)) & (idx != slot)
+    else:
+        valid = idx < write_pos
+        if window:
+            valid = valid & (idx > write_pos - window)
+    qg = _split_heads(q1, kvh)                       # (B,1,KV,G,hd)
+
+    s_old = jnp.einsum("bqkgh,bskh->bkgqs", qg, cache_k,
+                       preferred_element_type=jnp.float32) * scale
+    s_new = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_new,
+                       preferred_element_type=jnp.float32) * scale
+    s_old = softcap(s_old, cap)
+    s_new = softcap(s_new, cap)
+    s_old = jnp.where(valid[None, None, None, None, :], s_old, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s_old, axis=-1, keepdims=True), s_new)
+    p_old = jnp.exp(s_old - m)
+    p_new = jnp.exp(s_new - m)
+    denom = jnp.sum(p_old, axis=-1, keepdims=True) + p_new
+    o = jnp.einsum("bkgqs,bskh->bqkgh",
+                   (p_old / denom).astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o + jnp.einsum("bkgqs,bskh->bqkgh",
+                       (p_new / denom).astype(cache_v.dtype), v_new,
+                       preferred_element_type=jnp.float32)
+    return _merge_heads(o.astype(cache_v.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layer entry point
+# ---------------------------------------------------------------------------
+
+
+ONE_SHOT_MAX_S = 8192   # train-path: full-context attention without
+                        # q-chunking below this S (scores fit per-device
+                        # once q is sequence-sharded over "model")
+
+
+def attention_layer(params, x, *, cfg: ModelConfig, layer_idx: int,
+                    mode: str, cache: Optional[Dict[str, Any]] = None,
+                    write_pos=None, q_chunk: int = 256,
+                    constrain_kv=None, max_len: int = 0, constrain=None,
+                    delta_cache: bool = False):
+    """x: (B, S, D) -> (out (B,S,D), new_cache or None).
+
+    mode: "train" | "prefill" | "decode".
+    cache: {"k": (B,Sbuf,KV,hd), "v": ...} for prefill (written) and decode.
+    constrain_kv: optional fn applied to freshly computed k/v (sharding).
+    constrain: optional name-based sharding hook (see train.step) used by
+    the blocked/one-shot train paths.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    is_global = cfg.layer_is_global_attn(layer_idx)
+    window = 0 if is_global else cfg.sliding_window
+    theta = cfg.rope_theta if (is_global or not cfg.rope_theta_local) \
+        else cfg.rope_theta_local
+    scale = 1.0 / math.sqrt(hd)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s, dtype=jnp.int32)
+        if theta:
+            cos, sin = rope_sincos(positions, hd, theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        cst = constrain or (lambda v_, _n: v_)
+        if window:
+            # overlapping-blocks path: fully local compute, blocks dim
+            # sharded over "model" via the constrain hook
+            out = window_attention(q, k, v, window=window, scale=scale,
+                                   cap=cfg.attn_logit_softcap,
+                                   q_chunk=q_chunk, constrain=cst)
+        elif mode == "train" and s <= ONE_SHOT_MAX_S:
+            # one-shot full attention, q sequence-sharded over "model",
+            # k/v gathered once per layer: no per-chunk collectives, no
+            # scan residual stacks (EXPERIMENTS.md §Perf iteration 3)
+            qs = cst(q, "q_seq")
+            kr = cst(k, "kv_rep")
+            vr = cst(v, "kv_rep")
+            mask = positions[None, :] <= positions[:, None]
+            mask = jnp.broadcast_to(mask[None], (b, s, s))
+            out = _merge_heads(_gqa_attend(
+                _split_heads(qs, kv), kr, vr, mask, scale,
+                cfg.attn_logit_softcap))
+            out = cst(out, "q_seq")
+        else:
+            if constrain_kv is not None:
+                k, v = constrain_kv(k), constrain_kv(v)
+            out = causal_attention(q, k, v, q_positions=positions,
+                                   k_positions=positions, scale=scale,
+                                   cap=cfg.attn_logit_softcap,
+                                   q_chunk=q_chunk)
+        new_cache = None
+        if mode == "prefill":
+            sbuf = max(max_len, s)
+            if window:
+                sbuf = min(window, sbuf)
+            if window and window < s:
+                # keep the last `window` positions as the ring buffer
+                k_tail = k[:, s - window:]
+                v_tail = v[:, s - window:]
+                # ring layout: slot = pos % window
+                roll = (-(s % window)) % window
+                new_cache = {"k": jnp.roll(k_tail, roll, axis=1),
+                             "v": jnp.roll(v_tail, roll, axis=1)}
+            elif sbuf == s:
+                new_cache = {"k": k, "v": v}
+            else:
+                # write the first s positions of a max_len-sized buffer so
+                # decode can append without clobbering prefill entries
+                zk = jnp.zeros((b, sbuf) + k.shape[2:], k.dtype)
+                zv = jnp.zeros((b, sbuf) + v.shape[2:], v.dtype)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(zk, k, 0, 1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(zv, v, 0, 1)}
+    else:  # decode
+        assert cache is not None and write_pos is not None
+        if theta:
+            cos, sin = rope_sincos(write_pos[None].astype(jnp.int32), hd,
+                                   theta)
+            q = apply_rope(q, cos[None], sin[None])
+            k = apply_rope(k, cos[None], sin[None])
+        sbuf = cache["k"].shape[1]
+        ring = bool(window) and sbuf == window
+        if delta_cache:
+            # two-part attention over (old cache, new token); the caller
+            # applies the one-token write after the layer scan
+            out = decode_attention_delta(
+                q, cache["k"], cache["v"], k, v, write_pos=write_pos,
+                scale=scale, cap=cfg.attn_logit_softcap, ring=ring,
+                window=0 if ring else window)
+            new_cache = {"k_new": k, "v_new": v}
+        else:
+            slot = jnp.where(ring, write_pos % sbuf,
+                             jnp.minimum(write_pos, sbuf - 1)
+                             ).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=1)
+            out = decode_attention(q, ck, cv, write_pos=write_pos,
+                                   scale=scale,
+                                   cap=cfg.attn_logit_softcap, ring=ring,
+                                   window=0 if ring else window)
+            new_cache = {"k": ck, "v": cv}
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def cache_shape(cfg: ModelConfig, layer_idx: int, batch: int,
+                max_len: int) -> Tuple[int, int, int, int]:
+    """(B, Sbuf, KV, hd) for this layer's cache."""
+    is_global = cfg.layer_is_global_attn(layer_idx)
+    window = 0 if is_global else cfg.sliding_window
+    sbuf = max_len if not window else min(window, max_len)
+    return (batch, sbuf, cfg.n_kv_heads, cfg.head_dim)

@@ -1,0 +1,169 @@
+"""Decoder blocks + the period decomposition used to scan over layers.
+
+Every assigned architecture has a layer pattern that is periodic in the
+layer index (gemma3: 5 local + 1 global, period 6; jamba: attention at
+index 4 of each period-8 block with MoE on odd layers; all others:
+period 1).  We exploit this to keep the lowered HLO small: parameters for
+layer position ``p`` of each period are stacked over the periods and the
+model scans over periods with a body containing exactly ``period`` layers
+(+ an unrolled tail of ``n_layers % period`` layers).  This bounds the HLO
+size by O(2 * period) layers regardless of depth — important for the
+512-device dry-run compiles.
+
+A layer's behaviour is fully determined by its *signature*
+``(kind, is_moe, is_global)`` which is static per position-in-period.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import attention_layer, attn_init, cache_shape
+from repro.models.common import rmsnorm, rmsnorm_init
+from repro.models.mamba import mamba_cache_shapes, mamba_init, mamba_layer
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Period decomposition
+# ---------------------------------------------------------------------------
+
+
+def layer_signature(cfg: ModelConfig, i: int) -> Tuple[str, bool, bool]:
+    return (cfg.layer_kind(i), cfg.layer_is_moe(i),
+            cfg.layer_is_global_attn(i))
+
+
+def find_period(cfg: ModelConfig) -> int:
+    """Smallest p such that signature(i) == signature(i % p) for all i."""
+    n = cfg.n_layers
+    for p in range(1, n + 1):
+        if all(layer_signature(cfg, i) == layer_signature(cfg, i % p)
+               for i in range(n)):
+            return p
+    return n
+
+
+@dataclass(frozen=True)
+class PeriodPlan:
+    period: int
+    n_full: int        # number of scanned periods
+    n_tail: int        # unrolled remainder layers
+
+    @property
+    def n_layers(self) -> int:
+        return self.period * self.n_full + self.n_tail
+
+    def tail_layer_idx(self, j: int) -> int:
+        return self.period * self.n_full + j
+
+
+def make_plan(cfg: ModelConfig) -> PeriodPlan:
+    p = find_period(cfg)
+    return PeriodPlan(period=p, n_full=cfg.n_layers // p,
+                      n_tail=cfg.n_layers % p)
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def layer_has_ffn(cfg: ModelConfig, i: int) -> bool:
+    """SSM-family blocks have no separate FFN; everything else does."""
+    if cfg.family == "ssm":
+        return False
+    return True
+
+
+def layer_init(key, cfg: ModelConfig, layer_idx: int, dtype) -> Params:
+    kind, is_moe, _ = layer_signature(cfg, layer_idx)
+    ks = jax.random.split(key, 2)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = mamba_init(ks[0], cfg, dtype)
+    if layer_has_ffn(cfg, layer_idx):
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if is_moe:
+            p["moe"] = moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def layer_apply(
+    params: Params,
+    x: jnp.ndarray,
+    *,
+    cfg: ModelConfig,
+    layer_idx: int,
+    mode: str,
+    cache: Optional[Params] = None,
+    write_pos=None,
+    q_chunk: int = 256,
+    constrain: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]] = None,
+    max_len: int = 0,
+    delta_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
+    """One decoder block.  Returns (x, new_cache, aux_losses)."""
+    kind, is_moe, _ = layer_signature(cfg, layer_idx)
+    cst = constrain or (lambda v, _name: v)
+    aux: Dict[str, jnp.ndarray] = {}
+
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y, new_cache = attention_layer(
+            params["attn"], h, cfg=cfg, layer_idx=layer_idx, mode=mode,
+            cache=cache, write_pos=write_pos, q_chunk=q_chunk,
+            constrain_kv=lambda v: cst(v, "kv"), max_len=max_len,
+            constrain=cst, delta_cache=delta_cache)
+    else:
+        y, new_cache = mamba_layer(
+            params["ssm"], h, cfg=cfg, mode=mode, cache=cache)
+    x = cst(x + y, "hidden")
+
+    if layer_has_ffn(cfg, layer_idx):
+        h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+        if is_moe:
+            y, aux = moe_apply(
+                params["moe"], h, cfg,
+                constrain_dispatch=lambda v: cst(v, "dispatch"))
+        else:
+            y = mlp_apply(params["mlp"], h, cfg,
+                          constrain_ffn=lambda v: cst(v, "ffn"))
+        x = cst(x + y, "hidden")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (abstract + concrete) for one layer
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_struct(cfg: ModelConfig, layer_idx: int, batch: int,
+                       max_len: int, kv_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree for this layer's decode cache."""
+    kind, _, _ = layer_signature(cfg, layer_idx)
+    if kind == "attn":
+        shp = cache_shape(cfg, layer_idx, batch, max_len)
+        return {"k": jax.ShapeDtypeStruct(shp, kv_dtype),
+                "v": jax.ShapeDtypeStruct(shp, kv_dtype)}
+    shapes = mamba_cache_shapes(cfg, batch)
+    return {"ssm": jax.ShapeDtypeStruct(shapes["ssm"], jnp.float32),
+            "conv": jax.ShapeDtypeStruct(shapes["conv"], kv_dtype)}
+
+
+def layer_cache_init(cfg: ModelConfig, layer_idx: int, batch: int,
+                     max_len: int, kv_dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        layer_cache_struct(cfg, layer_idx, batch, max_len,
+                                           kv_dtype))

@@ -1,0 +1,328 @@
+"""Model assembly: embeddings + period-scanned decoder stack + LM head.
+
+Entry points
+------------
+``init_params(cfg, key)``            parameter pytree (scan-stacked).
+``forward(params, tokens, ...)``     -> (hidden, caches, aux) for
+                                     mode in {"train", "prefill", "decode"}.
+``unembed_logits(params, h, cfg)``   LM-head projection (callers chunk it).
+``init_cache / cache_struct``        decode caches matching the scan layout.
+``param_specs / cache_specs``        PartitionSpec pytrees from ShardingRules.
+
+Parameter layout (see blocks.py for the period decomposition)::
+
+    {"embed": (Vp, D), "unembed": (Vp, D)?, "final_norm": (D,),
+     "scan": {"p0": <stacked over n_full>, ..., "p<period-1>": ...},
+     "tail": {"t0": <single layer>, ...}}
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.blocks import PeriodPlan, make_plan
+from repro.models.common import dtype_of, embed_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import ShardingRules
+
+Params = Dict[str, Any]
+
+_MOE_AUX_KEYS = ("moe_aux_loss", "moe_z_loss", "moe_drop_frac")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    plan = make_plan(cfg)
+    k_embed, k_unembed, k_layers = jax.random.split(key, 3)
+    params: Params = {
+        "embed": embed_init(k_embed, (cfg.padded_vocab, cfg.d_model), dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(
+            k_unembed, (cfg.padded_vocab, cfg.d_model), dtype)
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+
+    scan_groups: Params = {}
+    for p in range(plan.period if plan.n_full else 0):
+        stack = [blocks.layer_init(layer_keys[r * plan.period + p], cfg,
+                                   r * plan.period + p, dtype)
+                 for r in range(plan.n_full)]
+        scan_groups[f"p{p}"] = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *stack)
+    if scan_groups:
+        params["scan"] = scan_groups
+
+    tail: Params = {}
+    for j in range(plan.n_tail):
+        idx = plan.tail_layer_idx(j)
+        tail[f"t{j}"] = blocks.layer_init(layer_keys[idx], cfg, idx, dtype)
+    if tail:
+        params["tail"] = tail
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches (concrete zeros + ShapeDtypeStruct views, matching scan layout)
+# ---------------------------------------------------------------------------
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 kv_dtype=jnp.bfloat16) -> Params:
+    plan = make_plan(cfg)
+    out: Params = {}
+    if plan.n_full:
+        grp = {}
+        for p in range(plan.period):
+            one = blocks.layer_cache_struct(cfg, p, batch, max_len, kv_dtype)
+            grp[f"p{p}"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((plan.n_full,) + s.shape,
+                                               s.dtype), one)
+        out["scan"] = grp
+    if plan.n_tail:
+        out["tail"] = {
+            f"t{j}": blocks.layer_cache_struct(
+                cfg, plan.tail_layer_idx(j), batch, max_len, kv_dtype)
+            for j in range(plan.n_tail)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype=jnp.bfloat16) -> Params:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_len, kv_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _zero_aux(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    if cfg.moe is None:
+        return {}
+    return {k: jnp.zeros((), jnp.float32) for k in _MOE_AUX_KEYS}
+
+
+def _acc_aux(acc, aux):
+    for k, v in aux.items():
+        acc[k] = acc[k] + v.astype(jnp.float32)
+    return acc
+
+
+def _apply_kv_deltas(cfg: ModelConfig, plan, old_scan: Optional[Params],
+                     emitted: Params, write_pos) -> Params:
+    """Batched one-token cache writes for the scanned attention layers.
+
+    emitted[p] is either {"k_new","v_new"} stacks (n_full, B, 1, KV, hd)
+    for attention positions, or the full new state pytree for SSM
+    positions (small, intrinsically rewritten each step)."""
+    out: Params = {}
+    for p_key, grp in emitted.items():
+        if not (isinstance(grp, dict) and "k_new" in grp):
+            out[p_key] = grp
+            continue
+        p = int(p_key[1:])
+        old = old_scan[p_key]
+        sbuf = old["k"].shape[2]
+        window = 0 if cfg.layer_is_global_attn(p) else cfg.sliding_window
+        ring = bool(window) and sbuf == window
+        slot = jnp.where(ring, write_pos % sbuf,
+                         jnp.minimum(write_pos, sbuf - 1)).astype(jnp.int32)
+        zero = jnp.int32(0)
+        starts = (zero, zero, slot, zero, zero)
+        out[p_key] = {
+            "k": jax.lax.dynamic_update_slice(
+                old["k"], grp["k_new"].astype(old["k"].dtype), starts),
+            "v": jax.lax.dynamic_update_slice(
+                old["v"], grp["v_new"].astype(old["v"].dtype), starts),
+        }
+    return out
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                 frontend: Optional[Dict[str, jnp.ndarray]] = None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if frontend:
+        if cfg.frontend == "audio" and "frame_embeds" in frontend:
+            x = x + frontend["frame_embeds"].astype(x.dtype)
+        elif cfg.frontend == "vlm" and "prefix_embeds" in frontend:
+            pe = frontend["prefix_embeds"].astype(x.dtype)
+            x = jax.lax.dynamic_update_slice_in_dim(x, pe, 0, axis=1)
+    return x
+
+
+def unembed_logits(params: Params, h: jnp.ndarray, cfg: ModelConfig):
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,vd->bsv", h, w,
+                      preferred_element_type=jnp.float32)
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,
+    *,
+    cfg: ModelConfig,
+    mode: str = "train",                  # train | prefill | decode
+    caches: Optional[Params] = None,
+    write_pos=None,                       # scalar int32 (decode)
+    frontend: Optional[Dict[str, jnp.ndarray]] = None,
+    constrain: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]] = None,
+    remat: str = "none",                  # none | layer
+    q_chunk: int = 256,
+    max_len: int = 0,                     # cache capacity (prefill)
+) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
+    """tokens: (B, S) int32 -> (hidden (B,S,D), caches', aux)."""
+    plan = make_plan(cfg)
+    cst = constrain or (lambda v, _n: v)
+    x = cst(embed_tokens(params, tokens, cfg, frontend), "hidden")
+    aux = _zero_aux(cfg)
+
+    # decode: scanned attention layers emit one-token (k,v) DELTAS, and
+    # the stacked caches are updated with a single batched write after
+    # the scan — re-emitting whole caches through scan ys copied the
+    # entire KV cache every step (EXPERIMENTS.md §Perf C3)
+    delta = mode == "decode"
+
+    def one_period(x, period_params, period_caches):
+        """Apply layers p0..p<period-1>; returns (x, new_caches, aux)."""
+        new_caches: Params = {}
+        a = _zero_aux(cfg)
+        for p in range(plan.period):
+            c = period_caches[f"p{p}"] if period_caches is not None else None
+            x, nc, la = blocks.layer_apply(
+                period_params[f"p{p}"], x, cfg=cfg, layer_idx=p, mode=mode,
+                cache=c, write_pos=write_pos, q_chunk=q_chunk, constrain=cst,
+                max_len=max_len, delta_cache=delta)
+            if nc is not None:
+                new_caches[f"p{p}"] = nc
+            a = _acc_aux(a, la)
+        return x, new_caches, a
+
+    if plan.n_full:
+        want_cache = mode in ("prefill", "decode")
+
+        def body(carry, xs):
+            x, a = carry
+            pp = xs["params"]
+            pc = xs.get("cache")
+            x, nc, la = one_period(x, pp, pc)
+            return (x, _acc_aux(a, la)), (nc if want_cache else None)
+
+        if remat == "layer" and mode == "train":
+            body = jax.checkpoint(body)
+
+        xs: Params = {"params": params["scan"]}
+        if want_cache:
+            xs["cache"] = (caches or {}).get("scan")
+        (x, aux), scan_caches = jax.lax.scan(body, (x, aux), xs)
+    else:
+        scan_caches = None
+
+    tail_caches: Params = {}
+    for j in range(plan.n_tail):
+        idx = plan.tail_layer_idx(j)
+        c = None
+        if caches is not None and "tail" in caches:
+            c = caches["tail"][f"t{j}"]
+        x, nc, la = blocks.layer_apply(
+            params["tail"][f"t{j}"], x, cfg=cfg, layer_idx=idx, mode=mode,
+            cache=c, write_pos=write_pos, q_chunk=q_chunk, constrain=cst,
+            max_len=max_len)
+        if nc is not None:
+            tail_caches[f"t{j}"] = nc
+        aux = _acc_aux(aux, la)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    x = cst(x, "hidden")
+
+    if delta and scan_caches is not None:
+        scan_caches = _apply_kv_deltas(cfg, plan, (caches or {}).get("scan"),
+                                       scan_caches, write_pos)
+
+    new_caches: Optional[Params] = None
+    if mode in ("prefill", "decode"):
+        new_caches = {}
+        if scan_caches is not None:
+            new_caches["scan"] = scan_caches
+        if tail_caches:
+            new_caches["tail"] = tail_caches
+    if cfg.moe is not None and cfg.n_layers:
+        # means over MoE layers (drop_frac is a mean; losses stay sums
+        # scaled by their weights already applied per layer)
+        n_moe = sum(1 for i in range(cfg.n_layers) if cfg.layer_is_moe(i))
+        if n_moe:
+            aux["moe_drop_frac"] = aux["moe_drop_frac"] / n_moe
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs for params and caches
+# ---------------------------------------------------------------------------
+
+
+def _leaf_path(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(rules: ShardingRules, params: Params):
+    """PartitionSpec pytree; scan-stacked leaves get a leading None axis."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec_for(kp, leaf):
+        path = _leaf_path(kp)
+        if path.startswith("scan/"):
+            base = rules.param_spec(path, leaf.shape[1:])
+            return P(None, *tuple(base))
+        return rules.param_spec(path, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_specs(rules: ShardingRules, struct: Params):
+    """PartitionSpec pytree for a cache pytree (concrete or structs)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec_for(kp, leaf):
+        path = _leaf_path(kp)
+        stacked = path.startswith("scan/")
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        leaf_name = path.split("/")[-1]
+        if leaf_name in ("k", "v"):
+            base = rules.kv_cache_spec()           # (B, S, KV, hd)
+        elif leaf_name == "ssm":
+            base = rules.ssm_state_spec()          # (B, H, P, N)
+        elif leaf_name == "conv":
+            base = P(rules.batch if rules.batch else None, None,
+                     _maybe_axis(rules, shape[-1]))
+        else:
+            base = P(*([None] * len(shape)))
+        return P(None, *tuple(base)) if stacked else base
+
+    return jax.tree_util.tree_map_with_path(spec_for, struct)
+
+
+def _maybe_axis(rules: ShardingRules, dim: int):
+    from repro.parallel.sharding import _maybe
+    return _maybe(rules.tp, dim, rules.mesh)

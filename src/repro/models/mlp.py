@@ -1,0 +1,29 @@
+"""Gated feed-forward (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_gate": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_out": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig, constrain_ffn=None):
+    act = activation(cfg.act_fn)
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    h = h * act(g)
+    if constrain_ffn is not None:
+        h = constrain_ffn(h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

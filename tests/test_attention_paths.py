@@ -1,0 +1,143 @@
+"""Unit tests for the §Perf attention paths: blocked sliding-window,
+one-shot global, and delta-cache decode — each against a dense oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+B, H, KV, HD = 2, 4, 2, 16
+
+
+def _qkv(s, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, s, H, HD)) * 0.5
+    k = jax.random.normal(ks[1], (B, s, KV, HD)) * 0.5
+    v = jax.random.normal(ks[2], (B, s, KV, HD)) * 0.5
+    return q, k, v
+
+
+def _dense_window_oracle(q, k, v, window, scale):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    sc = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    pos = jnp.arange(s)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] -
+                                             window)
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return o.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("s,window,block", [
+    (64, 16, 8), (64, 16, 16), (128, 32, 16), (96, 24, 8),
+    (64, 8, 32),      # block > window
+])
+def test_blocked_window_matches_dense(s, window, block):
+    q, k, v = _qkv(s)
+    scale = HD ** -0.5
+    out = A.window_attention(q, k, v, window=window, scale=scale,
+                             q_chunk=block)
+    ref = _dense_window_oracle(q, k, v, window, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_blocked_window_edge_first_block():
+    """First block's left extent is clipped: positions < window."""
+    q, k, v = _qkv(32, seed=3)
+    out = A.window_attention(q, k, v, window=8, scale=0.25, q_chunk=8)
+    ref = _dense_window_oracle(q, k, v, 8, 0.25)
+    np.testing.assert_allclose(np.asarray(out[:, :8]),
+                               np.asarray(ref[:, :8]), atol=2e-5)
+
+
+@pytest.mark.parametrize("ring", [False, True])
+def test_delta_decode_matches_full_decode(ring):
+    """decode_attention_delta(old_cache, k_new) == decode_attention over
+    the cache with the token written in."""
+    s_buf = 16
+    pos = s_buf - 1 if not ring else s_buf + 5   # ring: wrapped past end
+    window = s_buf if ring else 0
+    q1 = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, HD)) * 0.5
+    ck = jax.random.normal(jax.random.PRNGKey(1), (B, s_buf, KV, HD)) * 0.5
+    cv = jax.random.normal(jax.random.PRNGKey(2), (B, s_buf, KV, HD)) * 0.5
+    kn = jax.random.normal(jax.random.PRNGKey(3), (B, 1, KV, HD)) * 0.5
+    vn = jax.random.normal(jax.random.PRNGKey(4), (B, 1, KV, HD)) * 0.5
+    wp = jnp.int32(pos)
+
+    out_delta = A.decode_attention_delta(
+        q1, ck, cv, kn, vn, write_pos=wp, scale=0.25, ring=ring,
+        window=window if ring else 0)
+
+    slot = pos % s_buf if ring else min(pos, s_buf - 1)
+    ck2 = ck.at[:, slot].set(kn[:, 0])
+    cv2 = cv.at[:, slot].set(vn[:, 0])
+    out_full = A.decode_attention(q1, ck2, cv2, write_pos=wp, scale=0.25,
+                                  ring=ring, window=0)
+    np.testing.assert_allclose(np.asarray(out_delta),
+                               np.asarray(out_full), atol=2e-5)
+
+
+def test_one_shot_matches_chunked_causal():
+    """The S<=8192 one-shot train path equals chunked causal attention."""
+    s = 64
+    q, k, v = _qkv(s, seed=7)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    chunked = A.causal_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                 scale=0.25, q_chunk=16)
+    kv = k.shape[2]
+    mask = pos[None, :] <= pos[:, None]
+    mask = jnp.broadcast_to(mask[None], (B, s, s))
+    one = A._merge_heads(A._gqa_attend(
+        A._split_heads(q, kv), k, v, mask, 0.25, 0.0))
+    np.testing.assert_allclose(np.asarray(one), np.asarray(chunked),
+                               atol=2e-5)
+
+
+def test_movement_bytes_split():
+    """copy/convert-only fusions land in movement_bytes, not bytes."""
+    from repro.analysis import hlo
+    text = """
+%conv_only (p0: bf16[64,64]) -> f32[64,64] {
+  %p0 = bf16[64,64]{1,0} parameter(0)
+  ROOT %cv = f32[64,64]{1,0} convert(%p0)
+}
+
+%real (p1: f32[64,64], p2: f32[64,64]) -> f32[64,64] {
+  %p1 = f32[64,64]{1,0} parameter(0)
+  %p2 = f32[64,64]{1,0} parameter(1)
+  ROOT %m = f32[64,64]{1,0} multiply(%p1, %p2)
+}
+
+ENTRY %e (x: bf16[64,64]) -> f32[64,64] {
+  %x = bf16[64,64]{1,0} parameter(0)
+  %f1 = f32[64,64]{1,0} fusion(%x), kind=kLoop, calls=%conv_only
+  ROOT %f2 = f32[64,64]{1,0} fusion(%f1, %f1), kind=kLoop, calls=%real
+}
+"""
+    cost = hlo.analyze(text)
+    conv_bytes = 64 * 64 * 2 + 64 * 64 * 4
+    assert cost.movement_bytes == conv_bytes
+    assert cost.bytes == 3 * 64 * 64 * 4          # two reads + one write
+
+
+def test_profiler_smoke():
+    from repro.analysis import profile as prof
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 32), jnp.float32),
+                         jax.ShapeDtypeStruct((32, 32), jnp.float32)
+                         ).compile()
+    p = prof.profile(c.as_text())
+    assert p["total_flops"] == 5 * 2 * 8 * 32 * 32
+    assert prof.render(p)

@@ -1,0 +1,138 @@
+"""Checkpointing + fault tolerance: atomicity, async, GC, restore,
+resilient-loop recovery, elastic re-mesh, straggler monitor."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import MANIFEST, CheckpointManager
+from repro.runtime.fault_tolerance import (InjectedFault, ResilientLoop,
+                                           StragglerMonitor, elastic_remesh)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,))},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    s = _state()
+    mgr.save(s, 10)
+    assert mgr.steps() == [10]
+    struct = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), s)
+    r = mgr.restore(struct)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(_state(), 1)
+    bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                      "b": jax.ShapeDtypeStruct((8,), jnp.float32)},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(_state(), 1)
+    # a stale .tmp (killed job) must not be listed or restored
+    stale = os.path.join(str(tmp_path), "step_00000002.tmp")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "x.npy"), "w") as f:
+        f.write("junk")
+    assert mgr.steps() == [1]
+    assert mgr.latest_step() == 1
+    # a directory without manifest (partial rename impossible, but guard)
+    partial = os.path.join(str(tmp_path), "step_00000003")
+    os.makedirs(partial)
+    assert mgr.steps() == [1]
+
+
+def test_gc_keeps_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(_state(s), s)
+    assert mgr.steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(_state(), 5)
+    mgr.wait()
+    assert mgr.steps() == [5]
+    with open(os.path.join(str(tmp_path), "step_00000005",
+                           MANIFEST)) as f:
+        man = json.load(f)
+    assert man["step"] == 5 and "params/w" in man["leaves"]
+
+
+def test_resilient_loop_recovers(tmp_path):
+    """Fault at step 7 -> restore from checkpoint at 5 -> complete."""
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        return {"x": state["x"] + batch}, {"loss": float(state["x"][0])}
+
+    def batch_fn(step):
+        return jnp.full((2,), float(step))
+
+    fired = {"done": False}
+
+    def fault(step):
+        if step == 7 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("chaos")
+
+    mgr = CheckpointManager(str(tmp_path))
+    loop = ResilientLoop(step_fn, batch_fn, mgr, checkpoint_every=5,
+                         fault_hook=fault, async_checkpoint=False)
+    res = loop.run({"x": jnp.zeros((2,))}, 10)
+    assert res.final_step == 10
+    assert res.restarts == 1
+    # deterministic replay: x = sum of 0..9 regardless of the restart
+    final = mgr.restore({"x": jax.ShapeDtypeStruct((2,), jnp.float32)}, 10)
+    np.testing.assert_allclose(np.asarray(final["x"]),
+                               np.full(2, sum(range(10))))
+
+
+def test_resilient_loop_gives_up(tmp_path):
+    def step_fn(state, batch):
+        return state, {}
+
+    def fault(step):
+        raise InjectedFault("always")
+
+    mgr = CheckpointManager(str(tmp_path))
+    loop = ResilientLoop(step_fn, lambda s: None, mgr, max_restarts=2,
+                         fault_hook=fault, async_checkpoint=False)
+    with pytest.raises(InjectedFault):
+        loop.run({"x": jnp.zeros(1)}, 5)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=3.0)
+    for i in range(8):
+        assert mon.record(i, 0.1) is None
+    ev = mon.record(8, 1.0)                 # 10x the median
+    assert ev is not None and ev.step == 8
+    assert len(mon.events) == 1
+
+
+def test_elastic_remesh_single_device():
+    s = {"w": jnp.arange(16.0).reshape(4, 4)}
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = elastic_remesh(s, {"w": sh})
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(s["w"]))

@@ -1,0 +1,182 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import hlo
+from repro.core import simulate as sim
+from repro.core.devicetree import TPU_V5E, ZCU102
+from repro.core.interface import format_experiment, parse_experiment
+from repro.core.pools import PoolError, PoolManager
+from repro.kernels.chase import make_chain
+
+FAST = settings(max_examples=30, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# Sattolo chain: single full cycle for every n, every seed
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(n=st.integers(1, 512), seed=st.integers(0, 2**31 - 1))
+def test_chain_full_cycle(n, seed):
+    nxt = make_chain(n, seed)
+    assert sorted(nxt.tolist()) == list(range(n))     # a permutation
+    idx, seen = 0, 0
+    for _ in range(n):
+        idx = int(nxt[idx])
+        seen += 1
+        if idx == 0:
+            break
+    assert seen == n                                   # single cycle
+
+
+@FAST
+@given(n=st.integers(2, 256), seed=st.integers(0, 1000))
+def test_chain_no_fixed_points(n, seed):
+    """Sattolo guarantees a cyclic permutation: no self-loops."""
+    nxt = make_chain(n, seed)
+    assert not (nxt == np.arange(n)).any()
+
+
+# ---------------------------------------------------------------------------
+# Pool allocator invariants
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(sizes=st.lists(st.integers(1, 1 << 22), min_size=1, max_size=20))
+def test_pool_never_exceeds_capacity(sizes):
+    mgr = PoolManager()
+    pool = mgr.pool("vmem")                  # 128 MiB, smallest real pool
+    live = []
+    for s in sizes:
+        rows = max(1, s // 512)
+        try:
+            live.append(pool.alloc((rows, 128), tag="prop"))
+        except PoolError:
+            assert pool.allocated + rows * 128 * 4 > pool.capacity
+    assert 0 <= pool.allocated <= pool.capacity
+    for a in live:
+        pool.free(a)
+    assert pool.allocated == 0
+
+
+# ---------------------------------------------------------------------------
+# Queueing model: physics invariants for arbitrary scenarios
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    mem=st.sampled_from(["hbm", "host", "peer"]),
+    obs=st.sampled_from(["r", "w", "l"]),
+    stress=st.sampled_from(["r", "w", "y"]),
+)
+def test_ladder_monotonicity(mem, obs, stress):
+    plat = TPU_V5E
+    ladder = sim.scenario_ladder(plat, obs_node=plat.node(mem),
+                                 obs_strategy=obs,
+                                 stress_node=plat.node(mem),
+                                 stress_strategy=stress)
+    bws = [r["obs"].bw_gbps for r in ladder]
+    lats = [r["obs"].lat_ns for r in ladder]
+    for a, b in zip(bws, bws[1:]):
+        assert b <= a * 1.0001
+    for a, b in zip(lats, lats[1:]):
+        assert b >= a * 0.9999
+    # sanity: all positive, below module peak
+    peak = plat.node(mem).peak_bw_gbps
+    traffic = sim.STRATEGY_TRAFFIC[obs]
+    for bw in bws:
+        assert 0 < bw <= peak / max(traffic, 1.0) * 1.0001
+
+
+@FAST
+@given(
+    n_classes=st.integers(1, 4),
+    seed=st.integers(0, 999),
+)
+def test_simulate_throughput_conservation(n_classes, seed):
+    """Sum of station utilizations never exceeds capacity: each class's
+    useful bandwidth <= module peak / traffic multiplier."""
+    rng = np.random.default_rng(seed)
+    plat = ZCU102
+    mems = [m for m in plat.memories.values() if m.kind != "cache"]
+    classes = []
+    for i in range(n_classes):
+        node = mems[rng.integers(len(mems))]
+        strat = ["r", "w", "s", "x", "y"][rng.integers(5)]
+        classes.append(sim.ActivityClass(f"c{i}", node, strat,
+                                         int(rng.integers(1, 4))))
+    res = sim.simulate_scenario(plat, classes)
+    per_mem = {}
+    for c in classes:
+        r = res[c.name]
+        assert r.bw_gbps >= 0 and math.isfinite(r.bw_gbps)
+        assert r.r_ns > 0
+        per_mem.setdefault(c.node.name, 0.0)
+        per_mem[c.node.name] += r.bw_gbps * sim.STRATEGY_TRAFFIC[c.strategy]
+    for mem_name, raw_bw in per_mem.items():
+        assert raw_bw <= plat.memories[mem_name].peak_bw_gbps * 1.01
+
+
+# ---------------------------------------------------------------------------
+# Interface grammar roundtrip
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    strat1=st.sampled_from(list("rwlsxmy")),
+    strat2=st.sampled_from(list("rwlsxmyi")),
+    pool1=st.sampled_from(["hbm", "host", "vmem", "peer"]),
+    pool2=st.sampled_from(["hbm", "host"]),
+    nbytes=st.integers(1, 1 << 28),
+    iters=st.integers(1, 10_000),
+)
+def test_experiment_string_roundtrip(strat1, strat2, pool1, pool2, nbytes,
+                                     iters):
+    cfg = parse_experiment(
+        f"{strat1},{pool1},{nbytes} {strat2},{pool2},{nbytes} "
+        f"iters={iters}")
+    cfg2 = parse_experiment(format_experiment(cfg))
+    assert cfg2 == cfg
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parsing
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    dt=st.sampled_from(["f32", "bf16", "s32", "u8", "pred", "f16"]),
+    dims=st.lists(st.integers(1, 4096), min_size=0, max_size=4),
+)
+def test_shape_bytes(dt, dims):
+    text = f"{dt}[{','.join(map(str, dims))}]{{{','.join('0' * 0)}}}"
+    expect = int(np.prod(dims)) if dims else 1
+    expect *= hlo.DTYPE_BYTES[dt]
+    assert hlo.shape_bytes(text) == expect
+
+
+@FAST
+@given(
+    m=st.integers(1, 64), n=st.integers(1, 64), k=st.integers(1, 64),
+)
+def test_dot_flops_parse(m, n, k):
+    text = f"""
+ENTRY %main (p0: f32[{m},{k}], p1: f32[{k},{n}]) -> f32[{m},{n}] {{
+  %p0 = f32[{m},{k}]{{1,0}} parameter(0)
+  %p1 = f32[{k},{n}]{{1,0}} parameter(1)
+  ROOT %dot = f32[{m},{n}]{{1,0}} dot(%p0, %p1), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+    cost = hlo.analyze(text)
+    assert cost.flops == 2.0 * m * n * k
