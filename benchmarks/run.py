@@ -10,7 +10,8 @@ import traceback
 from benchmarks import (fig4_homogeneous_bw, fig5_homogeneous_lat,
                         fig6_7_heterogeneous, fig8_9_scratchpad,
                         fig10_validation, fig11_13_partition,
-                        fig14_applications, roofline, tab2_3_mlp)
+                        fig14_applications, roofline, scenario_matrix,
+                        tab2_3_mlp)
 
 SUITES = [
     ("fig4_homogeneous_bw", fig4_homogeneous_bw.main),
@@ -21,6 +22,7 @@ SUITES = [
     ("fig10_validation", fig10_validation.main),
     ("fig11_13_partition", fig11_13_partition.main),
     ("fig14_applications", fig14_applications.main),
+    ("scenario_matrix", scenario_matrix.main),
     ("roofline", roofline.main),
 ]
 

@@ -1,6 +1,7 @@
 """While-aware HLO cost parser.
 
-``compiled.cost_analysis()`` counts each ``while`` body **once**, but our
+XLA's compiled-program cost analysis counts each ``while`` body **once**,
+but our
 models deliberately scan over layer periods / microbatches / q-chunks to
 keep the HLO small (see models/blocks.py) — so XLA's numbers can be off
 by the total trip-count product (e.g. 34 layers x 8 microbatches).  This

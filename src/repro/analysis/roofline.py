@@ -99,6 +99,21 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     return 2.0 * n_active * shape.global_batch
 
 
+def effective_hbm_bw(curve_db, *, n_stressors: int = 0,
+                     stress_pool: str = "hbm", stress_strategy: str = "w",
+                     shape_tag: str = "") -> float:
+    """HBM bandwidth under characterized contention, bytes/s.
+
+    Consumes a CurveDB (v1 or v2; v2 resolves shaped-stress curves by
+    tag): the roofline's memory term is only honest under load if it
+    uses the *effective* bandwidth the characterization measured, not
+    the datasheet peak."""
+    bw_gbps = curve_db.effective_bw(
+        "hbm", n_stressors, stress_pool=stress_pool,
+        stress_strat=stress_strategy, shape_tag=shape_tag)
+    return bw_gbps * 1e9
+
+
 def compute_terms(
     cost: HloCost,
     *,
@@ -108,9 +123,11 @@ def compute_terms(
     n_devices: int,
     bytes_per_device: int = 0,
     note: str = "",
+    hbm_bw: Optional[float] = None,     # e.g. effective_hbm_bw(curve_db)
 ) -> RooflineTerms:
     mf = model_flops(cfg, shape)
     total_hlo_flops = cost.flops * n_devices
+    mem_bw = hbm_bw if hbm_bw else HBM_BW
     t = RooflineTerms(
         arch=cfg.name, shape=shape.name, mesh=mesh_desc,
         n_devices=n_devices,
@@ -119,7 +136,7 @@ def compute_terms(
         collective_bytes=cost.collective_bytes,
         collective_by_kind=cost.collective_summary(),
         t_compute=cost.flops / PEAK_FLOPS,
-        t_memory=cost.bytes / HBM_BW,
+        t_memory=cost.bytes / mem_bw,
         t_collective=cost.collective_bytes / (ICI_BW * N_ICI_LINKS),
         model_flops=mf,
         useful_ratio=(mf / total_hlo_flops) if total_hlo_flops else 0.0,

@@ -1,0 +1,181 @@
+"""JAX version-compat shims — the ONLY place allowed to touch
+version-sensitive JAX symbols.
+
+Policy (see README "Compat layer"): the JAX surface this repo needs has
+drifted repeatedly across releases —
+
+* ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+  exist only on newer JAX; older releases have neither.
+* ``jax.shard_map`` graduated from ``jax.experimental.shard_map``.
+* Pallas-TPU compiler params were renamed
+  ``TPUCompilerParams`` -> ``CompilerParams``.
+* Memory-kind shardings (``memory_kind="pinned_host"``) are only
+  constructible when the backend actually exposes that memory space.
+
+Every other module imports the helpers below instead of reaching into
+``jax.experimental`` / ``jax.sharding`` version-sensitive namespaces
+directly; the grep lint in ``tests/test_compat.py`` fails the suite if
+a drift-prone symbol appears outside this file.
+
+Everything here resolves lazily (no module-level jax state) so
+importing compat never touches jax device initialisation — the dry-run
+sets ``xla_force_host_platform_device_count`` first.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction (AxisType drift)
+# ---------------------------------------------------------------------------
+
+
+def axis_type_auto() -> Any:
+    """``jax.sharding.AxisType.Auto`` where it exists, else ``None``."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return getattr(at, "Auto", None) if at is not None else None
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], *,
+              devices: Optional[Sequence[Any]] = None):
+    """``jax.make_mesh`` with Auto axis types when the installed JAX
+    supports them, silently without when it does not (older JAX treats
+    every axis as Auto anyway)."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    auto = axis_type_auto()
+    kw = {} if devices is None else {"devices": devices}
+    if auto is not None and hasattr(jax, "make_mesh"):
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(auto,) * len(axes), **kw)
+        except TypeError:        # make_mesh predates axis_types kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, **kw)
+    # pre-make_mesh JAX: build the Mesh by hand
+    devs = np.array(devices if devices is not None
+                    else jax.devices()[:int(np.prod(shape))])
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+def make_mesh_from_devices(devices: Sequence[Any], axes: Sequence[str]):
+    """1-D (or reshaped) explicit-device mesh."""
+    return jax.sharding.Mesh(np.array(devices), tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# shard_map (experimental -> top-level graduation)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental import shard_map as _esm
+    return _esm.shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    """Version-portable ``shard_map`` (keyword-only, both signatures)."""
+    return _resolve_shard_map()(f, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, **kw)
+
+
+def pvary(x, axes):
+    """``jax.lax.pvary`` where it exists (newer shard_map replication
+    typing); identity on older JAX, where values are device-varying by
+    default and no marker is needed."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU compiler params (TPUCompilerParams -> CompilerParams rename)
+# ---------------------------------------------------------------------------
+
+
+def tpu_compiler_params(**kw) -> Any:
+    """Construct Pallas-TPU compiler params under either name.
+
+    Returns ``None`` when neither class exists (pure-interpret installs);
+    ``pallas_call`` accepts ``compiler_params=None``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(**kw)
+    except TypeError:
+        # field drift inside the params class: drop unknown kwargs
+        import inspect
+        ok = set(inspect.signature(cls).parameters)
+        return cls(**{k: v for k, v in kw.items() if k in ok})
+
+
+# ---------------------------------------------------------------------------
+# Compiled-program cost analysis (list-of-dicts -> dict drift)
+# ---------------------------------------------------------------------------
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX version
+    (older releases return a one-element list of per-program dicts)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+# ---------------------------------------------------------------------------
+# Memory-kind shardings (HBM vs pinned-host placement)
+# ---------------------------------------------------------------------------
+
+
+def device_memory_kinds(device) -> Tuple[str, ...]:
+    try:
+        return tuple(m.kind for m in device.addressable_memories())
+    except Exception:
+        return ()
+
+
+def single_device_sharding(device, memory_kind: Optional[str] = None):
+    """SingleDeviceSharding with ``memory_kind`` when the device can
+    address it, plain default-memory sharding otherwise (CPU containers
+    model host placement; they cannot materialise it)."""
+    if memory_kind is not None and memory_kind in device_memory_kinds(device):
+        try:
+            return jax.sharding.SingleDeviceSharding(
+                device, memory_kind=memory_kind)
+        except (TypeError, ValueError, RuntimeError):
+            pass
+    return jax.sharding.SingleDeviceSharding(device)
+
+
+def named_sharding(mesh, spec, memory_kind: Optional[str] = None):
+    """NamedSharding with the same graceful memory-kind degradation."""
+    if memory_kind is not None:
+        kinds = device_memory_kinds(mesh.devices.flat[0])
+        if memory_kind in kinds:
+            try:
+                return jax.sharding.NamedSharding(
+                    mesh, spec, memory_kind=memory_kind)
+            except (TypeError, ValueError, RuntimeError):
+                pass
+    return jax.sharding.NamedSharding(mesh, spec)

@@ -1,23 +1,32 @@
 """Characterization driver — performance curves + Little's-law MLP.
 
-Runs the full cross-product of scenario ladders (obs pool x obs strategy
-x stress pool x stress strategy), persists the resulting *performance
-curves* (the right-hand side of the paper's Fig. 1), and derives the
-memory-level parallelism of each module via Little's law
-(Tables II/III):  MLP = latency[ns/Tx] x bandwidth[Tx/ns].
+v2: scenarios are declarative (:mod:`repro.core.scenarios`).  The
+default matrix reproduces the seed's ladder cross-product (obs pool x
+obs strategy x stress pool x stress strategy) and extends it with the
+new traffic shapes (mixed read/write ratios, bursty/duty-cycled stress,
+copy streams, strided chases).  Execution goes through the coordinator's
+batched matrix runner — same-signature observers collapse into one
+jit'd vmapped measured pass per group.
 
-The resulting :class:`CurveDB` is the contract consumed by the
-:mod:`repro.core.placement` advisor.
+Results persist as a **versioned CurveDB** (schema 2): besides the
+per-scenario curves it records each curve's full scenario provenance
+(strategy letters, shape parameters, buffer sizes), so a curve file is
+self-describing and replayable.  Schema-1 files (the seed format) still
+load.  The CurveDB is the contract consumed by
+:mod:`repro.core.placement`, :mod:`repro.analysis.roofline` and the
+``benchmarks/fig*`` scripts.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
-from repro.core.coordinator import (ActivitySpec, CoreCoordinator,
-                                    ExperimentConfig)
+from repro.core.coordinator import CoreCoordinator, MatrixResult
 from repro.core.devicetree import Platform
+from repro.core.scenarios import (SCHEMA_VERSION, ObserverSpec, ScenarioSpec,
+                                  StressorSpec, TrafficShape,
+                                  scenario_matrix)
 
 Key = Tuple[str, str, str, str]   # (obs_pool, obs_strat, stress_pool, stress_strat)
 
@@ -33,31 +42,49 @@ class CurvePoint:
 class CurveDB:
     platform: str
     curves: Dict[str, List[CurvePoint]] = field(default_factory=dict)
+    schema: int = SCHEMA_VERSION
+    # per-curve scenario provenance (v2): key -> ScenarioSpec.to_dict()
+    provenance: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
 
     @staticmethod
     def key(obs_pool: str, obs_strat: str, stress_pool: str,
-            stress_strat: str) -> str:
-        return f"{obs_pool}:{obs_strat}|{stress_pool}:{stress_strat}"
+            stress_strat: str, shape_tag: str = "") -> str:
+        base = f"{obs_pool}:{obs_strat}|{stress_pool}:{stress_strat}"
+        return f"{base}@{shape_tag}" if shape_tag else base
 
     def get(self, obs_pool: str, obs_strat: str, stress_pool: str,
-            stress_strat: str) -> List[CurvePoint]:
+            stress_strat: str, shape_tag: str = "") -> List[CurvePoint]:
         return self.curves[self.key(obs_pool, obs_strat, stress_pool,
-                                    stress_strat)]
+                                    stress_strat, shape_tag)]
 
     # -- the numbers placement cares about --------------------------------
     def effective_bw(self, pool: str, n_stressors: int,
                      stress_pool: Optional[str] = None,
-                     strat: str = "r", stress_strat: str = "w") -> float:
-        pts = self.get(pool, strat, stress_pool or pool, stress_strat)
+                     strat: str = "r", stress_strat: str = "w",
+                     shape_tag: str = "") -> float:
+        pts = self._lookup(pool, strat, stress_pool or pool, stress_strat,
+                           shape_tag)
         k = min(n_stressors, len(pts) - 1)
         return pts[k].bandwidth_gbps
 
     def effective_lat(self, pool: str, n_stressors: int,
                       stress_pool: Optional[str] = None,
-                      stress_strat: str = "w") -> float:
-        pts = self.get(pool, "l", stress_pool or pool, stress_strat)
+                      stress_strat: str = "w",
+                      shape_tag: str = "") -> float:
+        pts = self._lookup(pool, "l", stress_pool or pool, stress_strat,
+                           shape_tag)
         k = min(n_stressors, len(pts) - 1)
         return pts[k].latency_ns
+
+    def _lookup(self, pool, strat, stress_pool, stress_strat,
+                shape_tag) -> List[CurvePoint]:
+        """Shaped curve when characterized, steady fallback otherwise."""
+        if shape_tag:
+            k = self.key(pool, strat, stress_pool, stress_strat, shape_tag)
+            if k in self.curves:
+                return self.curves[k]
+        return self.get(pool, strat, stress_pool, stress_strat)
 
     # -- Little's law -------------------------------------------------------
     def mlp(self, pool: str, line_bytes: int,
@@ -71,18 +98,26 @@ class CurveDB:
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:
         with open(path, "w") as f:
-            json.dump({"platform": self.platform,
+            json.dump({"schema": self.schema,
+                       "platform": self.platform,
                        "curves": {k: [asdict(p) for p in v]
-                                  for k, v in self.curves.items()}}, f,
-                      indent=1)
+                                  for k, v in self.curves.items()},
+                       "provenance": self.provenance,
+                       "meta": self.meta}, f, indent=1)
 
     @staticmethod
     def load(path: str) -> "CurveDB":
         with open(path) as f:
             d = json.load(f)
+        # schema 1 (the seed format) has no "schema" key and no
+        # provenance — load it as-is so old curve files keep working
+        schema = int(d.get("schema", 1))
         return CurveDB(platform=d["platform"],
                        curves={k: [CurvePoint(**p) for p in v]
-                               for k, v in d["curves"].items()})
+                               for k, v in d["curves"].items()},
+                       schema=schema,
+                       provenance=d.get("provenance", {}),
+                       meta=d.get("meta", {}))
 
 
 DEFAULT_BW_STRATS = ("r", "w")
@@ -99,33 +134,75 @@ def characterize(
     buffer_bytes: int = 256 << 20,
     obs_strategies: Tuple[str, ...] = DEFAULT_BW_STRATS + ("l",),
     stress_strategies: Tuple[str, ...] = DEFAULT_STRESS_STRATS,
+    stress_shapes: Optional[
+        Iterable[Tuple[str, TrafficShape]]] = None,
     iters: int = 500,
+    batched: bool = True,
 ) -> CurveDB:
-    """Run the full ladder cross-product and build the curve database."""
+    """Build the curve database for the scenario matrix.
+
+    Default matrix = the seed's steady cross-product (so existing
+    consumers see identical keys); pass ``stress_shapes`` — e.g.
+    :data:`repro.core.scenarios.DEFAULT_STRESS_SHAPES` — to add shaped
+    stressor scenarios (mixed r/w ratios, bursts, copies, strided
+    chases) on top.
+    """
     platform = coord.platform
     pool_names = list(pools) if pools is not None else [
         p.node.name for p in coord.pools.pools()
         if p.node.kind != "vmem"]      # vmem probed via small buffers
-    db = CurveDB(platform=platform.name)
-    for obs_pool in pool_names:
-        cap = coord.pools.pool(obs_pool).node.size_bytes
+    shapes: List[Tuple[str, TrafficShape]] = [
+        (s, TrafficShape.steady()) for s in stress_strategies]
+    if stress_shapes is not None:
+        for pair in stress_shapes:
+            if pair not in shapes:
+                shapes.append(pair)
+
+    specs: List[ScenarioSpec] = []
+    for op in pool_names:
+        cap = coord.pools.pool(op).node.size_bytes
         nbytes = min(buffer_bytes, cap // 2)
-        for obs_strat in obs_strategies:
-            for stress_pool in pool_names:
-                s_cap = coord.pools.pool(stress_pool).node.size_bytes
+        for ostrat in obs_strategies:
+            for sp in pool_names:
+                s_cap = coord.pools.pool(sp).node.size_bytes
                 s_bytes = min(buffer_bytes, s_cap // 2)
-                for stress_strat in stress_strategies:
-                    res = coord.run(ExperimentConfig(
-                        main=ActivitySpec(obs_strat, obs_pool, nbytes),
-                        stress=ActivitySpec(stress_strat, stress_pool,
-                                            s_bytes),
-                        iters=iters))
-                    pts = [CurvePoint(s.n_stressors,
-                                      s.modeled_bw_gbps,
-                                      s.modeled_lat_ns)
-                           for s in res.scenarios]
-                    db.curves[CurveDB.key(obs_pool, obs_strat,
-                                          stress_pool, stress_strat)] = pts
+                for sstrat, shape in shapes:
+                    spec = ScenarioSpec(
+                        name=f"{op}.{ostrat}|{sp}.{sstrat}"
+                             f"{('@' + shape.tag()) if shape.tag() else ''}",
+                        observer=ObserverSpec(ostrat, op, (nbytes,)),
+                        stressors=(StressorSpec(sstrat, sp, s_bytes,
+                                                shape),),
+                        iters=iters)
+                    specs.append(spec)
+    return characterize_matrix(coord, specs, batched=batched)
+
+
+def characterize_matrix(coord: CoreCoordinator,
+                        specs: List[ScenarioSpec], *,
+                        batched: bool = True) -> CurveDB:
+    """Run an explicit scenario matrix and persist it as CurveDB v2."""
+    result: MatrixResult = coord.run_matrix(specs, batched=batched)
+    db = CurveDB(platform=coord.platform.name)
+    db.meta = {
+        "backend": coord.backend,
+        "n_scenarios": result.stats.n_scenarios,
+        "measure_dispatches": result.stats.measure_dispatches,
+        "model_evals": result.stats.model_evals,
+    }
+    for run in result.runs:
+        pts = [CurvePoint(s.n_stressors, s.modeled_bw_gbps,
+                          s.modeled_lat_ns) for s in run.scenarios]
+        spec_dict = run.spec.to_dict()
+        if run.key in db.curves and db.provenance[run.key] != spec_dict:
+            # distinct specs aliasing one key (e.g. shape tags rounding
+            # to the same spelling) must not silently overwrite curves
+            raise ValueError(
+                f"curve key collision: {run.key!r} produced by both "
+                f"{db.provenance[run.key]['name']!r} and "
+                f"{run.spec.name!r}")
+        db.curves[run.key] = pts
+        db.provenance[run.key] = spec_dict
     return db
 
 

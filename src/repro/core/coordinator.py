@@ -41,7 +41,11 @@ import numpy as np
 from repro.core import simulate as sim
 from repro.core.devicetree import Platform, detect_platform
 from repro.core.pools import MemoryPool, PoolManager
-from repro.core.workloads import Workload, WorkloadResult, make_workload
+from repro.core.scenarios import (ObserverSpec, ScenarioSpec, StressorSpec,
+                                  TrafficShape)
+from repro.core.workloads import (Workload, WorkloadResult,
+                                  make_shaped_workload, make_workload,
+                                  measure_group)
 
 # ---------------------------------------------------------------------------
 
@@ -51,9 +55,34 @@ class ActivitySpec:
     strategy: str              # Table-I letter
     pool: str                  # pool name ("hbm", "host", ...)
     buffer_bytes: int
+    # optional traffic-shape parameters (ScenarioSpec DSL; the defaults
+    # reproduce the seed's steady streams exactly)
+    read_fraction: Optional[float] = None   # mixed r/w ratio
+    duty_cycle: float = 1.0                 # bursty/duty-cycled
+    stride: int = 1                         # strided pointer-chase
 
     def describe(self) -> str:
         return f"({self.strategy},{self.pool},{self.buffer_bytes >> 10}K)"
+
+    def shape(self) -> Optional[TrafficShape]:
+        """The TrafficShape these fields encode (None = steady)."""
+        if self.read_fraction is not None:
+            return TrafficShape(kind="mixed",
+                                read_fraction=self.read_fraction)
+        if self.duty_cycle < 1.0:
+            return TrafficShape(kind="burst", duty_cycle=self.duty_cycle)
+        if self.stride > 1:
+            return TrafficShape(kind="strided", stride=self.stride)
+        return None
+
+    @staticmethod
+    def from_stressor(s: StressorSpec) -> "ActivitySpec":
+        return ActivitySpec(
+            s.strategy, s.pool, s.buffer_bytes,
+            read_fraction=(s.shape.read_fraction
+                           if s.shape.kind == "mixed" else None),
+            duty_cycle=s.shape.duty_cycle,
+            stride=s.shape.stride)
 
 
 @dataclass(frozen=True)
@@ -140,8 +169,9 @@ class CoreCoordinator:
 
         measured: Optional[WorkloadResult] = None
         if self.backend in ("interpret", "tpu"):
-            wl = make_workload(cfg.main.strategy, main_pool,
-                               cfg.main.buffer_bytes)
+            wl = make_shaped_workload(cfg.main.strategy, main_pool,
+                                      cfg.main.buffer_bytes,
+                                      cfg.main.shape())
             try:
                 measured = wl.run(cfg.iters)
             finally:
@@ -170,10 +200,16 @@ class CoreCoordinator:
                                     other=cfg.stress, other_engines=k)
         stress_node = self._model_node(cfg.stress, stress_pool,
                                        other=cfg.main, other_engines=1)
-        classes = [sim.ActivityClass("obs", obs_node, cfg.main.strategy, 1)]
+        classes = [sim.ActivityClass(
+            "obs", obs_node, cfg.main.strategy, 1,
+            read_fraction=cfg.main.read_fraction,
+            duty_cycle=cfg.main.duty_cycle, stride=cfg.main.stride)]
         if k and cfg.stress.strategy != "i":
             classes.append(sim.ActivityClass(
-                "stress", stress_node, cfg.stress.strategy, k))
+                "stress", stress_node, cfg.stress.strategy, k,
+                read_fraction=cfg.stress.read_fraction,
+                duty_cycle=cfg.stress.duty_cycle,
+                stride=cfg.stress.stride))
         res = sim.simulate_scenario(self.platform, classes)
         obs = res.get("obs")
         stress = res.get("stress")
@@ -182,7 +218,7 @@ class CoreCoordinator:
                 stress.bw_gbps if stress else 0.0)
 
     # -- cache semantics ------------------------------------------------------
-    _CACHEABLE = ("r", "w", "l")
+    _CACHEABLE = ("r", "w", "l", "c", "b")
 
     def _model_node(self, spec: ActivitySpec, pool: MemoryPool,
                     other: Optional[ActivitySpec] = None,
@@ -225,6 +261,194 @@ class CoreCoordinator:
         return self.run(ExperimentConfig(main=main, stress=stress,
                                          iters=iters))
 
+    # ==================================================================
+    # ScenarioSpec matrix execution (the v2 characterization engine)
+    # ==================================================================
+
+    def validate_spec(self, spec: ScenarioSpec) -> None:
+        from repro.core.workloads import _REGISTRY
+        obs = spec.observer
+        if obs.strategy not in _REGISTRY:
+            raise ValidationError(
+                f"{spec.name}: unknown observer strategy "
+                f"{obs.strategy!r}")
+        pool = self.pools.pool(obs.pool)
+        for b in obs.buffers:
+            if obs.strategy != "i" and b > pool.available:
+                raise ValidationError(
+                    f"{spec.name}: observer buffer {b}B exceeds pool "
+                    f"{obs.pool} ({pool.available}B free)")
+        for s in spec.stressors:
+            if s.strategy not in _REGISTRY:
+                raise ValidationError(
+                    f"{spec.name}: unknown stressor strategy "
+                    f"{s.strategy!r}")
+            self.pools.pool(s.pool)
+        if spec.iters <= 0:
+            raise ValidationError(f"{spec.name}: iters must be positive")
+        if spec.max_stressors is not None and not (
+                0 <= spec.max_stressors < self.platform.n_engines):
+            raise ValidationError(
+                f"{spec.name}: max_stressors out of "
+                f"[0, {self.platform.n_engines})")
+
+    def _obs_activity(self, spec: ScenarioSpec,
+                      buffer_bytes: int) -> ActivitySpec:
+        sh = spec.observer.shape
+        return ActivitySpec(
+            spec.observer.strategy, spec.observer.pool, buffer_bytes,
+            read_fraction=(sh.read_fraction if sh.kind == "mixed"
+                           else None),
+            duty_cycle=sh.duty_cycle, stride=sh.stride)
+
+    def _model_spec_scenario(self, spec: ScenarioSpec, buffer_bytes: int,
+                             k: int) -> Tuple[float, float, float]:
+        """Model one rung of the ladder: observer + k stress engines
+        distributed round-robin over the stressor ensemble."""
+        obs_act = self._obs_activity(spec, buffer_bytes)
+        obs_pool = self.pools.pool(spec.observer.pool)
+        first = spec.stressors[0] if spec.stressors else None
+        obs_node = self._model_node(
+            obs_act, obs_pool,
+            other=ActivitySpec.from_stressor(first) if first else None,
+            other_engines=k)
+        classes = [sim.ActivityClass(
+            "obs", obs_node, obs_act.strategy, 1,
+            read_fraction=obs_act.read_fraction,
+            duty_cycle=obs_act.duty_cycle, stride=obs_act.stride)]
+        m = len(spec.stressors)
+        if k and m:
+            share = [k // m + (1 if j < k % m else 0) for j in range(m)]
+            for j, (s, e) in enumerate(zip(spec.stressors, share)):
+                if e == 0 or s.strategy == "i":
+                    continue
+                act = ActivitySpec.from_stressor(s)
+                node = self._model_node(act, self.pools.pool(s.pool),
+                                        other=obs_act, other_engines=1)
+                classes.append(sim.ActivityClass(
+                    f"stress{j}", node, s.strategy, e,
+                    read_fraction=act.read_fraction,
+                    duty_cycle=act.duty_cycle, stride=act.stride))
+        res = sim.simulate_scenario(self.platform, classes)
+        obs = res.get("obs")
+        stress_bw = sum(r.bw_gbps for n, r in res.items()
+                        if n.startswith("stress"))
+        return (obs.bw_gbps if obs else 0.0,
+                obs.lat_ns if obs else 0.0,
+                stress_bw)
+
+    def run_matrix(self, specs: List[ScenarioSpec], *,
+                   batched: bool = True) -> "MatrixResult":
+        """Execute a scenario matrix.
+
+        The measured observer pass is where executable backends spend
+        their dispatches; ``batched=True`` groups same-signature
+        observers (strategy, shape, row count, residency, pool) and
+        measures each group with ONE jit'd vmapped pass, instead of the
+        naive one-dispatch-per-scenario Python loop.  The contention
+        ladder itself is modeled per scenario on every backend (single
+        real device)."""
+        for spec in specs:
+            self.validate_spec(spec)
+        pairs = [(spec, b) for spec in specs
+                 for b in spec.observer.buffers]
+        stats = DispatchStats(n_scenarios=len(pairs))
+
+        measured: Dict[int, WorkloadResult] = {}
+        if self.backend in ("interpret", "tpu"):
+            measured = self._measure_pairs(pairs, batched, stats)
+
+        runs: List[ScenarioRun] = []
+        for i, (spec, buf) in enumerate(pairs):
+            n_scen = (spec.max_stressors + 1
+                      if spec.max_stressors is not None
+                      else self.platform.n_engines)
+            n_scen = min(n_scen, self.platform.n_engines)
+            main_res = measured.get(i) or WorkloadResult(
+                spec.observer.strategy, spec.observer.pool, buf,
+                spec.iters, 0, 0.0, 0)
+            scenarios = []
+            for k in range(n_scen):
+                bw, lat, sbw = self._model_spec_scenario(spec, buf, k)
+                stats.model_evals += 1
+                scenarios.append(ScenarioResult(
+                    n_stressors=k, main=main_res, modeled_bw_gbps=bw,
+                    modeled_lat_ns=lat, stress_bw_gbps=sbw))
+            runs.append(ScenarioRun(spec=spec, buffer_bytes=buf,
+                                    key=spec.key(buf),
+                                    scenarios=scenarios))
+        return MatrixResult(runs=runs, stats=stats)
+
+    def _measure_pairs(self, pairs, batched: bool,
+                       stats: "DispatchStats") -> Dict[int, WorkloadResult]:
+        """The measured observer pass over all (spec, buffer) pairs."""
+        measured: Dict[int, WorkloadResult] = {}
+        if not batched:
+            for i, (spec, buf) in enumerate(pairs):
+                wl = make_shaped_workload(
+                    spec.observer.strategy,
+                    self.pools.pool(spec.observer.pool), buf,
+                    spec.observer.shape)
+                try:
+                    measured[i] = wl.run(spec.iters)
+                finally:
+                    wl.release()
+                stats.measure_dispatches += 1
+            return measured
+
+        groups: Dict[Tuple, List[int]] = {}
+        for i, (spec, buf) in enumerate(pairs):
+            obs = spec.observer
+            sig = (obs.strategy, obs.shape, obs.pool, buf)
+            groups.setdefault(sig, []).append(i)
+        for (strategy, shape, pool_name, buf), idxs in groups.items():
+            iters = max(pairs[i][0].iters for i in idxs)
+            results, dispatches = measure_group(
+                strategy, self.pools.pool(pool_name), buf, len(idxs),
+                iters, shape=shape)
+            stats.measure_dispatches += dispatches
+            for i, res in zip(idxs, results):
+                measured[i] = res
+        return measured
+
+
+# ---------------------------------------------------------------------------
+# Matrix-run result containers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ScenarioRun:
+    """One (scenario, observer-buffer) ladder."""
+    spec: ScenarioSpec
+    buffer_bytes: int
+    key: str
+    scenarios: List[ScenarioResult] = field(default_factory=list)
+
+    def bandwidth_curve(self) -> List[Tuple[int, float]]:
+        return [(s.n_stressors, s.modeled_bw_gbps or s.main.bandwidth_gbps)
+                for s in self.scenarios]
+
+    def latency_curve(self) -> List[Tuple[int, float]]:
+        return [(s.n_stressors, s.modeled_lat_ns or s.main.latency_ns)
+                for s in self.scenarios]
+
+
+@dataclass
+class DispatchStats:
+    """Execution accounting for the matrix runner: the batched runner's
+    claim ("fewer dispatches than the per-point loop") is checked
+    against these numbers in the tests."""
+    n_scenarios: int = 0
+    measure_dispatches: int = 0     # timed executable kernel passes
+    model_evals: int = 0            # queueing-network solves
+
+
+@dataclass
+class MatrixResult:
+    runs: List[ScenarioRun] = field(default_factory=list)
+    stats: DispatchStats = field(default_factory=DispatchStats)
+
 
 # ---------------------------------------------------------------------------
 # The SPMD scenario program (the spin-lock sandwich, collective edition).
@@ -239,11 +463,12 @@ def build_scenario_program(n_engines: int, n_stressors: int,
     ``shard_map`` over an ("engine",) mesh: engine 0 = observed, engines
     1..n_stressors = stress, rest idle.  The measured region is fenced by
     two psum barriers (invariants 1-4 above)."""
-    from jax.sharding import Mesh, PartitionSpec as P
-    shard_map = jax.shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
 
     devs = jax.devices()[:n_engines]
-    mesh = Mesh(np.array(devs), ("engine",))
+    mesh = compat.make_mesh_from_devices(devs, ("engine",))
 
     def per_engine(main_x, stress_x):
         eng = jax.lax.axis_index("engine")
@@ -267,7 +492,7 @@ def build_scenario_program(n_engines: int, n_stressors: int,
         done = jax.lax.psum(jnp.ones((), jnp.int32), "engine")
         return out, ready + done
 
-    f = shard_map(per_engine, mesh=mesh,
-                  in_specs=(P("engine"), P("engine")),
-                  out_specs=(P("engine"), P()))
+    f = compat.shard_map(per_engine, mesh=mesh,
+                         in_specs=(P("engine"), P("engine")),
+                         out_specs=(P("engine"), P()))
     return mesh, f

@@ -43,10 +43,24 @@ class MemObject:
 
 @dataclass(frozen=True)
 class ContentionSpec:
-    """Expected background load while this application runs."""
+    """Expected background load while this application runs.
+
+    ``stress_shape_tag`` selects a shaped curve from a CurveDB v2
+    (e.g. ``"rf0.50"`` for a 1:1 read/write mix, ``"dc0.50"`` for a
+    50%-duty burst — see ``TrafficShape.tag()``); the lookup falls
+    back to the steady curve when the shaped one was not characterized.
+    """
     n_stressors: int = 0
     stress_pool: str = "hbm"
     stress_strategy: str = "w"
+    stress_shape_tag: str = ""
+
+    @staticmethod
+    def shaped(n_stressors: int, stress_pool: str, stress_strategy: str,
+               shape) -> "ContentionSpec":
+        """Build from a :class:`repro.core.scenarios.TrafficShape`."""
+        return ContentionSpec(n_stressors, stress_pool, stress_strategy,
+                              stress_shape_tag=shape.tag())
 
 
 @dataclass
@@ -90,11 +104,13 @@ class PlacementAdvisor:
         bw = self.db.effective_bw(
             pool, contention.n_stressors,
             stress_pool=contention.stress_pool,
-            stress_strat=contention.stress_strategy)
+            stress_strat=contention.stress_strategy,
+            shape_tag=contention.stress_shape_tag)
         lat = self.db.effective_lat(
             pool, contention.n_stressors,
             stress_pool=contention.stress_pool,
-            stress_strat=contention.stress_strategy)
+            stress_strat=contention.stress_strategy,
+            shape_tag=contention.stress_shape_tag)
         stream_ns = obj.bytes_per_step / max(bw, 1e-9)
         lat_ns = obj.dependent_accesses * lat
         return stream_ns + lat_ns

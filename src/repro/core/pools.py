@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.devicetree import MemoryNode, Platform, detect_platform
 
 
@@ -81,17 +82,23 @@ class MemoryPool:
         self.allocated = 0
 
     # -- placement -------------------------------------------------------
+    def place(self, data: jax.Array) -> jax.Array:
+        """Place an array on this pool's memory kind (public hook for
+        transient measurement buffers that bypass alloc accounting)."""
+        return self._place(data)
+
     def _place(self, data: jax.Array) -> jax.Array:
         kind = self.node.memory_kind
         dev = jax.devices()[0]
         if kind in (None, "device"):
             return jax.device_put(data, dev)
+        # compat degrades to default memory on backends without this kind
+        # (CPU container): placement is emulated; accounting stays exact.
         try:
-            s = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
-            return jax.device_put(data, s)
+            return jax.device_put(
+                data, compat.single_device_sharding(dev, kind))
         except (ValueError, RuntimeError):
-            # backend without this memory kind (CPU container): placement
-            # is emulated; accounting stays exact.
+            # kind advertised but transfer refused: same degradation
             return jax.device_put(data, dev)
 
     def sharding_for(self, mesh, spec) -> jax.sharding.NamedSharding:
@@ -99,10 +106,7 @@ class MemoryPool:
         kind = self.node.memory_kind
         if kind in (None, "device"):
             return jax.sharding.NamedSharding(mesh, spec)
-        try:
-            return jax.sharding.NamedSharding(mesh, spec, memory_kind=kind)
-        except (ValueError, RuntimeError):
-            return jax.sharding.NamedSharding(mesh, spec)
+        return compat.named_sharding(mesh, spec, kind)
 
     # -- status -----------------------------------------------------------
     @property

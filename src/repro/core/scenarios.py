@@ -1,0 +1,268 @@
+"""Declarative scenario DSL — the characterization matrix, as data.
+
+The seed hard-coded one scenario family: a 4-tuple cross-product
+(obs_pool x obs_strategy x stress_pool x stress_strategy) of *steady*
+streams.  Real contention is richer ("A Mess of Memory System
+Benchmarking": bandwidth-latency surfaces are only meaningful swept
+across read/write ratios and traffic shapes; worst-case SoC analysis
+needs bursty and copy-style interference).  This module makes the
+scenario the unit of configuration:
+
+* :class:`TrafficShape`   — HOW an activity touches memory: steady,
+  mixed read/write ratio (2:1, 1:1, 1:2, ...), bursty/duty-cycled,
+  or strided (pointer-chase hop distance).
+* :class:`ObserverSpec`   — the measured activity: strategy letter,
+  pool, and a *buffer-size ladder*.
+* :class:`StressorSpec`   — one member of the stressor ensemble.
+* :class:`ScenarioSpec`   — observer + stressor ensemble + iteration
+  budget; serialisable, hashable, and the key-provider for CurveDB v2.
+
+Specs are plain frozen dataclasses with exact dict round-trips
+(:func:`ScenarioSpec.to_dict` / :func:`ScenarioSpec.from_dict`), so a
+scenario matrix can be checked into a JSON file, diffed, and replayed.
+
+Adding a new traffic shape (see README "Scenario DSL"):
+  1. give it a ``kind`` + parameters here (and a ``tag`` spelling),
+  2. teach the queueing model its traffic/population effect
+     (``repro.core.simulate``),
+  3. optionally give it an executable kernel (``repro.kernels``) and
+     register the workload (``repro.core.workloads``).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field, replace
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+SCHEMA_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# Traffic shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrafficShape:
+    """How an activity's transactions are distributed in kind and time.
+
+    kind          "steady" | "mixed" | "burst" | "strided"
+    read_fraction fraction of line-touches that are reads (mixed): a
+                  2:1 read:write mix is read_fraction=2/3.
+    duty_cycle    fraction of wall time the activity is issuing (burst);
+                  1.0 = steady.
+    burst_len     iterations per active burst (executable backends).
+    stride        lines skipped per pointer-chase hop (strided).
+    """
+    kind: str = "steady"
+    read_fraction: float = 1.0
+    duty_cycle: float = 1.0
+    burst_len: int = 64
+    stride: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ("steady", "mixed", "burst", "strided"):
+            raise ValueError(f"unknown traffic shape kind {self.kind!r}")
+        if not 0.0 <= self.read_fraction <= 1.0:
+            raise ValueError(f"read_fraction out of [0,1]: "
+                             f"{self.read_fraction}")
+        if not 0.0 < self.duty_cycle <= 1.0:
+            raise ValueError(f"duty_cycle out of (0,1]: {self.duty_cycle}")
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1: {self.stride}")
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def steady() -> "TrafficShape":
+        return TrafficShape()
+
+    @staticmethod
+    def mixed(reads: int, writes: int) -> "TrafficShape":
+        """Mixed read/write ratio, e.g. ``mixed(2, 1)`` for 2:1."""
+        if reads < 0 or writes < 0 or reads + writes == 0:
+            raise ValueError(f"bad ratio {reads}:{writes}")
+        return TrafficShape(kind="mixed",
+                            read_fraction=reads / (reads + writes))
+
+    @staticmethod
+    def burst(duty_cycle: float, burst_len: int = 64) -> "TrafficShape":
+        return TrafficShape(kind="burst", duty_cycle=duty_cycle,
+                            burst_len=burst_len)
+
+    @staticmethod
+    def strided(stride: int) -> "TrafficShape":
+        return TrafficShape(kind="strided", stride=stride)
+
+    # -- identity ----------------------------------------------------------
+    @property
+    def is_steady(self) -> bool:
+        return self.kind == "steady"
+
+    def tag(self) -> str:
+        """Short spelling used inside CurveDB keys ('' for steady)."""
+        if self.kind == "steady":
+            return ""
+        if self.kind == "mixed":
+            return f"rf{self.read_fraction:.2f}"
+        if self.kind == "burst":
+            return f"dc{self.duty_cycle:.2f}"
+        return f"st{self.stride}"
+
+
+# ---------------------------------------------------------------------------
+# Activities
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ObserverSpec:
+    """The measured activity: one strategy on one pool, swept over a
+    buffer-size ladder (a single size is a 1-rung ladder)."""
+    strategy: str
+    pool: str
+    buffers: Tuple[int, ...]
+    shape: TrafficShape = field(default_factory=TrafficShape)
+
+    def __post_init__(self):
+        object.__setattr__(self, "buffers", tuple(self.buffers))
+        if not self.buffers:
+            raise ValueError("observer needs at least one buffer size")
+
+
+@dataclass(frozen=True)
+class StressorSpec:
+    """One member of the stressor ensemble."""
+    strategy: str
+    pool: str
+    buffer_bytes: int
+    shape: TrafficShape = field(default_factory=TrafficShape)
+
+    def descriptor(self) -> str:
+        t = self.shape.tag()
+        base = f"{self.pool}:{self.strategy}"
+        return f"{base}@{t}" if t else base
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One named scenario: observer + stressor ensemble + budget."""
+    name: str
+    observer: ObserverSpec
+    stressors: Tuple[StressorSpec, ...] = ()
+    iters: int = 500
+    max_stressors: Optional[int] = None     # ladder depth; None = n_engines
+
+    def __post_init__(self):
+        object.__setattr__(self, "stressors", tuple(self.stressors))
+
+    # -- CurveDB keying ------------------------------------------------------
+    def key(self, buffer_bytes: Optional[int] = None) -> str:
+        """Curve key.  For a steady observer + single steady stressor
+        this is EXACTLY the v1 key format
+        ``obs_pool:obs_strat|stress_pool:stress_strat`` so v1 consumers
+        (placement, MLP tables) keep resolving; shaped/ensemble
+        scenarios append their shape tags."""
+        obs = f"{self.observer.pool}:{self.observer.strategy}"
+        t = self.observer.shape.tag()
+        if t:
+            obs = f"{obs}@{t}"
+        if self.stressors:
+            stress = "+".join(s.descriptor() for s in self.stressors)
+        else:
+            stress = "none:i"
+        key = f"{obs}|{stress}"
+        if buffer_bytes is not None and len(self.observer.buffers) > 1:
+            key = f"{key}|buf={buffer_bytes}"
+        return key
+
+    # -- serialisation -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ScenarioSpec":
+        obs = d["observer"]
+        observer = ObserverSpec(
+            strategy=obs["strategy"], pool=obs["pool"],
+            buffers=tuple(obs["buffers"]),
+            shape=TrafficShape(**obs.get("shape", {})))
+        stressors = tuple(
+            StressorSpec(strategy=s["strategy"], pool=s["pool"],
+                         buffer_bytes=s["buffer_bytes"],
+                         shape=TrafficShape(**s.get("shape", {})))
+            for s in d.get("stressors", ()))
+        return ScenarioSpec(name=d["name"], observer=observer,
+                            stressors=stressors,
+                            iters=d.get("iters", 500),
+                            max_stressors=d.get("max_stressors"))
+
+
+# ---------------------------------------------------------------------------
+# Matrix builders
+# ---------------------------------------------------------------------------
+
+
+#: The default stressor shape ensemble: the seed's steady ladder plus the
+#: three new traffic-shape families (mixed r/w ratio, bursty, copy) and a
+#: strided chase.  (strategy letter, shape) pairs.
+DEFAULT_STRESS_SHAPES: Tuple[Tuple[str, TrafficShape], ...] = (
+    ("r", TrafficShape.steady()),
+    ("w", TrafficShape.steady()),
+    ("y", TrafficShape.steady()),
+    ("c", TrafficShape.steady()),           # copy: read + write stream
+    ("r", TrafficShape.mixed(2, 1)),        # 2:1 read:write
+    ("r", TrafficShape.mixed(1, 1)),
+    ("r", TrafficShape.mixed(1, 2)),
+    ("w", TrafficShape.burst(0.5)),         # duty-cycled write stress
+    ("m", TrafficShape.strided(8)),         # strided pointer-chase
+)
+
+
+def scenario_matrix(
+    *,
+    pools: Sequence[str],
+    buffer_bytes: int,
+    obs_strategies: Sequence[str] = ("r", "w", "l"),
+    stress_shapes: Sequence[Tuple[str, TrafficShape]] = DEFAULT_STRESS_SHAPES,
+    stress_pools: Optional[Sequence[str]] = None,
+    iters: int = 500,
+    max_stressors: Optional[int] = None,
+    name_prefix: str = "",
+) -> List[ScenarioSpec]:
+    """The full cross-product matrix as a flat spec list.
+
+    Replaces the seed's hard-coded 4-tuple loop: every combination of
+    (observer pool, observer strategy, stressor pool, stressor
+    strategy+shape) becomes one named :class:`ScenarioSpec`.
+    """
+    specs: List[ScenarioSpec] = []
+    s_pools = list(stress_pools) if stress_pools is not None else list(pools)
+    for op in pools:
+        for ostrat in obs_strategies:
+            for sp in s_pools:
+                for sstrat, shape in stress_shapes:
+                    tag = shape.tag()
+                    name = f"{name_prefix}{op}.{ostrat}|{sp}.{sstrat}"
+                    if tag:
+                        name = f"{name}@{tag}"
+                    specs.append(ScenarioSpec(
+                        name=name,
+                        observer=ObserverSpec(ostrat, op, (buffer_bytes,)),
+                        stressors=(StressorSpec(sstrat, sp, buffer_bytes,
+                                                shape),),
+                        iters=iters,
+                        max_stressors=max_stressors))
+    return specs
+
+
+def save_matrix(specs: Iterable[ScenarioSpec], path: str) -> None:
+    import json
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION,
+                   "scenarios": [s.to_dict() for s in specs]}, f, indent=1)
+
+
+def load_matrix(path: str) -> List[ScenarioSpec]:
+    import json
+    with open(path) as f:
+        d = json.load(f)
+    return [ScenarioSpec.from_dict(s) for s in d["scenarios"]]

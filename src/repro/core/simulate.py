@@ -34,13 +34,20 @@ from repro.core.devicetree import MemoryNode, Platform
 
 # traffic multiplier per access strategy: transactions on the memory
 # station per *useful* line delivered (WAWB: a write miss = read + victim
-# writeback; write-streaming bypasses the allocate read).
+# writeback; write-streaming bypasses the allocate read; copy moves a
+# read line plus an allocated write line per two useful lines).
 STRATEGY_TRAFFIC = {
-    "r": 1.0, "s": 1.0, "l": 1.0, "m": 1.0,
+    "r": 1.0, "s": 1.0, "l": 1.0, "m": 1.0, "t": 1.0,
     "w": 2.0, "x": 2.0,
     "y": 1.0,
+    "c": 1.5,
+    "b": 1.5,          # default 1:1 mix; read_fraction overrides
     "i": 0.0,
 }
+
+# traffic cost of one pure read / one pure (allocating) write line — the
+# endpoints a mixed read/write ratio interpolates between
+_READ_TRAFFIC, _WRITE_TRAFFIC = 1.0, 2.0
 
 # per-engine MLP by strategy kind: latency chases are serialised (one
 # outstanding transaction — that is the measurement method), bandwidth
@@ -49,7 +56,7 @@ STRATEGY_TRAFFIC = {
 # transactions in flight (this is what makes dc-zva streams the most
 # aggressive stressor in Fig. 8/13).
 def strategy_mlp(strategy: str, node: MemoryNode) -> int:
-    if strategy in ("l", "m"):
+    if strategy in ("l", "m", "t"):
         return 1
     if strategy == "i":
         return 0
@@ -60,17 +67,62 @@ def strategy_mlp(strategy: str, node: MemoryNode) -> int:
 
 @dataclass(frozen=True)
 class ActivityClass:
+    """One class of customers in the closed network.
+
+    The optional *traffic-shape* parameters generalise the steady
+    streams of the seed model:
+
+    read_fraction  mixed read/write ratio: the per-line traffic
+                   interpolates between a pure read (1 Tx) and a pure
+                   write-allocate (2 Tx).  ``None`` = use the
+                   strategy's native multiplier.
+    duty_cycle     bursty/duty-cycled issue: the class only keeps
+                   ``duty_cycle`` of its MLP in flight on time-average
+                   (a burst's off phase holds zero entries), shrinking
+                   its customer population.
+    stride         pointer-chase hop distance in lines: hops beyond
+                   one line forfeit row-buffer/prefetch locality, so
+                   the per-transaction base latency grows with the hop
+                   distance (logarithmically saturating).
+    """
     name: str
     node: MemoryNode
     strategy: str
     n_engines: int
+    read_fraction: Optional[float] = None
+    duty_cycle: float = 1.0
+    stride: int = 1
 
     def population(self) -> int:
-        return self.n_engines * strategy_mlp(self.strategy, self.node)
+        pop = self.n_engines * strategy_mlp(self.strategy, self.node)
+        if self.duty_cycle < 1.0 and pop:
+            pop = max(1, int(round(pop * self.duty_cycle)))
+        return pop
 
     @property
     def traffic(self) -> float:
+        if self.read_fraction is not None:
+            return (self.read_fraction * _READ_TRAFFIC
+                    + (1.0 - self.read_fraction) * _WRITE_TRAFFIC)
         return STRATEGY_TRAFFIC[self.strategy]
+
+    def base_latency_ns(self) -> float:
+        z = self.node.base_latency_ns
+        stride = self.stride
+        if stride <= 1 and self.strategy == "t":
+            stride = _DEFAULT_T_STRIDE    # the t workload's default hop
+        if stride > 1:
+            z *= 1.0 + _STRIDE_LATENCY_ALPHA * math.log2(
+                min(stride, _STRIDE_SATURATION))
+        return z
+
+
+# locality-loss penalty per doubling of the chase hop distance, and the
+# distance beyond which a longer stride cannot hurt further (every hop
+# already misses the row buffer / defeats the prefetcher)
+_STRIDE_LATENCY_ALPHA = 0.12
+_STRIDE_SATURATION = 64
+_DEFAULT_T_STRIDE = 8     # matches workloads._mk_strided's default
 
 
 @dataclass
@@ -92,7 +144,7 @@ def _route(platform: Platform, cls: "ActivityClass") -> List[str]:
     cache_name = getattr(platform, "cache_node", None)
     if cache_name and cache_name in platform.memories:
         cache_port = platform.memories[cache_name].port
-        if (cls.strategy in ("r", "w", "l", "y")
+        if (cls.strategy in ("r", "w", "l", "y", "c", "b")
                 and node.port != "core" and cache_port not in r):
             r.append(cache_port)
     if node.kind == "cache":
@@ -141,7 +193,7 @@ def simulate_scenario(
                 stations[s_index[f"port:{pname}"]][1] * t
         D[ci][s_index[f"mem:{c.node.name}"]] = \
             stations[s_index[f"mem:{c.node.name}"]][1] * t
-        Z[ci] = c.node.base_latency_ns
+        Z[ci] = c.base_latency_ns()
 
     # Bard–Schweitzer AMVA with shared-entry blocking on the shared port
     # and posted-write-stream blocking on the cache bank port.

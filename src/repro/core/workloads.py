@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +126,172 @@ def make_workload(strategy: str, pool: MemoryPool, buffer_bytes: int,
     return _REGISTRY[strategy](pool, buffer_bytes, **kw)
 
 
+def make_shaped_workload(strategy: str, pool: MemoryPool, buffer_bytes: int,
+                         shape=None, **kw) -> Workload:
+    """Bind a (strategy, TrafficShape) pair to an executable workload.
+
+    Steady shapes resolve to the plain strategy; mixed ratios map onto
+    the ``b`` mixed-stream workload, strided shapes onto the ``t``
+    strided chase, and bursty shapes wrap the base workload with
+    duty-cycled accounting (the off phase is pure idle, so the
+    time-averaged bandwidth scales by the duty cycle)."""
+    if shape is None or getattr(shape, "is_steady", True):
+        return make_workload(strategy, pool, buffer_bytes, **kw)
+    if shape.kind == "mixed":
+        return make_workload("b", pool, buffer_bytes,
+                             read_fraction=shape.read_fraction, **kw)
+    if shape.kind == "strided":
+        return make_workload("t", pool, buffer_bytes,
+                             stride=shape.stride, **kw)
+    if shape.kind == "burst":
+        wl = make_workload(strategy, pool, buffer_bytes, **kw)
+        return _duty_cycled(wl, shape.duty_cycle)
+    raise KeyError(f"unknown traffic shape kind {shape.kind!r}")
+
+
+def _duty_cycled(wl: Workload, duty: float) -> Workload:
+    import dataclasses
+    base_run = wl.run_fn
+
+    def run(iters):
+        res = base_run(iters)
+        idle_ns = res.elapsed_ns * (1.0 - duty) / duty
+        return dataclasses.replace(res, elapsed_ns=res.elapsed_ns + idle_ns)
+
+    wl.run_fn = run
+    wl.description = f"{wl.description} (duty={duty:g})"
+    return wl
+
+
+# ---------------------------------------------------------------------------
+# Batched group measurement (the matrix runner's fast path)
+# ---------------------------------------------------------------------------
+
+# observer strategies whose measured pass maps over a stacked input
+# array, so G same-shape scenarios collapse into ONE jit'd vmapped
+# dispatch (read-like paths; chases keep per-member Sattolo chains) —
+# write-like paths and the deterministic strided chase ('t', whose
+# members are bit-identical) carry no distinct batched input, so their
+# group measures once and shares the result.
+_VMAP_READS = ("r", "s", "c", "x", "b")
+_VMAP_CHASES = ("l", "m")
+
+
+# batched measurement stacks member buffers into one array; cap the
+# stack so a big group cannot out-allocate the device (the naive path
+# only ever holds ONE member buffer)
+_BATCH_BYTES_CAP = 1 << 30
+
+
+def measure_group(strategy: str, pool: MemoryPool, buffer_bytes: int,
+                  n_members: int, iters: int, *, shape=None,
+                  seeds: Optional[list] = None) -> Tuple[list, int]:
+    """Measure ``n_members`` same-signature observers with jit'd
+    ``vmap`` passes over the stacked member buffers (chases keep
+    per-member chains, so different seeds/strides stay distinct).
+
+    Returns ``(results, n_dispatches)``.  Normally one dispatch covers
+    the whole group; groups whose stacked footprint would exceed the
+    batch byte cap or the pool's free space split into chunks (the
+    naive path only ever holds ONE member buffer, so the batched path
+    must not out-allocate it unboundedly), each chunk one dispatch.
+    The group's wall time is split evenly (members are identical up to
+    buffer content, and on hardware they run as concurrent engines of
+    one fused pass)."""
+    kind = shape.kind if shape is not None else "steady"
+    strat = {"mixed": "b", "strided": "t"}.get(kind, strategy)
+    if strat not in _VMAP_READS + _VMAP_CHASES:
+        # write-like path stacks no buffers: one measurement serves
+        # the whole group regardless of member size
+        chunk = n_members
+    else:
+        member_bytes = _rows(buffer_bytes) * LINE_BYTES
+        budget = min(_BATCH_BYTES_CAP, max(pool.available, member_bytes))
+        chunk = max(1, min(n_members, budget // member_bytes))
+    results: list = []
+    dispatches = 0
+    for start in range(0, n_members, chunk):
+        g = min(chunk, n_members - start)
+        results.extend(_measure_chunk(
+            strategy, pool, buffer_bytes, g, iters, shape=shape,
+            seeds=(seeds[start:start + g] if seeds is not None
+                   else list(range(start, start + g)))))
+        dispatches += 1
+    return results, dispatches
+
+
+def _measure_chunk(strategy: str, pool: MemoryPool, buffer_bytes: int,
+                   n_members: int, iters: int, *, shape=None,
+                   seeds: Optional[list] = None) -> list:
+    rows = _rows(buffer_bytes)
+    g = n_members
+    vmem = _fits_vmem(buffer_bytes) or pool.node.kind == "vmem"
+    blk = min(512, rows)
+    kind = shape.kind if shape is not None else "steady"
+    strat = {"mixed": "b", "strided": "t"}.get(kind, strategy)
+
+    duty = shape.duty_cycle if (shape is not None
+                                and kind == "burst") else 1.0
+
+    if strat in _VMAP_CHASES:
+        seeds = seeds or list(range(g))
+        bufs = np.stack([ops.chain_buffer(rows, s) for s in seeds])
+        bufs = pool.place(jnp.asarray(bufs))
+        fn = ops.chase_vmem if (strat == "l" and vmem) else ops.chase_hbm
+        batched = jax.jit(jax.vmap(
+            lambda b: fn(b, n_steps=rows)))
+        t = _timed(batched, bufs, iters=max(1, iters // 10))
+        # /g assumes the g chains execute back-to-back within the pass,
+        # which holds for the emulated backends this container runs
+        # (test_batched_chase_latency_matches_naive guards it); a
+        # compiled TPU vmap may overlap chains and would need its own
+        # accounting.
+        per = (t / g) / duty
+        return [WorkloadResult(strat, pool.node.name, buffer_bytes, iters,
+                               rows * LINE_BYTES, per, transactions=rows)
+                for _ in range(g)]
+
+    if strat in _VMAP_READS:
+        x = pool.place(bw_buffer_init((g, rows, LANE), jnp.float32))
+        scale = 1.0
+        useful = rows * LINE_BYTES
+        if strat == "b":
+            rf = (shape.read_fraction
+                  if shape is not None and shape.kind == "mixed" else 0.5)
+            batched = jax.jit(jax.vmap(
+                lambda a: ops.stream_mixed(a, read_fraction=rf,
+                                           block_rows=blk)))
+        elif strat == "c":
+            batched = jax.jit(jax.vmap(
+                lambda a: ops.stream_copy(a, block_rows=blk)))
+            useful = 2 * rows * LINE_BYTES
+        elif strat == "x":
+            batched = jax.jit(jax.vmap(
+                lambda a: ops.stream_rmw(a, block_rows=blk)))
+            useful = 2 * rows * LINE_BYTES
+        elif vmem and strat == "r":
+            batched = jax.jit(jax.vmap(
+                lambda a: ops.vmem_read(a, repeats=8)))
+            scale = 1.0 / 8.0               # 8 on-chip re-reads per call
+        else:
+            batched = jax.jit(jax.vmap(
+                lambda a: ops.stream_read(a, block_rows=blk)))
+        t = _timed(batched, x, iters=iters) * scale
+        per = (t / g) / duty
+        return [WorkloadResult(strat, pool.node.name, buffer_bytes, iters,
+                               useful * iters, per * iters, 0)
+                for _ in range(g)]
+
+    # write-like paths (w/x/y/i...): no batched input array — one
+    # measurement, shared by every identical member.
+    wl = make_shaped_workload(strategy, pool, buffer_bytes, shape)
+    try:
+        res = wl.run(iters)
+    finally:
+        wl.release()
+    return [res] * g
+
+
 def _rows(buffer_bytes: int) -> int:
     rows = max(1, buffer_bytes // LINE_BYTES)
     # keep divisible by the largest block we use
@@ -135,13 +301,13 @@ def _rows(buffer_bytes: int) -> int:
 
 def _timed(fn, *args, iters: int, **kw) -> float:
     """Median-of-3 wall time for `iters` back-to-back calls, ns."""
-    fn(*args, **kw).block_until_ready()          # compile + warm
+    jax.block_until_ready(fn(*args, **kw))       # compile + warm
     samples = []
     for _ in range(3):
         t0 = time.perf_counter_ns()
         for _ in range(iters):
             out = fn(*args, **kw)
-        out.block_until_ready()
+        jax.block_until_ready(out)
         samples.append((time.perf_counter_ns() - t0) / iters)
     return float(np.median(samples))
 
@@ -254,6 +420,63 @@ def _mk_y(pool, buffer_bytes, **kw):
                               rows * LINE_BYTES * iters, t * iters, 0)
 
     return Workload("y", pool, buffer_bytes, "write-streaming", run, alloc)
+
+
+@register_strategy("c")
+def _mk_c(pool, buffer_bytes, **kw):
+    """copy stream (read every line, write it elsewhere) — STREAM copy"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, init=bw_buffer_init,
+                       tag="bw:c")
+    x = alloc.array if alloc.array is not None else bw_buffer_init(
+        (rows, LANE), jnp.float32)
+
+    def run(iters):
+        t = _timed(ops.stream_copy, x, block_rows=min(512, rows),
+                   iters=iters)
+        return WorkloadResult("c", pool.node.name, buffer_bytes, iters,
+                              2 * rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("c", pool, buffer_bytes, "copy stream", run, alloc)
+
+
+@register_strategy("b")
+def _mk_mixed(pool, buffer_bytes, *, read_fraction: float = 0.5, **kw):
+    """mixed read/write blocks at a configurable r:w ratio"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.float32, init=bw_buffer_init,
+                       tag="bw:b")
+    x = alloc.array if alloc.array is not None else bw_buffer_init(
+        (rows, LANE), jnp.float32)
+    rf = max(0.0, min(1.0, read_fraction))
+
+    def run(iters):
+        t = _timed(ops.stream_mixed, x, read_fraction=rf,
+                   block_rows=min(512, rows), iters=iters)
+        return WorkloadResult("b", pool.node.name, buffer_bytes, iters,
+                              rows * LINE_BYTES * iters, t * iters, 0)
+
+    return Workload("b", pool, buffer_bytes,
+                    f"mixed r/w stream (rf={rf:g})", run, alloc)
+
+
+@register_strategy("t")
+def _mk_strided(pool, buffer_bytes, *, stride: int = 8, **kw):
+    """strided pointer chase (constant hop distance, non-cacheable)"""
+    rows = _rows(buffer_bytes)
+    alloc = pool.alloc((rows, LANE), jnp.int32, tag="lat:t")
+    buf = jnp.asarray(ops.strided_chain_buffer(rows, stride))
+
+    def run(iters):
+        steps = rows
+        t = _timed(ops.chase_hbm, buf, n_steps=steps,
+                   iters=max(1, iters // 10))
+        return WorkloadResult("t", pool.node.name, buffer_bytes,
+                              iters, rows * LINE_BYTES, t,
+                              transactions=steps)
+
+    return Workload("t", pool, buffer_bytes,
+                    f"strided pointer-chase (x{stride})", run, alloc)
 
 
 # ---- latency strategies -----------------------------------------------------

@@ -24,6 +24,7 @@ line"; element [i, 0] holds the successor of line i.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +55,30 @@ def chain_buffer(n_lines: int, seed: int = 0) -> np.ndarray:
     """(n_lines, 128) int32 buffer with the successor in lane 0."""
     buf = np.zeros((n_lines, LANE), np.int32)
     buf[:, 0] = make_chain(n_lines, seed)
+    return buf
+
+
+def make_strided_chain(n_lines: int, stride: int) -> np.ndarray:
+    """Deterministic strided cycle: next[i] = (i + stride') mod n with
+    stride' the smallest value >= stride coprime to n, so the walk still
+    visits every line exactly once.  Unlike the Sattolo shuffle the hop
+    distance is CONSTANT — the strided-chase traffic shape: predictable
+    distance, no spatial locality beyond the stride."""
+    if n_lines == 1:
+        return np.zeros(1, np.int32)
+    s = max(1, stride) % n_lines or 1
+    while math.gcd(s, n_lines) != 1:
+        s += 1
+        if s >= n_lines:
+            s = 1
+            break
+    return ((np.arange(n_lines) + s) % n_lines).astype(np.int32)
+
+
+def strided_chain_buffer(n_lines: int, stride: int) -> np.ndarray:
+    """(n_lines, 128) int32 strided-cycle buffer (successor in lane 0)."""
+    buf = np.zeros((n_lines, LANE), np.int32)
+    buf[:, 0] = make_strided_chain(n_lines, stride)
     return buf
 
 

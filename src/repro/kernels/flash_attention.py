@@ -22,13 +22,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 LANE = 128
 
 
 def _flash_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                 sm_scale: float, block_q: int, block_k: int, n_k: int,
-                causal: bool, window: int):
+                causal: bool, window: int, sk_valid: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -64,6 +66,8 @@ def _flash_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             mask = mask & (k_pos <= q_pos)
         if window:
             mask = mask & (k_pos > q_pos - window)
+        if sk_valid % block_k:                 # padded kv tail block
+            mask = mask & (k_pos < sk_valid)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[:, :1]                          # (bq, 1)
@@ -96,22 +100,35 @@ def flash_attention(
     block_q: int = 128, block_k: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """q: (B,H,Sq,D); k,v: (B,KVH,Sk,D) -> (B,H,Sq,D)."""
+    """q: (B,H,Sq,D); k,v: (B,KVH,Sk,D) -> (B,H,Sq,D).
+
+    Sequences need not divide the block shape: q/k/v are zero-padded up
+    to the block grid and the padded kv tail is masked inside the kernel
+    (an out-of-range score block contributes exp(-inf) = 0), so the
+    result is bit-for-bit independent of the tiling.
+    """
     b, h, sq, d = q.shape
     _, kvh, sk, _ = k.shape
     assert h % kvh == 0, (h, kvh)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
-    n_q, n_k = sq // block_q, sk // block_k
+    pad_q = -sq % block_q
+    pad_k = -sk % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+    n_q, n_k = sq_p // block_q, sk_p // block_k
     scale = sm_scale if sm_scale is not None else d ** -0.5
 
     grid = (b, h, n_q, n_k)
     body = functools.partial(
         _flash_body, sm_scale=scale, block_q=block_q, block_k=block_k,
-        n_k=n_k, causal=causal, window=window)
+        n_k=n_k, causal=causal, window=window, sk_valid=sk)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
@@ -132,9 +149,10 @@ def flash_attention(
             pltpu.VMEM((block_q, LANE), jnp.float32),   # l
             pltpu.VMEM((block_q, d), jnp.float32),      # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :sq] if pad_q else out

@@ -64,6 +64,15 @@ def stream_triad(b, c, *, scalar: float = 3.0, block_rows: int = 512,
                              interpret=_interp(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("read_fraction",
+                                             "block_rows", "interpret"))
+def stream_mixed(x, *, read_fraction: float, block_rows: int = 512,
+                 interpret: Optional[bool] = None):
+    return _stream.mixed_hbm(x, read_fraction=read_fraction,
+                             block_rows=block_rows,
+                             interpret=_interp(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("repeats", "interpret"))
 def vmem_read(x, *, repeats: int = 16, interpret: Optional[bool] = None):
     return _stream.read_vmem(x, repeats=repeats,
@@ -95,6 +104,8 @@ def chase_hbm(buf, *, n_steps: int, interpret: Optional[bool] = None):
 
 make_chain = _chase.make_chain
 chain_buffer = _chase.chain_buffer
+make_strided_chain = _chase.make_strided_chain
+strided_chain_buffer = _chase.strided_chain_buffer
 
 
 # --- compute probe -------------------------------------------------------------

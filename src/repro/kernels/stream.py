@@ -158,6 +158,45 @@ def triad_hbm(b: jnp.ndarray, c: jnp.ndarray, *, scalar: float = 3.0,
     )(b, c)
 
 
+def mixed_hbm(x: jnp.ndarray, *, read_fraction: float,
+              value: float = 1.0, block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = False):
+    """Mixed read/write stream: ``read_fraction`` of the blocks are
+    sum-reduced (pure read traffic), the rest are written (pure store
+    traffic) — nothing else touches memory, so the realized read:write
+    line ratio IS the configured one.  Interleave order is irrelevant
+    to a bandwidth mix, so the split is by row range.
+
+    Returns (read_sum, written): read_sum keeps the read traffic live
+    under DCE; written is the store destination.
+
+    The ratio is realized at whole-block granularity; when the buffer
+    holds few blocks at the requested block size, the block size is
+    reduced (to the largest row-count divisor giving >= 8 blocks) so a
+    small buffer cannot silently degenerate to a pure read or write.
+    """
+    assert 0.0 <= read_fraction <= 1.0
+    rows = x.shape[0]
+    if 0.0 < read_fraction < 1.0 and rows // block_rows < 8:
+        block_rows = next(b for b in range(max(1, rows // 8), 0, -1)
+                          if rows % b == 0)
+    n = _grid_blocks(rows, block_rows)
+    n_r = max(0, min(n, int(round(n * read_fraction))))
+    if 0.0 < read_fraction < 1.0 and n >= 2:
+        # an extreme but genuine mix keeps >= 1 block of each kind
+        n_r = max(1, min(n - 1, n_r))
+    n_w = n - n_r
+    acc = jnp.float32(0.0)
+    out = jnp.zeros((0, LANE), jnp.float32)
+    if n_r:
+        acc = read_hbm(x[:n_r * block_rows], block_rows=block_rows,
+                       interpret=interpret)
+    if n_w:
+        out = write_hbm(n_w * block_rows, value=value,
+                        block_rows=block_rows, interpret=interpret)
+    return acc, out
+
+
 # ---------------------------------------------------------------------------
 # VMEM-resident variants (cacheable analog)
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.analysis import hlo as hlo_mod
 from repro.analysis import roofline
 from repro.configs.base import (SHAPES, MeshConfig, ModelConfig, ShapeSpec,
@@ -217,7 +218,7 @@ def analyze_cell(compiled, meta, cfg: ModelConfig,
                         + mem.get("temp_size_in_bytes", 0)
                         + mem.get("output_size_in_bytes", 0)
                         - mem.get("alias_size_in_bytes", 0))
-    xla_cost = dict(compiled.cost_analysis() or {})
+    xla_cost = compat.cost_analysis(compiled)
     cost = hlo_mod.analyze(compiled.as_text())
     terms = roofline.compute_terms(
         cost, cfg=cfg, shape=shape, mesh_desc=meta["mesh"],

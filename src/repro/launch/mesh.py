@@ -11,13 +11,12 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro import compat
 from repro.configs.base import MeshConfig
 
 
 def _mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -136,7 +136,8 @@ def layer_apply(
         if is_moe:
             y, aux = moe_apply(
                 params["moe"], h, cfg,
-                constrain_dispatch=lambda v: cst(v, "dispatch"))
+                constrain_dispatch=lambda v: cst(v, "dispatch"),
+                dropless=mode != "train")
         else:
             y = mlp_apply(params["mlp"], h, cfg,
                           constrain_ffn=lambda v: cst(v, "ffn"))

@@ -39,8 +39,16 @@ def _round_up(x: int, m: int) -> int:
 
 
 def moe_apply(params, x, cfg: ModelConfig, *, n_groups: int = 0,
-              constrain_dispatch=None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """x: (B, S, D) -> (y, aux). Groups default to the batch dim."""
+              constrain_dispatch=None,
+              dropless: bool = False) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """x: (B, S, D) -> (y, aux). Groups default to the batch dim.
+
+    ``dropless=True`` (serving modes) sizes every expert at the full
+    token count so no token is ever dropped: capacity-bounded dispatch
+    is a *training* throughput trade-off, and because the capacity
+    depends on the sequence length it is non-causal — a dropped token
+    would make prefill/decode diverge from the teacher-forced oracle.
+    """
     m = cfg.moe
     b, s, d = x.shape
     e, k = m.n_experts, m.top_k
@@ -65,8 +73,11 @@ def moe_apply(params, x, cfg: ModelConfig, *, n_groups: int = 0,
     z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
 
     # --- capacity-bounded sort dispatch ------------------------------------
-    cap = _round_up(int(math.ceil(k * n * m.capacity_factor / e)), 8)
-    cap = min(cap, n * k)
+    if dropless:
+        cap = _round_up(n * k, 8)       # keep the TPU lane alignment
+    else:
+        cap = _round_up(int(math.ceil(k * n * m.capacity_factor / e)), 8)
+        cap = min(cap, n * k)
 
     flat_expert = expert_ids.reshape(g, n * k)          # (g, nk)
     flat_token = jnp.tile(jnp.arange(n, dtype=jnp.int32)[:, None],

@@ -68,8 +68,8 @@ def test_dp_tp_train_step_matches_single_device():
 
     results = {}
     for shape in ((1, 1), (2, 2), (4, 2)):
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh(shape, ("data", "model"))
         rules = make_rules(cfg, mesh, global_batch=B, shape_kind="train")
         state = step_mod.init_state(cfg, tcfg, jax.random.PRNGKey(0))
         specs = step_mod.state_specs(cfg, rules, tcfg, state["params"])
@@ -110,8 +110,8 @@ def test_decode_step_matches_single_device():
 
     outs = {}
     for shape in ((1, 1), (2, 4)):
-        mesh = jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro import compat
+        mesh = compat.make_mesh(shape, ("data", "model"))
         rules = make_rules(cfg, mesh, global_batch=B, shape_kind="decode")
         prefill = jax.jit(eng.make_prefill_step(cfg, rules, max_len=PROMPT + 4))
         decode = jax.jit(eng.make_decode_step(cfg, rules))
@@ -128,8 +128,8 @@ def test_gpipe_matches_sequential():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.parallel.pipeline import make_gpipe, reference_pipeline
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((4,), ("stage",))
     def apply_stage(p, x):
         return jnp.tanh(x @ p["w"] + p["b"])
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 8, 8)) * 0.5,
@@ -147,8 +147,8 @@ def test_compressed_psum_matches_f32_psum():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.parallel import compression
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((8,), ("data",))
 
     def f(g):
         err = jax.tree.map(lambda x: jnp.zeros_like(x), g)
@@ -157,8 +157,8 @@ def test_compressed_psum_matches_f32_psum():
         return mean, exact
 
     g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 64))}
-    fm = jax.shard_map(f, mesh=mesh, in_specs=({"w": P("data")},),
-                       out_specs=({"w": P("data")}, {"w": P("data")}))
+    fm = compat.shard_map(f, mesh=mesh, in_specs=({"w": P("data")},),
+                          out_specs=({"w": P("data")}, {"w": P("data")}))
     mean, exact = fm(g)
     scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
     np.testing.assert_allclose(np.asarray(mean["w"]),
@@ -176,8 +176,8 @@ def test_dryrun_cell_on_8_devices():
     def small_mesh(*, multi_pod=False):
         shape = (2, 2, 2) if multi_pod else (2, 4)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        from repro import compat
+        return compat.make_mesh(shape, axes)
     dr.make_production_mesh = small_mesh
     from repro.configs.base import get_config, SHAPES
     import dataclasses

@@ -65,6 +65,23 @@ def test_stream_triad():
                                atol=2e-6)
 
 
+@pytest.mark.parametrize("rf", [1.0, 2 / 3, 0.5, 1 / 3, 0.0])
+def test_stream_mixed(rf):
+    """Mixed r/w kernel: read_fraction of the blocks are sum-reduced,
+    the rest written — and nothing else touches memory, so the realized
+    read:write line ratio is exactly the configured one."""
+    rows, block = 1024, 128
+    n = rows // block
+    x = _arr((rows, 128))
+    s, out = stream.mixed_hbm(x, read_fraction=rf, block_rows=block, **I)
+    n_r = int(round(n * rf))
+    exp_sum = float(np.asarray(x[:n_r * block]).sum())
+    np.testing.assert_allclose(float(s), exp_sum, rtol=2e-5)
+    assert out.shape == ((n - n_r) * block, 128)   # written lines only
+    if n_r < n:
+        assert (np.asarray(out) == 1.0).all()
+
+
 @pytest.mark.parametrize("repeats", [1, 4])
 def test_vmem_read_write(repeats):
     x = _arr((256, 128))
@@ -107,6 +124,27 @@ def test_chain_is_single_cycle():
             seen.add(idx)
             idx = int(nxt[idx])
         assert idx == 0 and len(seen) == n
+
+
+@pytest.mark.parametrize("stride", [1, 4, 8, 50])
+def test_strided_chain_is_single_cycle(stride):
+    for n in (1, 2, 7, 64, 100):
+        nxt = chase.make_strided_chain(n, stride)
+        seen, idx = set(), 0
+        for _ in range(n):
+            assert idx not in seen
+            seen.add(idx)
+            idx = int(nxt[idx])
+        assert idx == 0 and len(seen) == n
+
+
+def test_strided_chain_constant_hop():
+    nxt = chase.make_strided_chain(64, 8)
+    hops = {(int(nxt[i]) - i) % 64 for i in range(64)}
+    assert len(hops) == 1            # every hop covers the same distance
+    buf = jnp.asarray(chase.strided_chain_buffer(64, 8))
+    out = chase.chase_vmem(buf, n_steps=64, **I)
+    assert int(out) == 0             # full cycle returns home
 
 
 # ---------------------------------------------------------------------------
@@ -162,13 +200,31 @@ def test_flash_attention_bf16(dtype, atol):
 
 
 def test_flash_attention_block_shape_independence():
-    """Result must not depend on the BlockSpec tiling."""
+    """Result must not depend on the BlockSpec tiling — including when
+    the sequence does NOT divide the block shape (padded kv tail)."""
     q = _arr((1, 2, 512, 64), seed=4, scale=0.3)
     k = _arr((1, 2, 512, 64), seed=5, scale=0.3)
     v = _arr((1, 2, 512, 64), seed=6, scale=0.3)
     outs = [
         np.asarray(flash_attention.flash_attention(
             q, k, v, causal=True, block_q=bq, block_k=bk, **I))
-        for bq, bk in ((128, 128), (256, 128), (128, 256), (512, 512))]
+        for bq, bk in ((128, 128), (256, 128), (128, 256), (512, 512),
+                       (96, 160), (200, 200))]     # seq % block != 0
     for o in outs[1:]:
         np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+@pytest.mark.parametrize("s,causal,window", [(192, True, 0), (320, True, 64),
+                                             (160, False, 0)])
+def test_flash_attention_ragged_seq_vs_ref(s, causal, window):
+    """seq % 128 != 0: padding + masking must still match the oracle."""
+    q = _arr((1, 2, s, 64), seed=1, scale=0.5)
+    k = _arr((1, 2, s, 64), seed=2, scale=0.5)
+    v = _arr((1, 2, s, 64), seed=3, scale=0.5)
+    out = flash_attention.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=128, block_k=128,
+        **I)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    assert out.shape == q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)

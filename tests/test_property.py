@@ -3,6 +3,9 @@ import math
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-test.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

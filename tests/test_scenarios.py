@@ -1,0 +1,327 @@
+"""ScenarioSpec DSL + CurveDB v2 + batched matrix runner.
+
+Covers the ISSUE-1 acceptance criteria: spec round-trip serialization,
+schema versioning (v1 curve files still load), the shaped smoke sweep on
+the ``simulate`` backend, real-kernel execution on ``interpret``, and
+the batched runner's dispatch advantage on a >= 64-scenario sweep.
+"""
+import json
+
+import pytest
+
+from repro.core.characterize import (CurveDB, CurvePoint, characterize,
+                                     characterize_matrix)
+from repro.core.coordinator import CoreCoordinator, ValidationError
+from repro.core.placement import ContentionSpec, MemObject, PlacementAdvisor
+from repro.core.scenarios import (DEFAULT_STRESS_SHAPES, ObserverSpec,
+                                  ScenarioSpec, StressorSpec, TrafficShape,
+                                  load_matrix, save_matrix, scenario_matrix)
+
+BUF = 1 << 20
+
+
+def _spec(name="s", ostrat="r", sstrat="w", shape=None,
+          buffers=(BUF,)) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=name,
+        observer=ObserverSpec(ostrat, "hbm", tuple(buffers)),
+        stressors=(StressorSpec(sstrat, "hbm", BUF,
+                                shape or TrafficShape.steady()),),
+        iters=5)
+
+
+# ---------------------------------------------------------------------------
+# TrafficShape
+# ---------------------------------------------------------------------------
+
+
+def test_traffic_shape_constructors_and_tags():
+    assert TrafficShape.steady().tag() == ""
+    assert TrafficShape.mixed(2, 1).tag() == "rf0.67"
+    assert TrafficShape.mixed(1, 1).read_fraction == 0.5
+    assert TrafficShape.burst(0.5).tag() == "dc0.50"
+    assert TrafficShape.strided(8).tag() == "st8"
+
+
+def test_traffic_shape_validation():
+    with pytest.raises(ValueError):
+        TrafficShape(kind="nope")
+    with pytest.raises(ValueError):
+        TrafficShape(kind="burst", duty_cycle=0.0)
+    with pytest.raises(ValueError):
+        TrafficShape(kind="mixed", read_fraction=1.5)
+    with pytest.raises(ValueError):
+        TrafficShape.strided(0)
+    with pytest.raises(ValueError):
+        TrafficShape.mixed(0, 0)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_spec_dict_roundtrip():
+    spec = ScenarioSpec(
+        name="shaped",
+        observer=ObserverSpec("r", "hbm", (BUF, 2 * BUF)),
+        stressors=(
+            StressorSpec("w", "host", BUF, TrafficShape.burst(0.25)),
+            StressorSpec("r", "hbm", BUF, TrafficShape.mixed(1, 2)),
+            StressorSpec("m", "hbm", BUF, TrafficShape.strided(16)),
+        ),
+        iters=42, max_stressors=3)
+    d = spec.to_dict()
+    back = ScenarioSpec.from_dict(json.loads(json.dumps(d)))
+    assert back == spec
+
+
+def test_matrix_file_roundtrip(tmp_path):
+    specs = scenario_matrix(pools=["hbm", "host"], buffer_bytes=BUF,
+                            obs_strategies=("r", "l"),
+                            stress_shapes=DEFAULT_STRESS_SHAPES, iters=5)
+    p = str(tmp_path / "matrix.json")
+    save_matrix(specs, p)
+    assert load_matrix(p) == specs
+
+
+def test_v1_compatible_keys():
+    """Steady single-stressor scenarios must key exactly like the seed."""
+    assert _spec().key() == "hbm:r|hbm:w"
+    assert CurveDB.key("hbm", "r", "hbm", "w") == "hbm:r|hbm:w"
+    shaped = _spec(shape=TrafficShape.burst(0.5))
+    assert shaped.key() == "hbm:r|hbm:w@dc0.50"
+    assert CurveDB.key("hbm", "r", "hbm", "w", "dc0.50") == shaped.key()
+
+
+def test_spec_validation():
+    c = CoreCoordinator(backend="simulate")
+    c.validate_spec(_spec())
+    with pytest.raises(ValidationError):
+        c.validate_spec(_spec(ostrat="z"))
+    with pytest.raises(ValidationError):
+        bad = ScenarioSpec("b", ObserverSpec("r", "hbm", (BUF,)),
+                           iters=0)
+        c.validate_spec(bad)
+
+
+# ---------------------------------------------------------------------------
+# CurveDB v2 schema versioning
+# ---------------------------------------------------------------------------
+
+
+def test_curvedb_v2_roundtrip_with_provenance(tmp_path):
+    c = CoreCoordinator(backend="simulate")
+    specs = [_spec(), _spec("shaped", shape=TrafficShape.mixed(1, 1))]
+    db = characterize_matrix(c, specs)
+    assert db.schema == 2
+    assert set(db.provenance) == set(db.curves)
+    p = str(tmp_path / "v2.json")
+    db.save(p)
+    db2 = CurveDB.load(p)
+    assert db2.schema == 2
+    assert db2.curves.keys() == db.curves.keys()
+    k = "hbm:r|hbm:w@rf0.50"
+    assert ScenarioSpec.from_dict(db2.provenance[k]).stressors[0].shape \
+        == TrafficShape.mixed(1, 1)
+    assert db2.meta["model_evals"] > 0
+
+
+def test_curvedb_v1_files_still_load(tmp_path):
+    """A seed-format (schema-less) curve file must load and serve
+    lookups, including the shaped-tag fallback to steady curves."""
+    v1 = {"platform": "tpu-v5e",
+          "curves": {"hbm:r|hbm:w": [
+              {"n_stressors": 0, "bandwidth_gbps": 800.0,
+               "latency_ns": 100.0},
+              {"n_stressors": 1, "bandwidth_gbps": 400.0,
+               "latency_ns": 200.0}],
+              "hbm:l|hbm:w": [
+              {"n_stressors": 0, "bandwidth_gbps": 1.0,
+               "latency_ns": 390.0},
+              {"n_stressors": 1, "bandwidth_gbps": 0.5,
+               "latency_ns": 800.0}]}}
+    p = str(tmp_path / "v1.json")
+    with open(p, "w") as f:
+        json.dump(v1, f)
+    db = CurveDB.load(p)
+    assert db.schema == 1
+    assert db.provenance == {}
+    assert db.effective_bw("hbm", 1) == 400.0
+    # shaped lookup falls back to the steady curve on a v1 db
+    assert db.effective_bw("hbm", 1, shape_tag="dc0.50") == 400.0
+    assert db.effective_lat("hbm", 1, shape_tag="rf0.33") == 800.0
+
+
+# ---------------------------------------------------------------------------
+# Shaped smoke sweep (simulate backend physics)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shaped_db():
+    c = CoreCoordinator(backend="simulate")
+    db = characterize(c, pools=["hbm", "host"],
+                      obs_strategies=("r", "l"),
+                      stress_strategies=("r", "w"),
+                      stress_shapes=DEFAULT_STRESS_SHAPES, iters=5)
+    return db, c
+
+
+def test_shaped_sweep_produces_new_curves(shaped_db):
+    db, _ = shaped_db
+    tags = {k.split("@")[1] for k in db.curves if "@" in k}
+    assert {"rf0.67", "rf0.50", "rf0.33", "dc0.50", "st8"} <= tags
+    # copy stressor curves exist under the steady key format
+    assert "hbm:r|hbm:c" in db.curves
+
+
+def test_mixed_ratio_interpolates_read_write(shaped_db):
+    """More write share in the mix -> more WAWB traffic -> lower
+    observed bandwidth, bracketed by the pure-read and pure-write
+    steady curves."""
+    db, _ = shaped_db
+    worst = -1
+    bw_r = db.curves["hbm:r|hbm:r"][worst].bandwidth_gbps
+    bw_21 = db.curves["hbm:r|hbm:r@rf0.67"][worst].bandwidth_gbps
+    bw_11 = db.curves["hbm:r|hbm:r@rf0.50"][worst].bandwidth_gbps
+    bw_12 = db.curves["hbm:r|hbm:r@rf0.33"][worst].bandwidth_gbps
+    assert bw_r >= bw_21 >= bw_11 >= bw_12
+
+
+def test_burst_stress_degrades_less_than_steady(shaped_db):
+    db, _ = shaped_db
+    steady = db.curves["hbm:r|hbm:w"]
+    burst = db.curves["hbm:r|hbm:w@dc0.50"]
+    assert burst[-1].bandwidth_gbps > steady[-1].bandwidth_gbps
+    # both still monotonically degrade with stressor count
+    bws = [p.bandwidth_gbps for p in burst]
+    assert all(a >= b - 1e-9 for a, b in zip(bws, bws[1:]))
+
+
+def test_strided_chase_modeled_distinctly():
+    """The strided shape must reach the queueing model: a strided chase
+    observer sees higher latency than a unit-stride chase (lost
+    row-buffer/prefetch locality), so '@st8' curves are not duplicates
+    of the steady chase curves."""
+    from repro.core import simulate as sim
+    from repro.core.devicetree import TPU_V5E
+    node = TPU_V5E.node("hbm")
+    plain = sim.simulate_scenario(
+        TPU_V5E, [sim.ActivityClass("obs", node, "m", 1)])
+    strided = sim.simulate_scenario(
+        TPU_V5E, [sim.ActivityClass("obs", node, "m", 1, stride=8)])
+    assert strided["obs"].lat_ns > plain["obs"].lat_ns
+    # and through the full matrix path: a strided observer's modeled
+    # latency curve sits above the unit-stride one
+    c = CoreCoordinator(backend="simulate")
+    runs = c.run_matrix([
+        ScenarioSpec("plain", ObserverSpec("m", "hbm", (BUF,)),
+                     (StressorSpec("w", "hbm", BUF),), iters=5),
+        ScenarioSpec("strided", ObserverSpec(
+            "m", "hbm", (BUF,), TrafficShape.strided(8)),
+            (StressorSpec("w", "hbm", BUF),), iters=5),
+    ]).runs
+    lat_plain = [p[1] for p in runs[0].latency_curve()]
+    lat_strided = [p[1] for p in runs[1].latency_curve()]
+    assert all(s > p for s, p in zip(lat_strided, lat_plain))
+
+
+def test_batched_chase_latency_matches_naive():
+    """The batched chase pass splits group wall time /g — valid only if
+    the g chains execute back-to-back within the vmapped pass.  Guard
+    that assumption by comparing against the naive single-chase path."""
+    from repro.core.pools import PoolManager
+    from repro.core.workloads import make_workload, measure_group
+    mgr = PoolManager()
+    wl = make_workload("l", mgr.pool("hbm"), 64 << 10)
+    try:
+        naive = wl.run(10)
+    finally:
+        wl.release()
+    batched, _ = measure_group("l", mgr.pool("hbm"), 64 << 10, 6, 10)
+    assert batched[0].latency_ns == pytest.approx(naive.latency_ns,
+                                                  rel=0.5)
+
+
+def test_copy_stress_between_read_and_write(shaped_db):
+    """Copy traffic (1.5 Tx/line) must hurt more than pure reads
+    (1 Tx/line) and no more than allocating writes (2 Tx/line)."""
+    db, _ = shaped_db
+    bw_r = db.curves["hbm:r|hbm:r"][-1].bandwidth_gbps
+    bw_c = db.curves["hbm:r|hbm:c"][-1].bandwidth_gbps
+    bw_w = db.curves["hbm:r|hbm:w"][-1].bandwidth_gbps
+    assert bw_w <= bw_c <= bw_r
+
+
+def test_placement_consumes_shaped_curves(shaped_db):
+    db, c = shaped_db
+    adv = PlacementAdvisor(db, c.platform, pools=["hbm", "host"])
+    obj = MemObject("heap", BUF, bytes_per_step=float(BUF))
+    steady = adv.predict_ns(obj, "hbm", ContentionSpec(7, "hbm", "w"))
+    burst = adv.predict_ns(
+        obj, "hbm",
+        ContentionSpec.shaped(7, "hbm", "w", TrafficShape.burst(0.5)))
+    assert burst < steady          # duty-cycled stress hurts less
+
+
+# ---------------------------------------------------------------------------
+# Batched matrix runner on real (interpret-mode) kernels
+# ---------------------------------------------------------------------------
+
+
+def test_interpret_matrix_runs_real_kernels():
+    c = CoreCoordinator(backend="interpret")
+    specs = [
+        ScenarioSpec("copy", ObserverSpec("c", "hbm", (64 << 10,)),
+                     (StressorSpec("w", "hbm", 64 << 10),),
+                     iters=2, max_stressors=1),
+        ScenarioSpec("mixed", ObserverSpec(
+            "r", "hbm", (64 << 10,), TrafficShape.mixed(1, 1)),
+            (StressorSpec("w", "hbm", 64 << 10),),
+            iters=2, max_stressors=1),
+        ScenarioSpec("strided", ObserverSpec(
+            "m", "hbm", (64 << 10,), TrafficShape.strided(8)),
+            (StressorSpec("w", "hbm", 64 << 10),),
+            iters=2, max_stressors=1),
+    ]
+    res = c.run_matrix(specs)
+    for run in res.runs:
+        assert run.scenarios[0].main.bytes_moved > 0
+        assert run.scenarios[0].main.elapsed_ns > 0
+    # strided chase reports per-transaction latency
+    assert res.runs[2].scenarios[0].main.latency_ns > 0
+    for p in c.pools.pools():
+        assert p.allocated == 0
+
+
+def test_batched_runner_fewer_dispatches_64():
+    """>= 64-scenario sweep: the batched runner must dispatch
+    demonstrably fewer measured passes than the per-point loop."""
+    c = CoreCoordinator(backend="interpret")
+    specs = scenario_matrix(pools=["hbm", "host"],
+                            buffer_bytes=64 << 10,
+                            obs_strategies=("r", "w"),
+                            stress_shapes=DEFAULT_STRESS_SHAPES[:8],
+                            iters=2, max_stressors=1)
+    assert len(specs) >= 64
+    batched = c.run_matrix(specs, batched=True)
+    naive = c.run_matrix(specs, batched=False)
+    assert naive.stats.measure_dispatches == len(specs)
+    assert batched.stats.measure_dispatches < naive.stats.measure_dispatches
+    assert batched.stats.measure_dispatches <= 8
+    # both modes measured every scenario
+    assert batched.stats.n_scenarios == naive.stats.n_scenarios == len(specs)
+    for run in batched.runs:
+        assert run.scenarios[0].main.elapsed_ns > 0
+
+
+def test_buffer_ladder_keys_are_distinct():
+    c = CoreCoordinator(backend="simulate")
+    spec = ScenarioSpec(
+        "ladder", ObserverSpec("r", "hbm", (BUF, 2 * BUF)),
+        (StressorSpec("w", "hbm", BUF),), iters=5, max_stressors=1)
+    res = c.run_matrix([spec])
+    keys = [r.key for r in res.runs]
+    assert len(keys) == 2 and len(set(keys)) == 2
+    assert all("buf=" in k for k in keys)

@@ -180,8 +180,8 @@ def test_train_step_with_compression(setup):
 
 def test_zero1_specs_shard_largest_axis():
     import jax.sharding as shd
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     P = shd.PartitionSpec
     specs = {"w": P(None, "model")}
     structs = {"w": jax.ShapeDtypeStruct((128, 64), jnp.float32)}
