@@ -51,7 +51,8 @@ def main() -> list:
     # a 50%-duty write burst degrades the observer less than steady writes
     assert bw("hbm:r|hbm:w@dc0.50", 7) > bw("hbm:r|hbm:w", 7)
     # more write share in the mix -> more WAWB amplification -> worse
-    assert bw("hbm:r|hbm:r@rf0.33", 7) < bw("hbm:r|hbm:r@rf0.67", 7)
+    rf12, rf21 = TrafficShape.mixed(1, 2).tag(), TrafficShape.mixed(2, 1).tag()
+    assert bw(f"hbm:r|hbm:r@{rf12}", 7) < bw(f"hbm:r|hbm:r@{rf21}", 7)
 
     # -- 2. batched vs naive dispatches, interpret backend ------------------
     ic = coordinator(backend="interpret")

@@ -89,6 +89,18 @@ def shard_map(f, *, mesh, in_specs, out_specs, **kw):
                                 out_specs=out_specs, **kw)
 
 
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` where it exists (it moved into
+    ``jax.lax`` from ad_checkpoint internals); identity on releases
+    without it.  Used to pin the SPMD measured region behind the start
+    barrier: threading the barrier psum through this op gives the
+    measured activity a dataflow dependency XLA cannot hoist across."""
+    fn = getattr(jax.lax, "optimization_barrier", None)
+    if fn is None:
+        return x
+    return fn(x)
+
+
 def pvary(x, axes):
     """``jax.lax.pvary`` where it exists (newer shard_map replication
     typing); identity on older JAX, where values are device-varying by

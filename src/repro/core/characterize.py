@@ -181,28 +181,55 @@ def characterize(
 def characterize_matrix(coord: CoreCoordinator,
                         specs: List[ScenarioSpec], *,
                         batched: bool = True) -> CurveDB:
-    """Run an explicit scenario matrix and persist it as CurveDB v2."""
+    """Run an explicit scenario matrix and persist it as CurveDB v2.
+
+    Each curve's provenance records the scenario spec AND an
+    ``execution`` entry (which backend produced it, and which ladder
+    rungs were *executed* vs *modeled*) — an spmd-backend curve whose
+    every point came from a live fused multi-engine dispatch is
+    distinguishable from a queueing-model curve after the fact."""
     result: MatrixResult = coord.run_matrix(specs, batched=batched)
-    db = CurveDB(platform=coord.platform.name)
+    return curvedb_from_result(result, coord.platform.name,
+                               backend=coord.backend)
+
+
+def curvedb_from_result(result: MatrixResult, platform: str, *,
+                        backend: str = "") -> CurveDB:
+    """Persist an already-executed :class:`MatrixResult` as CurveDB v2
+    (no re-execution — callers that want both the runs and the DB pass
+    their ``run_matrix`` result here instead of characterizing twice)."""
+    db = CurveDB(platform=platform)
     db.meta = {
-        "backend": coord.backend,
+        "backend": backend,
         "n_scenarios": result.stats.n_scenarios,
+        "n_ladders": result.stats.n_ladders,
         "measure_dispatches": result.stats.measure_dispatches,
         "model_evals": result.stats.model_evals,
+        "spmd_rungs": result.stats.spmd_rungs,
     }
     for run in result.runs:
-        pts = [CurvePoint(s.n_stressors, s.modeled_bw_gbps,
-                          s.modeled_lat_ns) for s in run.scenarios]
-        spec_dict = run.spec.to_dict()
-        if run.key in db.curves and db.provenance[run.key] != spec_dict:
-            # distinct specs aliasing one key (e.g. shape tags rounding
-            # to the same spelling) must not silently overwrite curves
+        # the curve methods pick executed values where the backend ran
+        # the rung and modeled values elsewhere
+        pts = [CurvePoint(k, bw, lat)
+               for (k, bw), (_k, lat) in zip(run.bandwidth_curve(),
+                                             run.latency_curve())]
+        entry = run.spec.to_dict()
+        entry["curve"] = {"observer": (asdict(run.observer)
+                                       if run.observer is not None
+                                       else None),
+                          "buffer_bytes": run.buffer_bytes}
+        prev = db.provenance.get(run.key)
+        if prev is not None and {k: v for k, v in prev.items()
+                                 if k != "execution"} != entry:
+            # distinct scenarios/observers/buffers aliasing one key
+            # (e.g. shape tags rounding to the same spelling) must not
+            # silently overwrite curves
             raise ValueError(
                 f"curve key collision: {run.key!r} produced by both "
-                f"{db.provenance[run.key]['name']!r} and "
-                f"{run.spec.name!r}")
+                f"{prev['name']!r} and {run.spec.name!r}")
         db.curves[run.key] = pts
-        db.provenance[run.key] = spec_dict
+        entry["execution"] = run.execution
+        db.provenance[run.key] = entry
     return db
 
 

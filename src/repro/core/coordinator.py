@@ -43,9 +43,10 @@ from repro.core.devicetree import Platform, detect_platform
 from repro.core.pools import MemoryPool, PoolManager
 from repro.core.scenarios import (ObserverSpec, ScenarioSpec, StressorSpec,
                                   TrafficShape)
-from repro.core.workloads import (Workload, WorkloadResult,
+from repro.core.workloads import (LINE_BYTES, Workload, WorkloadResult,
                                   make_shaped_workload, make_workload,
-                                  measure_group)
+                                  measure_group, resolve_strategy)
+from repro.core.workloads import _rows as _wl_rows
 
 # ---------------------------------------------------------------------------
 
@@ -102,6 +103,11 @@ class ScenarioResult:
     modeled_bw_gbps: float = 0.0
     modeled_lat_ns: float = 0.0
     stress_bw_gbps: float = 0.0
+    # where this rung's curve value comes from: "modeled" (queueing
+    # network; `main` is at most an uncontended measurement) or
+    # "executed" (`main` IS the observer measured under n_stressors
+    # live stress engines — the spmd backend)
+    source: str = "modeled"
 
 
 @dataclass
@@ -134,7 +140,7 @@ class CoreCoordinator:
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
             backend = "tpu" if jax.default_backend() == "tpu" else "simulate"
-        assert backend in ("simulate", "interpret", "tpu"), backend
+        assert backend in ("simulate", "interpret", "tpu", "spmd"), backend
         self.backend = backend
 
     # -- Experiment Instantiator ----------------------------------------
@@ -267,17 +273,17 @@ class CoreCoordinator:
 
     def validate_spec(self, spec: ScenarioSpec) -> None:
         from repro.core.workloads import _REGISTRY
-        obs = spec.observer
-        if obs.strategy not in _REGISTRY:
-            raise ValidationError(
-                f"{spec.name}: unknown observer strategy "
-                f"{obs.strategy!r}")
-        pool = self.pools.pool(obs.pool)
-        for b in obs.buffers:
-            if obs.strategy != "i" and b > pool.available:
+        for obs in spec.observers:
+            if obs.strategy not in _REGISTRY:
                 raise ValidationError(
-                    f"{spec.name}: observer buffer {b}B exceeds pool "
-                    f"{obs.pool} ({pool.available}B free)")
+                    f"{spec.name}: unknown observer strategy "
+                    f"{obs.strategy!r}")
+            pool = self.pools.pool(obs.pool)
+            for b in obs.buffers:
+                if obs.strategy != "i" and b > pool.available:
+                    raise ValidationError(
+                        f"{spec.name}: observer buffer {b}B exceeds pool "
+                        f"{obs.pool} ({pool.available}B free)")
         for s in spec.stressors:
             if s.strategy not in _REGISTRY:
                 raise ValidationError(
@@ -292,21 +298,28 @@ class CoreCoordinator:
                 f"{spec.name}: max_stressors out of "
                 f"[0, {self.platform.n_engines})")
 
-    def _obs_activity(self, spec: ScenarioSpec,
+    def _obs_activity(self, observer: ObserverSpec,
                       buffer_bytes: int) -> ActivitySpec:
-        sh = spec.observer.shape
+        sh = observer.shape
         return ActivitySpec(
-            spec.observer.strategy, spec.observer.pool, buffer_bytes,
+            observer.strategy, observer.pool, buffer_bytes,
             read_fraction=(sh.read_fraction if sh.kind == "mixed"
                            else None),
             duty_cycle=sh.duty_cycle, stride=sh.stride)
 
-    def _model_spec_scenario(self, spec: ScenarioSpec, buffer_bytes: int,
+    def _model_spec_scenario(self, spec: ScenarioSpec,
+                             observer: ObserverSpec, buffer_bytes: int,
                              k: int) -> Tuple[float, float, float]:
-        """Model one rung of the ladder: observer + k stress engines
-        distributed round-robin over the stressor ensemble."""
-        obs_act = self._obs_activity(spec, buffer_bytes)
-        obs_pool = self.pools.pool(spec.observer.pool)
+        """Model one rung of the ladder: one observer + k stress engines
+        distributed round-robin over the stressor ensemble.  Each
+        observer of a multi-observer scenario sees ONLY the stressor
+        ensemble — on every backend.  The interpret backend shares one
+        uncontended vmapped pass across same-signature observers, and
+        the spmd backend executes each observer's ladder as its own
+        rung dispatches; co-observers are never part of each other's
+        measured region (ROADMAP open item)."""
+        obs_act = self._obs_activity(observer, buffer_bytes)
+        obs_pool = self.pools.pool(observer.pool)
         first = spec.stressors[0] if spec.stressors else None
         obs_node = self._model_node(
             obs_act, obs_pool,
@@ -337,58 +350,98 @@ class CoreCoordinator:
                 obs.lat_ns if obs else 0.0,
                 stress_bw)
 
+    def _ladder_depth(self, spec: ScenarioSpec) -> int:
+        n = (spec.max_stressors + 1 if spec.max_stressors is not None
+             else self.platform.n_engines)
+        n = min(n, self.platform.n_engines)
+        if self.backend == "spmd":
+            # rung k needs k stress engines + 1 observer on the mesh
+            n = min(n, self._spmd_engines())
+        return max(1, n)
+
     def run_matrix(self, specs: List[ScenarioSpec], *,
                    batched: bool = True) -> "MatrixResult":
         """Execute a scenario matrix.
 
         The measured observer pass is where executable backends spend
         their dispatches; ``batched=True`` groups same-signature
-        observers (strategy, shape, row count, residency, pool) and
-        measures each group with ONE jit'd vmapped pass, instead of the
-        naive one-dispatch-per-scenario Python loop.  The contention
-        ladder itself is modeled per scenario on every backend (single
-        real device)."""
+        observers (strategy, shape, row count, residency, effective
+        memory placement) and measures each group with ONE jit'd
+        vmapped pass, instead of the naive one-dispatch-per-scenario
+        Python loop.  Multi-observer scenarios contribute one ladder
+        per (observer, buffer) and their observers join the same
+        signature groups.
+
+        Backends: ``simulate``/``interpret``/``tpu`` model the
+        contention ladder per rung (interpret/tpu additionally measure
+        the uncontended observer); ``spmd`` *executes* every rung —
+        one fused shard_map dispatch over the engine mesh per rung,
+        observer + k live stressor engines between two psum barriers —
+        and the resulting curves carry ``source == "executed"``."""
         for spec in specs:
             self.validate_spec(spec)
-        pairs = [(spec, b) for spec in specs
-                 for b in spec.observer.buffers]
-        stats = DispatchStats(n_scenarios=len(pairs))
+        triples = [(spec, obs, b) for spec in specs
+                   for obs in spec.observers for b in obs.buffers]
+        stats = DispatchStats(n_scenarios=len(specs),
+                              n_ladders=len(triples))
 
         measured: Dict[int, WorkloadResult] = {}
+        executed: Dict[Tuple[int, int], WorkloadResult] = {}
+        fenced_by_triple: Dict[int, bool] = {}
         if self.backend in ("interpret", "tpu"):
-            measured = self._measure_pairs(pairs, batched, stats)
+            measured = self._measure_triples(triples, batched, stats)
+        elif self.backend == "spmd":
+            executed, fenced_by_triple = self._execute_spmd(triples,
+                                                            stats)
 
         runs: List[ScenarioRun] = []
-        for i, (spec, buf) in enumerate(pairs):
-            n_scen = (spec.max_stressors + 1
-                      if spec.max_stressors is not None
-                      else self.platform.n_engines)
-            n_scen = min(n_scen, self.platform.n_engines)
-            main_res = measured.get(i) or WorkloadResult(
-                spec.observer.strategy, spec.observer.pool, buf,
-                spec.iters, 0, 0.0, 0)
+        for i, (spec, obs, buf) in enumerate(triples):
+            n_scen = self._ladder_depth(spec)
             scenarios = []
+            exec_rungs = []
             for k in range(n_scen):
-                bw, lat, sbw = self._model_spec_scenario(spec, buf, k)
+                bw, lat, sbw = self._model_spec_scenario(spec, obs, buf, k)
                 stats.model_evals += 1
+                ex = executed.get((i, k))
+                main_res = ex if ex is not None else (
+                    measured.get(i) or WorkloadResult(
+                        obs.strategy, obs.pool, buf, spec.iters, 0, 0.0,
+                        0))
+                if ex is not None:
+                    exec_rungs.append(k)
                 scenarios.append(ScenarioResult(
                     n_stressors=k, main=main_res, modeled_bw_gbps=bw,
-                    modeled_lat_ns=lat, stress_bw_gbps=sbw))
+                    modeled_lat_ns=lat, stress_bw_gbps=sbw,
+                    source="executed" if ex is not None else "modeled"))
+            execution = {
+                "backend": self.backend,
+                "executed_rungs": exec_rungs,
+                "modeled_rungs": [k for k in range(n_scen)
+                                  if k not in exec_rungs],
+                "measured_uncontended": i in measured,
+            }
+            if self.backend == "spmd":
+                execution["n_engines"] = self._spmd_engines()
+                # the structurally VERIFIED fence state of this
+                # ladder's executed programs (jaxpr dataflow check)
+                execution["fenced"] = fenced_by_triple.get(i, False)
             runs.append(ScenarioRun(spec=spec, buffer_bytes=buf,
-                                    key=spec.key(buf),
-                                    scenarios=scenarios))
+                                    key=spec.key_for(obs, buf),
+                                    observer=obs,
+                                    scenarios=scenarios,
+                                    execution=execution))
         return MatrixResult(runs=runs, stats=stats)
 
-    def _measure_pairs(self, pairs, batched: bool,
-                       stats: "DispatchStats") -> Dict[int, WorkloadResult]:
-        """The measured observer pass over all (spec, buffer) pairs."""
+    def _measure_triples(self, triples, batched: bool,
+                         stats: "DispatchStats") -> Dict[int, WorkloadResult]:
+        """The measured observer pass over all (spec, observer, buffer)
+        triples (uncontended: single real device)."""
         measured: Dict[int, WorkloadResult] = {}
         if not batched:
-            for i, (spec, buf) in enumerate(pairs):
+            for i, (spec, obs, buf) in enumerate(triples):
                 wl = make_shaped_workload(
-                    spec.observer.strategy,
-                    self.pools.pool(spec.observer.pool), buf,
-                    spec.observer.shape)
+                    obs.strategy, self.pools.pool(obs.pool), buf,
+                    obs.shape)
                 try:
                     measured[i] = wl.run(spec.iters)
                 finally:
@@ -396,20 +449,195 @@ class CoreCoordinator:
                 stats.measure_dispatches += 1
             return measured
 
+        # Group signature: everything that changes the compiled measured
+        # pass or the numbers stamped on its results.  ``iters`` is part
+        # of the signature — members must be measured at THEIR OWN
+        # budget, not silently at the group max.  The pool appears only
+        # through its *effective* placement: observers from different
+        # pools whose arrays land in the same physical memory (e.g. hbm
+        # + emulated host on this container) legally share one stacked
+        # vmapped batch; pools that really differ split.
         groups: Dict[Tuple, List[int]] = {}
-        for i, (spec, buf) in enumerate(pairs):
-            obs = spec.observer
-            sig = (obs.strategy, obs.shape, obs.pool, buf)
+        for i, (spec, obs, buf) in enumerate(triples):
+            pool = self.pools.pool(obs.pool)
+            sig = (obs.strategy, obs.shape, buf, spec.iters,
+                   pool.effective_memory_kind(),
+                   pool.node.kind == "vmem")
             groups.setdefault(sig, []).append(i)
-        for (strategy, shape, pool_name, buf), idxs in groups.items():
-            iters = max(pairs[i][0].iters for i in idxs)
+        for (strategy, shape, buf, iters, _kind, _vm), idxs in \
+                groups.items():
+            member_pools = [self.pools.pool(triples[i][1].pool)
+                            for i in idxs]
             results, dispatches = measure_group(
-                strategy, self.pools.pool(pool_name), buf, len(idxs),
-                iters, shape=shape)
+                strategy, member_pools[0], buf, len(idxs), iters,
+                shape=shape, member_pools=member_pools)
             stats.measure_dispatches += dispatches
             for i, res in zip(idxs, results):
                 measured[i] = res
         return measured
+
+    # -- the spmd backend: executable multi-engine contention -----------
+
+    def _spmd_engines(self) -> int:
+        return max(1, min(self.platform.n_engines, len(jax.devices())))
+
+    def _execute_spmd(
+        self, triples, stats: "DispatchStats",
+    ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool]]:
+        """Execute every ladder rung of every (spec, observer, buffer)
+        triple as ONE fused SPMD dispatch over the engine mesh.
+        Returns the per-(triple, rung) observer results and the
+        verified fence state per triple."""
+        n_eng = self._spmd_engines()
+        if n_eng < 2:
+            raise ValidationError(
+                "spmd backend needs >= 2 devices; start the process with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                "(CPU container) or run on a real multi-device slice")
+        executed: Dict[Tuple[int, int], WorkloadResult] = {}
+        fenced_by_triple: Dict[int, bool] = {}
+        # program cache across rungs/triples with identical role
+        # signatures: one mesh+jit+fence-trace per distinct program,
+        # however many curves reuse it (dispatch accounting unchanged)
+        programs: Dict[Tuple, Tuple] = {}
+        for i, (spec, obs, buf) in enumerate(triples):
+            fenced = True
+            for k in range(self._ladder_depth(spec)):
+                executed[(i, k)], rung_fenced = self._run_spmd_rung(
+                    spec, obs, buf, k, n_eng, programs)
+                fenced = fenced and rung_fenced
+                stats.measure_dispatches += 1
+                stats.spmd_rungs += 1
+            fenced_by_triple[i] = fenced
+        return executed, fenced_by_triple
+
+    def _run_spmd_rung(self, spec: ScenarioSpec, obs: ObserverSpec,
+                       buf: int, k: int, n_eng: int,
+                       programs: Optional[Dict[Tuple, Tuple]] = None,
+                       ) -> Tuple[WorkloadResult, bool]:
+        """One rung, one fused program: engine 0 runs the observer,
+        engines 1..k the stressor ensemble (round-robin), the rest idle
+        — all branches of a single ``shard_map`` dispatch whose
+        measured region sits between the two psum barriers of
+        :func:`build_rung_program` (the spin-lock sandwich, collective
+        edition, dataflow-enforced; the returned bool is the
+        structurally *verified* fence state of this rung's program).
+
+        The wall time of the dispatch is the measured region: it closes
+        at the stop barrier, i.e. when the SLOWEST engine finishes
+        (paper invariant 3).  Stressor iteration budgets are therefore
+        work-balanced against the observer's (equal line-touch totals)
+        so role imbalance does not masquerade as contention; residual
+        per-kind speed differences (a chase row costs more than a
+        stream row) remain — per-engine device-side timing is the
+        ROADMAP item."""
+        import time as _time
+
+        from repro.kernels import ops as kops
+
+        iters = spec.iters
+        obs_rows = _wl_rows(buf)
+        roles = [(obs.strategy, obs.shape, obs_rows, iters)]
+        m = len(spec.stressors)
+        # balance against the passes the observer branch will actually
+        # execute (its duty cycle included), and divide out each
+        # stressor's own duty — the branch fns apply duty internally
+        obs_duty = getattr(obs.shape, "duty_cycle", 1.0)
+        obs_work = obs_rows * max(1, round(iters * obs_duty))
+        for e in range(k):
+            if m:
+                s = spec.stressors[e % m]
+                s_rows = _wl_rows(s.buffer_bytes)
+                s_duty = getattr(s.shape, "duty_cycle", 1.0) or 1.0
+                s_iters = max(1, round(obs_work / (s_rows * s_duty)))
+                roles.append((s.strategy, s.shape, s_rows, s_iters))
+            else:
+                roles.append(("i", None, 1, iters))
+        while len(roles) < n_eng:
+            roles.append(("i", None, 1, iters))
+
+        rows_max = max(r[2] for r in roles)
+        program_key = (n_eng, tuple(roles))
+        cached = programs.get(program_key) if programs is not None \
+            else None
+
+        # per-engine operands: a float stream buffer and an int chase
+        # chain, padded to the widest role.  (Per-pool memory kinds are
+        # not addressable per-engine on a host-device mesh; the pools'
+        # effective placement on this container is the default memory
+        # anyway, and the curve records its pool label from the spec.)
+        xf = np.broadcast_to(
+            np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
+            .reshape(rows_max, LINE_BYTES // 4),
+            (n_eng, rows_max, LINE_BYTES // 4)).copy()
+        xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
+        for e, (strategy, shape, rows, _ri) in enumerate(roles):
+            if resolve_strategy(strategy, shape) in _SPMD_CHASES:
+                if resolve_strategy(strategy, shape) == "t":
+                    chain = kops.strided_chain_buffer(
+                        rows, getattr(shape, "stride", 8) or 8)
+                else:
+                    chain = kops.chain_buffer(rows, seed=e)
+                xi[e, :rows, :chain.shape[1]] = chain
+
+        if cached is not None:
+            mesh, fn, fenced = cached
+        else:
+            branch_fns: List = []
+            engine_branch: List[int] = []
+            branch_of: Dict[Tuple, int] = {}
+            for strategy, shape, rows, role_iters in roles:
+                sig = (strategy, shape, rows, role_iters)
+                if sig not in branch_of:
+                    branch_of[sig] = len(branch_fns)
+                    branch_fns.append(_spmd_branch_fn(
+                        strategy, shape, rows, role_iters))
+                engine_branch.append(branch_of[sig])
+            mesh, fn = build_rung_program(n_eng, branch_fns,
+                                          engine_branch)
+            # provenance records the VERIFIED fence state, not an
+            # assertion (compat.optimization_barrier degrades to
+            # identity on JAX releases without the op — there the psum
+            # folds away and this honestly reports unfenced)
+            fenced = measured_region_is_fenced(fn, xf, xi)
+            if programs is not None:
+                programs[program_key] = (mesh, fn, fenced)
+        # commit the operands onto the mesh BEFORE the measured region:
+        # a host array would be re-transferred inside every timed call,
+        # and the transfer (which scales with the widest role, not the
+        # observer) would dominate the measurement
+        from jax.sharding import PartitionSpec as P
+        sharding = jax.sharding.NamedSharding(mesh, P("engine"))
+        xf = jax.device_put(xf, sharding)
+        xi = jax.device_put(xi, sharding)
+        jax.block_until_ready((xf, xi))
+        jax.block_until_ready(fn(xf, xi))          # compile + warm
+        samples = []
+        for _ in range(3):
+            t0 = _time.perf_counter_ns()
+            jax.block_until_ready(fn(xf, xi))
+            samples.append(_time.perf_counter_ns() - t0)
+        elapsed = float(np.median(samples))
+
+        strat = resolve_strategy(obs.strategy, obs.shape)
+        duty = getattr(obs.shape, "duty_cycle", 1.0)
+        n_active = max(1, int(round(iters * duty)))
+        # stamp the RESOLVED strategy letter, like the interpret-path
+        # group measurement does: the executed branch for a mixed 'r'
+        # observer is the 'b' loop, and provenance must say so
+        if strat in _SPMD_CHASES:
+            # elapsed spans n_active full traversals: bytes and
+            # transactions both scale with it (latency = elapsed/tx)
+            res = WorkloadResult(strat, obs.pool, buf, iters,
+                                 obs_rows * LINE_BYTES * n_active,
+                                 elapsed,
+                                 transactions=obs_rows * n_active)
+        else:
+            mult = 2 if strat in _SPMD_STREAM_2X else 1
+            res = WorkloadResult(strat, obs.pool, buf, iters,
+                                 mult * obs_rows * LINE_BYTES * n_active,
+                                 elapsed, 0)
+        return res, fenced
 
 
 # ---------------------------------------------------------------------------
@@ -419,29 +647,40 @@ class CoreCoordinator:
 
 @dataclass
 class ScenarioRun:
-    """One (scenario, observer-buffer) ladder."""
+    """One (scenario, observer, buffer) ladder."""
     spec: ScenarioSpec
     buffer_bytes: int
     key: str
+    observer: Optional[ObserverSpec] = None   # which observer this curve is
     scenarios: List[ScenarioResult] = field(default_factory=list)
+    # executed-vs-modeled provenance, persisted into CurveDB v2:
+    # {"backend", "executed_rungs", "modeled_rungs", ...}
+    execution: Dict[str, Any] = field(default_factory=dict)
 
     def bandwidth_curve(self) -> List[Tuple[int, float]]:
-        return [(s.n_stressors, s.modeled_bw_gbps or s.main.bandwidth_gbps)
+        return [(s.n_stressors,
+                 s.main.bandwidth_gbps if s.source == "executed"
+                 else (s.modeled_bw_gbps or s.main.bandwidth_gbps))
                 for s in self.scenarios]
 
     def latency_curve(self) -> List[Tuple[int, float]]:
-        return [(s.n_stressors, s.modeled_lat_ns or s.main.latency_ns)
+        return [(s.n_stressors,
+                 s.main.latency_ns if s.source == "executed"
+                 else (s.modeled_lat_ns or s.main.latency_ns))
                 for s in self.scenarios]
 
 
 @dataclass
 class DispatchStats:
     """Execution accounting for the matrix runner: the batched runner's
-    claim ("fewer dispatches than the per-point loop") is checked
-    against these numbers in the tests."""
-    n_scenarios: int = 0
+    claim ("fewer dispatches than the per-point loop") and the spmd
+    backend's claim ("one fused SPMD dispatch per ladder rung") are
+    checked against these numbers in the tests."""
+    n_scenarios: int = 0            # ScenarioSpecs in the matrix
+    n_ladders: int = 0              # (spec, observer, buffer) ladders
     measure_dispatches: int = 0     # timed executable kernel passes
     model_evals: int = 0            # queueing-network solves
+    spmd_rungs: int = 0             # fused SPMD rung dispatches
 
 
 @dataclass
@@ -452,9 +691,136 @@ class MatrixResult:
 
 # ---------------------------------------------------------------------------
 # The SPMD scenario program (the spin-lock sandwich, collective edition).
-# Built for any 1-D mesh of engines; dry-runnable on host devices and
-# executable unchanged on a real slice.
+# Built for any 1-D mesh of engines; executable on forced host devices in
+# this container and unchanged on a real slice.  The ``spmd`` backend
+# dispatches one of these programs per ladder rung.
 # ---------------------------------------------------------------------------
+
+_SPMD_CHASES = ("l", "m", "t")      # latency walks: dependent gathers
+_SPMD_STREAM_2X = ("c", "x")        # copy/rmw touch two lines per line
+
+
+def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int):
+    """Per-engine activity for one SPMD rung: ``(xf, xi) -> f32``.
+
+    Pure-jnp traffic loops (no Pallas: every branch must trace under
+    ``shard_map``'s switch on any backend).  All branches take the SAME
+    operand pair and return a scalar so ``lax.switch`` can fuse them;
+    each closes over its own static row count and iteration budget.
+    Loop bodies either carry the buffer or re-issue it through
+    ``optimization_barrier`` so XLA cannot hoist the memory traffic out
+    of the loop."""
+    from repro import compat
+
+    strat = resolve_strategy(strategy, shape)
+    duty = getattr(shape, "duty_cycle", 1.0) if shape is not None else 1.0
+    n = max(1, int(round(iters * duty)))
+
+    if strategy == "i":
+        def idle(xf, xi):
+            def body(_, acc):
+                return acc * 0.999 + 1.0
+            # seeded from the (barrier-fenced) operand: even idle
+            # engines enter their spin only after the start barrier
+            return jax.lax.fori_loop(0, n * 8, body, xf[0, 0] * 1e-30)
+        return idle
+
+    if strat in _SPMD_CHASES:
+        def chase(xf, xi):
+            chain = xi[:rows, 0]
+
+            def step(_, idx):
+                return chain[idx]
+
+            def cycle(_, carry):
+                idx, acc = carry
+                idx = jax.lax.fori_loop(0, rows, step, idx)
+                return idx, acc + idx.astype(jnp.float32)
+
+            _, acc = jax.lax.fori_loop(
+                0, n, cycle, (jnp.int32(0), jnp.float32(0.0)))
+            return acc
+        return chase
+
+    if strat in ("w", "y"):
+        def write(xf, xi):
+            def body(_, x):
+                return x + 1.0
+            x = jax.lax.fori_loop(0, n, body, xf[:rows])
+            return x[0, 0]
+        return write
+
+    if strat in ("c", "x", "b"):
+        def readwrite(xf, xi):
+            def body(_, x):
+                return x * 1.0000001 + 0.25
+            x = jax.lax.fori_loop(0, n, body, xf[:rows])
+            return x[0, 0]
+        return readwrite
+
+    def read(xf, xi):
+        x = xf[:rows]
+
+        def body(_, acc):
+            # re-issue the buffer each pass: the barrier pins the reads
+            # inside the loop (a bare sum would be loop-invariant)
+            xx = compat.optimization_barrier(x)
+            return acc * 0.5 + jnp.sum(xx)
+
+        return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
+    return read
+
+
+def build_rung_program(n_engines: int, branch_fns, engine_branch):
+    """One fused SPMD rung over an ("engine",) mesh.
+
+    Returns ``(mesh, f)`` with ``f(xf, xi) -> (per_engine_out, barrier)``
+    jit-compiled: engine ``e`` runs ``branch_fns[engine_branch[e]]`` on
+    its shard of the operands.  The measured region is *provably*
+    sandwiched (invariants 1-4 of the module docstring):
+
+      start — every engine all-reduces a token derived from its live
+          operand data (psum #1; a constant token would fold away at
+          trace time), and the operands are re-issued through
+          ``optimization_barrier`` together with that token, so every
+          activity's operands carry a dataflow dependency on the
+          collective: XLA cannot schedule measured work before the
+          barrier completes;
+      stop — the activity outputs are all-reduced (psum #2) into the
+          returned barrier value, so the dispatch only retires after
+          every engine's activity finished, and the next rung (a new
+          dispatch) cannot begin until the host unblocks.
+
+    :func:`measured_region_is_fenced` asserts the start edge
+    structurally (jaxpr dataflow), which the tests pin down.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    devs = jax.devices()[:n_engines]
+    mesh = compat.make_mesh_from_devices(devs, ("engine",))
+    table = jnp.asarray(list(engine_branch), jnp.int32)
+
+    def per_engine(xf, xi):
+        xf, xi = xf[0], xi[0]
+        # barrier #1 (see docstring): data-derived token, all-reduced,
+        # then threaded into every operand
+        token = jax.lax.psum(xf[0, 0] + xi[0, 0].astype(xf.dtype),
+                             "engine")
+        xf, xi, token = compat.optimization_barrier((xf, xi, token))
+        eng = jax.lax.axis_index("engine")
+        out = jax.lax.switch(table[eng], branch_fns, xf, xi)
+        # barrier #2: consumes every engine's finished activity.  (The
+        # start token is alive through the operands' barrier edge; only
+        # the stop psum — statically replicated — is returned.)
+        done = jax.lax.psum(out, "engine")
+        return out[None], done
+
+    f = compat.shard_map(per_engine, mesh=mesh,
+                         in_specs=(P("engine"), P("engine")),
+                         out_specs=(P("engine"), P()))
+    return mesh, jax.jit(f)
 
 
 def build_scenario_program(n_engines: int, n_stressors: int,
@@ -462,7 +828,12 @@ def build_scenario_program(n_engines: int, n_stressors: int,
     """Returns f(main_x, stress_x) -> (main_out, barrier) running under
     ``shard_map`` over an ("engine",) mesh: engine 0 = observed, engines
     1..n_stressors = stress, rest idle.  The measured region is fenced by
-    two psum barriers (invariants 1-4 above)."""
+    two psum barriers (invariants 1-4 above) — and the fence is
+    dataflow-enforced: the start psum is derived from live operand data
+    and re-issued into the operands via ``optimization_barrier``, so
+    the activities cannot be hoisted above it (the historical version
+    computed a psum nothing depended on, which JAX folds away at trace
+    time — invariant 1 was unenforced)."""
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
@@ -472,27 +843,98 @@ def build_scenario_program(n_engines: int, n_stressors: int,
 
     def per_engine(main_x, stress_x):
         eng = jax.lax.axis_index("engine")
-        # barrier #1: every engine signals ready before measurement starts
-        ready = jax.lax.psum(jnp.ones((), jnp.int32), "engine")
+        # barrier #1: every engine signals ready before measurement
+        # starts, and the measured operands depend on the collective
+        seed = (jnp.ravel(main_x)[0].astype(jnp.float32)
+                + jnp.ravel(stress_x)[0].astype(jnp.float32))
+        ready = jax.lax.psum(seed, "engine")
+        main_x, stress_x, ready = compat.optimization_barrier(
+            (main_x, stress_x, ready))
 
-        def run_main(_):
-            return main_fn(main_x)
+        def run_main(m, _s):
+            return main_fn(m)
 
-        def run_stress(_):
-            return stress_fn(stress_x)
+        def run_stress(_m, s):
+            return stress_fn(s)
 
-        def run_idle(_):
-            return idle_fn(stress_x)
+        def run_idle(_m, s):
+            return idle_fn(s)
 
         branch = jnp.where(eng == 0, 0,
                            jnp.where(eng <= n_stressors, 1, 2))
+        # operands passed positionally: the `operand=` kwarg is
+        # deprecated drift (the grep lint in tests/test_compat.py
+        # rejects it)
         out = jax.lax.switch(branch, [run_main, run_stress, run_idle],
-                             operand=None)
-        # barrier #2: measurement closes only after every engine finished
-        done = jax.lax.psum(jnp.ones((), jnp.int32), "engine")
-        return out, ready + done
+                             main_x, stress_x)
+        # barrier #2: measurement closes only after every engine
+        # finished — `done` consumes each engine's activity output.
+        # (`ready` stays alive through the operand barrier edge; the
+        # returned value is the stop psum, which is statically
+        # replicated.)
+        done = jax.lax.psum(jnp.ravel(out)[0].astype(jnp.float32),
+                            "engine")
+        return out, done
 
     f = compat.shard_map(per_engine, mesh=mesh,
                          in_specs=(P("engine"), P("engine")),
                          out_specs=(P("engine"), P()))
     return mesh, f
+
+
+# ---------------------------------------------------------------------------
+# Structural fence verification (sandwich invariant 1, as a jaxpr check)
+# ---------------------------------------------------------------------------
+
+
+def measured_region_is_fenced(fn, *example_args) -> bool:
+    """Does the measured output depend — through DATAFLOW, not just
+    program order — on the start-barrier psum?
+
+    Walks the traced jaxpr: inside every ``shard_map`` body, takes the
+    first psum equation (the start barrier), computes the forward
+    dataflow closure of its outputs, and requires the body's first
+    output (the measured activity result) to lie inside that closure.
+    A program whose barrier is advisory only — the pre-fix
+    ``build_scenario_program``, where ``out`` had no data dependency on
+    ``ready`` — returns False: XLA was free to begin the measured
+    activity before the stressors were running."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    bodies = _shard_map_bodies(closed.jaxpr)
+    if not bodies:
+        return False
+    return all(_first_out_depends_on_psum(b) for b in bodies)
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    for v in params.values():
+        for u in (v if isinstance(v, (tuple, list)) else (v,)):
+            inner = getattr(u, "jaxpr", u)
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def _shard_map_bodies(jaxpr) -> List[Any]:
+    out = []
+    for eqn in jaxpr.eqns:
+        for inner in _sub_jaxprs(eqn.params):
+            if "shard_map" in eqn.primitive.name:
+                out.append(inner)
+            else:
+                out.extend(_shard_map_bodies(inner))
+    return out
+
+
+def _first_out_depends_on_psum(body) -> bool:
+    live: set = set()
+    seen_psum = False
+    for eqn in body.eqns:
+        invars = [v for v in eqn.invars if not hasattr(v, "val")]
+        if not seen_psum and "psum" in eqn.primitive.name:
+            seen_psum = True
+            live.update(eqn.outvars)
+            continue
+        if seen_psum and any(v in live for v in invars):
+            live.update(eqn.outvars)
+    out0 = body.outvars[0]
+    return out0 in live

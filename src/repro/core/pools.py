@@ -101,6 +101,22 @@ class MemoryPool:
             # kind advertised but transfer refused: same degradation
             return jax.device_put(data, dev)
 
+    def effective_memory_kind(self) -> Optional[str]:
+        """The memory kind :meth:`place` actually lands arrays in.
+
+        ``None`` = the device's default memory.  Pools whose declared
+        kind the backend cannot address (e.g. ``pinned_host`` on this
+        CPU container) degrade to the default, so two pools with equal
+        effective kinds are *execution-equivalent* — the matrix runner
+        uses this to decide which observers may share one stacked
+        vmapped measurement batch."""
+        kind = self.node.memory_kind
+        if kind in (None, "device"):
+            return None
+        if kind in compat.device_memory_kinds(jax.devices()[0]):
+            return kind
+        return None
+
     def sharding_for(self, mesh, spec) -> jax.sharding.NamedSharding:
         """NamedSharding carrying this pool's memory kind (upool export)."""
         kind = self.node.memory_kind

@@ -14,8 +14,10 @@ scenario the unit of configuration:
 * :class:`ObserverSpec`   — the measured activity: strategy letter,
   pool, and a *buffer-size ladder*.
 * :class:`StressorSpec`   — one member of the stressor ensemble.
-* :class:`ScenarioSpec`   — observer + stressor ensemble + iteration
+* :class:`ScenarioSpec`   — observer(s) + stressor ensemble + iteration
   budget; serialisable, hashable, and the key-provider for CurveDB v2.
+  A scenario may carry SEVERAL observers (measure many pools at once);
+  each observer keys its own curve via :meth:`ScenarioSpec.key_for`.
 
 Specs are plain frozen dataclasses with exact dict round-trips
 (:func:`ScenarioSpec.to_dict` / :func:`ScenarioSpec.from_dict`), so a
@@ -34,6 +36,15 @@ from dataclasses import asdict, dataclass, field, replace
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 SCHEMA_VERSION = 2
+
+
+def _exact(v: float) -> str:
+    """Shortest fixed-point spelling that round-trips ``v`` exactly."""
+    for prec in (2, 3, 4, 6):
+        s = f"{v:.{prec}f}"
+        if float(s) == v:
+            return s
+    return repr(v)
 
 
 # ---------------------------------------------------------------------------
@@ -98,13 +109,23 @@ class TrafficShape:
         return self.kind == "steady"
 
     def tag(self) -> str:
-        """Short spelling used inside CurveDB keys ('' for steady)."""
+        """Short spelling used inside CurveDB keys ('' for steady).
+
+        The parameter spelling must round-trip the float exactly —
+        distinct ratios MUST NOT alias one key (two different mixed
+        ratios landing on the same ``rf`` spelling would collide in
+        CurveDB and trip the characterize_matrix collision guard).
+        Common ratios keep the short 2-decimal form (``rf0.50``);
+        non-terminating ones widen until exact (``rf0.6666666666666666``).
+        """
         if self.kind == "steady":
             return ""
         if self.kind == "mixed":
-            return f"rf{self.read_fraction:.2f}"
+            return f"rf{_exact(self.read_fraction)}"
         if self.kind == "burst":
-            return f"dc{self.duty_cycle:.2f}"
+            tag = f"dc{_exact(self.duty_cycle)}"
+            # non-default burst lengths are part of the identity too
+            return tag if self.burst_len == 64 else f"{tag}x{self.burst_len}"
         return f"st{self.stride}"
 
 
@@ -144,35 +165,75 @@ class StressorSpec:
 
 @dataclass(frozen=True)
 class ScenarioSpec:
-    """One named scenario: observer + stressor ensemble + budget."""
+    """One named scenario: observer(s) + stressor ensemble + budget.
+
+    ``observer`` accepts either a single :class:`ObserverSpec` or a
+    tuple of them — a *multi-observer* scenario measures several pools
+    at once (each observer gets its own CurveDB curve, all collapsed
+    into the matrix runner's same-signature vmapped passes).  The first
+    observer stays the ``observer`` attribute (v1-compatible keying);
+    the rest land in ``co_observers``.
+    """
     name: str
     observer: ObserverSpec
     stressors: Tuple[StressorSpec, ...] = ()
     iters: int = 500
     max_stressors: Optional[int] = None     # ladder depth; None = n_engines
+    co_observers: Tuple[ObserverSpec, ...] = ()
 
     def __post_init__(self):
+        obs, co = self.observer, tuple(self.co_observers)
+        if not isinstance(obs, ObserverSpec):
+            seq = tuple(obs)
+            if not seq:
+                raise ValueError(f"{self.name}: need at least one observer")
+            obs, co = seq[0], tuple(seq[1:]) + co
+            object.__setattr__(self, "observer", obs)
+        object.__setattr__(self, "co_observers", co)
         object.__setattr__(self, "stressors", tuple(self.stressors))
 
+    @property
+    def observers(self) -> Tuple[ObserverSpec, ...]:
+        """All measured activities, primary first."""
+        return (self.observer,) + self.co_observers
+
     # -- CurveDB keying ------------------------------------------------------
+    def _stress_key(self) -> str:
+        if self.stressors:
+            return "+".join(s.descriptor() for s in self.stressors)
+        return "none:i"
+
+    def key_for(self, observer: ObserverSpec,
+                buffer_bytes: Optional[int] = None) -> str:
+        """Per-observer curve key (multi-observer scenarios yield one
+        curve per observer, all sharing the stressor half).  The
+        ``buf=`` suffix appears for multi-buffer ladders AND whenever a
+        sibling observer shares this observer's pool/strategy/shape —
+        two observers differing only in buffer size must not alias one
+        curve key."""
+        obs = f"{observer.pool}:{observer.strategy}"
+        t = observer.shape.tag()
+        if t:
+            obs = f"{obs}@{t}"
+        key = f"{obs}|{self._stress_key()}"
+        # count by VALUE, not identity: key_for must return the stored
+        # key for a reconstructed/deserialized equal observer too
+        twins = sum(1 for o in self.observers
+                    if o.pool == observer.pool
+                    and o.strategy == observer.strategy
+                    and o.shape.tag() == t)
+        if buffer_bytes is not None and (len(observer.buffers) > 1
+                                         or twins > 1):
+            key = f"{key}|buf={buffer_bytes}"
+        return key
+
     def key(self, buffer_bytes: Optional[int] = None) -> str:
-        """Curve key.  For a steady observer + single steady stressor
-        this is EXACTLY the v1 key format
+        """Curve key of the primary observer.  For a steady observer +
+        single steady stressor this is EXACTLY the v1 key format
         ``obs_pool:obs_strat|stress_pool:stress_strat`` so v1 consumers
         (placement, MLP tables) keep resolving; shaped/ensemble
         scenarios append their shape tags."""
-        obs = f"{self.observer.pool}:{self.observer.strategy}"
-        t = self.observer.shape.tag()
-        if t:
-            obs = f"{obs}@{t}"
-        if self.stressors:
-            stress = "+".join(s.descriptor() for s in self.stressors)
-        else:
-            stress = "none:i"
-        key = f"{obs}|{stress}"
-        if buffer_bytes is not None and len(self.observer.buffers) > 1:
-            key = f"{key}|buf={buffer_bytes}"
-        return key
+        return self.key_for(self.observer, buffer_bytes)
 
     # -- serialisation -------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -180,20 +241,25 @@ class ScenarioSpec:
 
     @staticmethod
     def from_dict(d: Dict[str, Any]) -> "ScenarioSpec":
-        obs = d["observer"]
-        observer = ObserverSpec(
-            strategy=obs["strategy"], pool=obs["pool"],
-            buffers=tuple(obs["buffers"]),
-            shape=TrafficShape(**obs.get("shape", {})))
         stressors = tuple(
             StressorSpec(strategy=s["strategy"], pool=s["pool"],
                          buffer_bytes=s["buffer_bytes"],
                          shape=TrafficShape(**s.get("shape", {})))
             for s in d.get("stressors", ()))
-        return ScenarioSpec(name=d["name"], observer=observer,
+        return ScenarioSpec(name=d["name"],
+                            observer=_obs_from_dict(d["observer"]),
                             stressors=stressors,
                             iters=d.get("iters", 500),
-                            max_stressors=d.get("max_stressors"))
+                            max_stressors=d.get("max_stressors"),
+                            co_observers=tuple(
+                                _obs_from_dict(o)
+                                for o in d.get("co_observers", ())))
+
+
+def _obs_from_dict(obs: Dict[str, Any]) -> ObserverSpec:
+    return ObserverSpec(strategy=obs["strategy"], pool=obs["pool"],
+                        buffers=tuple(obs["buffers"]),
+                        shape=TrafficShape(**obs.get("shape", {})))
 
 
 # ---------------------------------------------------------------------------

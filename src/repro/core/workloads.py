@@ -126,6 +126,19 @@ def make_workload(strategy: str, pool: MemoryPool, buffer_bytes: int,
     return _REGISTRY[strategy](pool, buffer_bytes, **kw)
 
 
+def resolve_strategy(strategy: str, shape=None) -> str:
+    """The strategy letter a (strategy, TrafficShape) pair actually
+    executes as: mixed shapes run the ``b`` mixed-stream workload,
+    strided shapes the ``t`` strided chase, everything else the plain
+    strategy.  The single source of truth for this mapping — the
+    batched group measurement below and the coordinator's spmd branch
+    builder both consume it, so every backend executes the same kernel
+    class for a given spec."""
+    kind = getattr(shape, "kind", "steady") if shape is not None \
+        else "steady"
+    return {"mixed": "b", "strided": "t"}.get(kind, strategy)
+
+
 def make_shaped_workload(strategy: str, pool: MemoryPool, buffer_bytes: int,
                          shape=None, **kw) -> Workload:
     """Bind a (strategy, TrafficShape) pair to an executable workload.
@@ -185,10 +198,18 @@ _BATCH_BYTES_CAP = 1 << 30
 
 def measure_group(strategy: str, pool: MemoryPool, buffer_bytes: int,
                   n_members: int, iters: int, *, shape=None,
-                  seeds: Optional[list] = None) -> Tuple[list, int]:
+                  seeds: Optional[list] = None,
+                  member_pools: Optional[list] = None) -> Tuple[list, int]:
     """Measure ``n_members`` same-signature observers with jit'd
     ``vmap`` passes over the stacked member buffers (chases keep
     per-member chains, so different seeds/strides stay distinct).
+
+    ``member_pools`` (optional, len ``n_members``) supports
+    *heterogeneous* groups: observers from different pools whose
+    placement lands in the same physical memory (the caller groups by
+    :meth:`MemoryPool.effective_memory_kind`, so this never stacks
+    buffers that would really live in different memories).  Each
+    member's result is labeled with its own pool name.
 
     Returns ``(results, n_dispatches)``.  Normally one dispatch covers
     the whole group; groups whose stacked footprint would exceed the
@@ -198,8 +219,7 @@ def measure_group(strategy: str, pool: MemoryPool, buffer_bytes: int,
     The group's wall time is split evenly (members are identical up to
     buffer content, and on hardware they run as concurrent engines of
     one fused pass)."""
-    kind = shape.kind if shape is not None else "steady"
-    strat = {"mixed": "b", "strided": "t"}.get(kind, strategy)
+    strat = resolve_strategy(strategy, shape)
     if strat not in _VMAP_READS + _VMAP_CHASES:
         # write-like path stacks no buffers: one measurement serves
         # the whole group regardless of member size
@@ -215,23 +235,27 @@ def measure_group(strategy: str, pool: MemoryPool, buffer_bytes: int,
         results.extend(_measure_chunk(
             strategy, pool, buffer_bytes, g, iters, shape=shape,
             seeds=(seeds[start:start + g] if seeds is not None
-                   else list(range(start, start + g)))))
+                   else list(range(start, start + g))),
+            pool_names=([p.node.name for p in
+                         member_pools[start:start + g]]
+                        if member_pools is not None else None)))
         dispatches += 1
     return results, dispatches
 
 
 def _measure_chunk(strategy: str, pool: MemoryPool, buffer_bytes: int,
                    n_members: int, iters: int, *, shape=None,
-                   seeds: Optional[list] = None) -> list:
+                   seeds: Optional[list] = None,
+                   pool_names: Optional[list] = None) -> list:
     rows = _rows(buffer_bytes)
     g = n_members
+    names = pool_names or [pool.node.name] * g
     vmem = _fits_vmem(buffer_bytes) or pool.node.kind == "vmem"
     blk = min(512, rows)
-    kind = shape.kind if shape is not None else "steady"
-    strat = {"mixed": "b", "strided": "t"}.get(kind, strategy)
+    strat = resolve_strategy(strategy, shape)
 
     duty = shape.duty_cycle if (shape is not None
-                                and kind == "burst") else 1.0
+                                and shape.kind == "burst") else 1.0
 
     if strat in _VMAP_CHASES:
         seeds = seeds or list(range(g))
@@ -247,9 +271,9 @@ def _measure_chunk(strategy: str, pool: MemoryPool, buffer_bytes: int,
         # compiled TPU vmap may overlap chains and would need its own
         # accounting.
         per = (t / g) / duty
-        return [WorkloadResult(strat, pool.node.name, buffer_bytes, iters,
+        return [WorkloadResult(strat, name, buffer_bytes, iters,
                                rows * LINE_BYTES, per, transactions=rows)
-                for _ in range(g)]
+                for name in names]
 
     if strat in _VMAP_READS:
         x = pool.place(bw_buffer_init((g, rows, LANE), jnp.float32))
@@ -278,18 +302,21 @@ def _measure_chunk(strategy: str, pool: MemoryPool, buffer_bytes: int,
                 lambda a: ops.stream_read(a, block_rows=blk)))
         t = _timed(batched, x, iters=iters) * scale
         per = (t / g) / duty
-        return [WorkloadResult(strat, pool.node.name, buffer_bytes, iters,
+        return [WorkloadResult(strat, name, buffer_bytes, iters,
                                useful * iters, per * iters, 0)
-                for _ in range(g)]
+                for name in names]
 
     # write-like paths (w/x/y/i...): no batched input array — one
-    # measurement, shared by every identical member.
+    # measurement, shared by every identical member (relabeled with
+    # each member's own pool for heterogeneous groups).
     wl = make_shaped_workload(strategy, pool, buffer_bytes, shape)
     try:
         res = wl.run(iters)
     finally:
         wl.release()
-    return [res] * g
+    import dataclasses
+    return [res if name == res.pool else dataclasses.replace(res, pool=name)
+            for name in names]
 
 
 def _rows(buffer_bytes: int) -> int:

@@ -78,6 +78,14 @@ def test_memory_kind_shardings_degrade_gracefully():
     assert ns.mesh is mesh
 
 
+def test_optimization_barrier_preserves_values():
+    x = jnp.ones((2, 2))
+    y = jnp.float32(3.0)
+    xx, yy = compat.optimization_barrier((x, y))
+    np.testing.assert_array_equal(np.asarray(xx), np.asarray(x))
+    assert float(yy) == 3.0
+
+
 def test_cost_analysis_returns_dict():
     compiled = jax.jit(lambda x: x @ x).lower(
         jnp.ones((8, 8))).compile()
@@ -106,6 +114,15 @@ _FORBIDDEN = [
     r"(?<!compat)\.cost_an" + r"alysis\(\)",
     r"SingleDeviceSharding\(.*memory" + r"_kind",
     r"NamedSharding\(.*memory" + r"_kind",
+    # lax.switch's `operand=` kwarg is deprecated drift: operands are
+    # passed positionally everywhere.  Two spellings: same-line, and a
+    # bare continuation line (the historical bug had the kwarg on its
+    # own wrapped line, which a same-line pattern cannot see)
+    r"lax\.switch\(.*oper" + r"and\s*=",
+    r"^\s*oper" + r"and\s*=",
+    # optimization_barrier moved namespaces across releases; the shim
+    # in compat.py is the only allowed spelling
+    r"lax\.optimization_" + r"barrier\b",
 ]
 
 _SCAN_DIRS = ("src", "tests", "benchmarks", "examples")

@@ -1,0 +1,112 @@
+"""The SPMD sandwich, enforced structurally.
+
+The paper's invariant (1) — measurement starts only after every engine
+passed the start barrier — used to be advisory in
+``build_scenario_program``: the ``ready`` psum had no dataflow edge into
+the measured activity, so JAX folded it away at trace time and XLA was
+free to begin the observed work before the stressors were running.
+These tests pin the fix down by inspecting the traced jaxpr for the
+dependency edge (they run on the single-device main process; the mesh
+size does not change the program structure).  The multi-device
+*execution* of the spmd backend is covered in test_distribution.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.coordinator import (_spmd_branch_fn, build_rung_program,
+                                    build_scenario_program,
+                                    measured_region_is_fenced)
+
+ROWS = 16
+
+
+def _operands(n_eng: int):
+    xf = np.ones((n_eng, ROWS, 128), np.float32)
+    xi = np.zeros((n_eng, ROWS, 128), np.int32)
+    return xf, xi
+
+
+# ---------------------------------------------------------------------------
+# The checker itself: it must reject an unfenced program
+# ---------------------------------------------------------------------------
+
+
+def test_checker_rejects_advisory_barrier():
+    """A psum nothing depends on (the historical bug) is NOT a fence."""
+    mesh = compat.make_mesh_from_devices(jax.devices()[:1], ("engine",))
+
+    def buggy(x):
+        x = x[0]
+        ready = jax.lax.psum(x[0], "engine")   # no edge into `out`
+        out = x * 2.0
+        return out[None], ready
+
+    f = compat.shard_map(buggy, mesh=mesh, in_specs=(P("engine"),),
+                         out_specs=(P("engine"), P()))
+    assert not measured_region_is_fenced(f, np.ones((1, 8), np.float32))
+
+
+def test_checker_requires_a_shard_map():
+    assert not measured_region_is_fenced(lambda x: x * 2,
+                                         jnp.ones((4,)))
+
+
+# ---------------------------------------------------------------------------
+# The fixed programs carry the dependency edge
+# ---------------------------------------------------------------------------
+
+
+def test_rung_program_measured_region_is_fenced():
+    fns = [_spmd_branch_fn("r", None, ROWS, 2),
+           _spmd_branch_fn("w", None, ROWS, 2)]
+    _mesh, f = build_rung_program(1, fns, [0])
+    assert measured_region_is_fenced(f, *_operands(1))
+
+
+def test_scenario_program_measured_region_is_fenced():
+    """Regression for the build_scenario_program barrier-ordering bug:
+    `out` must have a data dependency on the start-barrier psum."""
+    _mesh, f = build_scenario_program(
+        1, 0,
+        main_fn=lambda m: jnp.sum(m, axis=-1, keepdims=True),
+        stress_fn=lambda s: jnp.sum(s * 2, axis=-1, keepdims=True),
+        idle_fn=lambda s: jnp.sum(s * 0, axis=-1, keepdims=True))
+    assert measured_region_is_fenced(f, np.ones((1, 8), np.float32),
+                                     np.ones((1, 8), np.float32))
+
+
+def test_scenario_program_executes():
+    """The fixed program still runs and produces per-engine outputs
+    (single-device mesh: engine 0 = observed, no stressors)."""
+    _mesh, f = build_scenario_program(
+        1, 0,
+        main_fn=lambda m: m * 3.0,
+        stress_fn=lambda s: s * 2.0,
+        idle_fn=lambda s: s * 0.0)
+    x = np.ones((1, 8), np.float32)
+    out, barrier = f(x, x)
+    np.testing.assert_allclose(np.asarray(out), 3.0 * x)
+    assert np.asarray(barrier).shape == ()
+
+
+# ---------------------------------------------------------------------------
+# Every spmd branch traces and runs (single engine, every strategy kind)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["r", "w", "c", "b", "l", "t", "i"])
+def test_spmd_branch_fns_execute(strategy):
+    from repro.core.scenarios import TrafficShape
+    shape = {"b": TrafficShape.mixed(1, 1),
+             "t": TrafficShape.strided(4)}.get(strategy)
+    fns = [_spmd_branch_fn(strategy, shape, ROWS, 2)]
+    _mesh, f = build_rung_program(1, fns, [0])
+    xf, xi = _operands(1)
+    xi[0, :ROWS, 0] = np.roll(np.arange(ROWS), 1)   # a valid cycle
+    out, barrier = f(xf, xi)
+    assert np.isfinite(np.asarray(out)).all()
+    assert measured_region_is_fenced(f, xf, xi)
