@@ -73,6 +73,7 @@ def _run() -> list:
     key = "hbm:r|hbm:w"
     ex = db.provenance[key]["execution"]
     print(f"CurveDB provenance for {key!r}: backend={ex['backend']} "
+          f"activity={ex['activity']} coupled={ex['coupled']} "
           f"executed_rungs={ex['executed_rungs']} fenced={ex['fenced']}")
     return rows
 
@@ -80,9 +81,21 @@ def _run() -> list:
 def main() -> list:
     if len(jax.devices()) >= 2:
         return _run()
-    # single-device harness process: re-exec with forced host devices
+    # single-device harness process: re-exec with forced host devices.
+    # Respect a pre-set device-count flag (like examples/
+    # spmd_contention.py): appending a second
+    # --xla_force_host_platform_device_count would either clobber the
+    # user's choice or trip XLA's duplicate-flag parsing.  If the
+    # pre-set flag is what pinned us below 2 devices, re-execing would
+    # recurse forever — fail with the actionable message instead.
     env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + _FORCE).strip()
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        raise RuntimeError(
+            f"spmd ladder needs >= 2 devices but XLA_FLAGS already pins "
+            f"the host device count ({flags!r}); raise it to >= 2 or "
+            f"unset the flag")
+    env["XLA_FLAGS"] = f"{flags} {_FORCE}".strip()
     r = subprocess.run([sys.executable, "-m", "benchmarks.spmd_ladder"],
                        capture_output=True, text=True, timeout=600,
                        env=env)

@@ -33,7 +33,11 @@ print(f"== engine mesh: {len(jax.devices())} host devices ==")
 BUF = 128 << 10
 
 # one scenario, TWO observers measured at once (bandwidth on hbm,
-# latency on host), against a mixed-ratio write stressor ensemble
+# latency on host), against a mixed-ratio write stressor ensemble.
+# coupled=True (the default): each observer's rungs carry the OTHER
+# observer as a live engine — siblings are part of each other's
+# measured region, and the rung activities are the real Pallas kernels
+# (compat-probed; pure-jnp loops where Pallas is unavailable)
 spec = ScenarioSpec(
     "spmd-demo",
     (ObserverSpec("r", "hbm", (BUF,)),
@@ -51,6 +55,8 @@ print(f"\n{res.stats.spmd_rungs} ladder rungs -> "
 for run in res.runs:
     print(f"\n-- curve {run.key} "
           f"(executed rungs {run.execution['executed_rungs']}, "
+          f"activity={run.execution['activity']}, "
+          f"coupled={run.execution['coupled']}, "
           f"fenced={run.execution['fenced']})")
     for s in run.scenarios:
         val = (f"{s.main.latency_ns:8.1f} ns/tx"

@@ -83,10 +83,58 @@ def _resolve_shard_map():
     return _esm.shard_map
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, **kw):
-    """Version-portable ``shard_map`` (keyword-only, both signatures)."""
+@functools.lru_cache(maxsize=1)
+def _shard_map_params() -> frozenset:
+    import inspect
+    try:
+        return frozenset(inspect.signature(_resolve_shard_map()).parameters)
+    except (TypeError, ValueError):
+        return frozenset()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep=None, **kw):
+    """Version-portable ``shard_map`` (keyword-only, both signatures).
+
+    ``check_rep`` disables the static replication-rule check — required
+    for bodies containing ``pallas_call`` (no replication rule is
+    registered for it).  The kwarg itself drifted: older JAX spells it
+    ``check_rep``, newer releases renamed it ``check_vma``; releases
+    with neither simply don't check (the flag is dropped)."""
+    if check_rep is not None:
+        params = _shard_map_params()
+        if "check_rep" in params:
+            kw["check_rep"] = check_rep
+        elif "check_vma" in params:
+            kw["check_vma"] = check_rep
     return _resolve_shard_map()(f, mesh=mesh, in_specs=in_specs,
                                 out_specs=out_specs, **kw)
+
+
+@functools.lru_cache(maxsize=1)
+def pallas_supported() -> bool:
+    """Can Pallas kernels actually execute on this process's backend?
+
+    True when a trivial ``pallas_call`` compiles and runs — compiled on
+    TPU, interpret-mode elsewhere.  False on installs whose Pallas
+    import or interpreter is broken/absent; callers (the spmd backend's
+    rung activities) fall back to pure-jnp traffic loops, and the
+    CurveDB ``execution`` provenance records which one ran."""
+    try:
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _probe(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + 1.0
+
+        out = pl.pallas_call(
+            _probe,
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+            interpret=jax.default_backend() != "tpu",
+        )(jnp.zeros((8, 128), jnp.float32))
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
 
 
 def optimization_barrier(x):

@@ -184,10 +184,13 @@ def characterize_matrix(coord: CoreCoordinator,
     """Run an explicit scenario matrix and persist it as CurveDB v2.
 
     Each curve's provenance records the scenario spec AND an
-    ``execution`` entry (which backend produced it, and which ladder
-    rungs were *executed* vs *modeled*) — an spmd-backend curve whose
-    every point came from a live fused multi-engine dispatch is
-    distinguishable from a queueing-model curve after the fact."""
+    ``execution`` entry (which backend produced it, which ladder rungs
+    were *executed* vs *modeled*, what ``activity`` filled the measured
+    region — "pallas" kernels vs "jnp" fallback loops — and whether
+    co-observers were ``coupled`` into the measured region) — an
+    spmd-backend curve whose every point came from a live fused
+    multi-engine dispatch is distinguishable from a queueing-model
+    curve after the fact, and a coupled curve from an uncoupled one."""
     result: MatrixResult = coord.run_matrix(specs, batched=batched)
     return curvedb_from_result(result, coord.platform.name,
                                backend=coord.backend)

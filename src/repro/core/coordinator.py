@@ -27,6 +27,13 @@ Backends:
                     the model (single real device).
   * ``tpu``       — same SPMD program, real hardware (not available in
                     this container; code path kept identical).
+  * ``spmd``      — *executes* every ladder rung as one fused
+                    ``shard_map`` dispatch over an ("engine",) mesh:
+                    observer + coupled sibling observers + live
+                    stressor engines, rung activities built from the
+                    real Pallas kernel library (pure-jnp fallback via
+                    ``compat.pallas_supported``), measured region
+                    dataflow-fenced between two psum barriers.
 """
 from __future__ import annotations
 
@@ -45,8 +52,8 @@ from repro.core.scenarios import (ObserverSpec, ScenarioSpec, StressorSpec,
                                   TrafficShape)
 from repro.core.workloads import (LINE_BYTES, Workload, WorkloadResult,
                                   make_shaped_workload, make_workload,
-                                  measure_group, resolve_strategy)
-from repro.core.workloads import _rows as _wl_rows
+                                  measure_group, resolve_strategy,
+                                  rows_for as _wl_rows)
 
 # ---------------------------------------------------------------------------
 
@@ -135,13 +142,30 @@ class ValidationError(ValueError):
 class CoreCoordinator:
     def __init__(self, pool_mgr: Optional[PoolManager] = None,
                  platform: Optional[Platform] = None,
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 spmd_activity: str = "auto"):
         self.platform = platform or detect_platform()
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
             backend = "tpu" if jax.default_backend() == "tpu" else "simulate"
         assert backend in ("simulate", "interpret", "tpu", "spmd"), backend
         self.backend = backend
+        # what fills the spmd backend's rung measured regions: real
+        # Pallas kernels ("pallas": stream/chase/copy, compiled on TPU
+        # and interpret-mode elsewhere) or the pure-jnp traffic loops
+        # ("jnp", the PR-2 stand-ins).  "auto" probes the host backend
+        # via compat.pallas_supported() and falls back honestly; the
+        # resolved choice is stamped into every executed curve's
+        # ``execution["activity"]`` provenance.
+        assert spmd_activity in ("auto", "pallas", "jnp"), spmd_activity
+        self.spmd_activity = spmd_activity
+
+    def _resolved_activity(self) -> str:
+        """The rung-activity implementation the spmd backend will use."""
+        from repro import compat
+        if self.spmd_activity != "auto":
+            return self.spmd_activity
+        return "pallas" if compat.pallas_supported() else "jnp"
 
     # -- Experiment Instantiator ----------------------------------------
     def validate(self, cfg: ExperimentConfig) -> None:
@@ -273,6 +297,21 @@ class CoreCoordinator:
 
     def validate_spec(self, spec: ScenarioSpec) -> None:
         from repro.core.workloads import _REGISTRY
+        # exact-duplicate observers (same pool/strategy/shape/buffers)
+        # would alias one curve key per buffer and silently overwrite
+        # each other's ladders in CurveDB — reject them up front
+        # (observers differing in ANY field, e.g. buffer ladders, are
+        # legitimate twins and key distinctly via the buf= suffix)
+        seen = set()
+        for obs in spec.observers:
+            if obs in seen:
+                raise ValidationError(
+                    f"{spec.name}: duplicate observer "
+                    f"({obs.pool}:{obs.strategy}"
+                    f"{'@' + obs.shape.tag() if obs.shape.tag() else ''}, "
+                    f"buffers={obs.buffers}) — its curves would alias "
+                    f"the first occurrence's keys")
+            seen.add(obs)
         for obs in spec.observers:
             if obs.strategy not in _REGISTRY:
                 raise ValidationError(
@@ -311,13 +350,13 @@ class CoreCoordinator:
                              observer: ObserverSpec, buffer_bytes: int,
                              k: int) -> Tuple[float, float, float]:
         """Model one rung of the ladder: one observer + k stress engines
-        distributed round-robin over the stressor ensemble.  Each
-        observer of a multi-observer scenario sees ONLY the stressor
-        ensemble — on every backend.  The interpret backend shares one
-        uncontended vmapped pass across same-signature observers, and
-        the spmd backend executes each observer's ladder as its own
-        rung dispatches; co-observers are never part of each other's
-        measured region (ROADMAP open item)."""
+        distributed round-robin over the stressor ensemble — plus, for a
+        *coupled* multi-observer scenario, one always-on single-engine
+        class per sibling observer (:func:`sim.co_observer_class`): the
+        siblings are part of this observer's measured region at every
+        rung, exactly like the spmd backend's executed rungs.  With
+        ``spec.coupled=False`` each observer sees only the stressor
+        ensemble (the historical semantics)."""
         obs_act = self._obs_activity(observer, buffer_bytes)
         obs_pool = self.pools.pool(observer.pool)
         first = spec.stressors[0] if spec.stressors else None
@@ -329,6 +368,16 @@ class CoreCoordinator:
             "obs", obs_node, obs_act.strategy, 1,
             read_fraction=obs_act.read_fraction,
             duty_cycle=obs_act.duty_cycle, stride=obs_act.stride)]
+        for j, sib in enumerate(self._coupled_siblings(spec, observer)):
+            if sib.strategy == "i":
+                continue
+            act = self._obs_activity(sib, sib.buffers[0])
+            node = self._model_node(act, self.pools.pool(sib.pool),
+                                    other=obs_act, other_engines=1)
+            classes.append(sim.co_observer_class(
+                f"co{j}", node, act.strategy,
+                read_fraction=act.read_fraction,
+                duty_cycle=act.duty_cycle, stride=act.stride))
         m = len(spec.stressors)
         if k and m:
             share = [k // m + (1 if j < k % m else 0) for j in range(m)]
@@ -350,13 +399,39 @@ class CoreCoordinator:
                 obs.lat_ns if obs else 0.0,
                 stress_bw)
 
+    @staticmethod
+    def _coupled_siblings(spec: ScenarioSpec,
+                          observer: ObserverSpec) -> Tuple[ObserverSpec, ...]:
+        """The sibling observers sharing this observer's measured
+        region (empty when the scenario is uncoupled).  Drops exactly
+        ONE occurrence of the measured observer — by identity when it
+        is one of the spec's own entries (so value-equal twins still
+        see each other), by value for reconstructed/deserialized equal
+        observers."""
+        if not spec.coupled:
+            return ()
+        rest = list(spec.observers)
+        for i, o in enumerate(rest):
+            if o is observer:
+                del rest[i]
+                break
+        else:
+            for i, o in enumerate(rest):
+                if o == observer:
+                    del rest[i]
+                    break
+        return tuple(rest)
+
     def _ladder_depth(self, spec: ScenarioSpec) -> int:
         n = (spec.max_stressors + 1 if spec.max_stressors is not None
              else self.platform.n_engines)
         n = min(n, self.platform.n_engines)
         if self.backend == "spmd":
-            # rung k needs k stress engines + 1 observer on the mesh
-            n = min(n, self._spmd_engines())
+            # rung k needs k stress engines + 1 observer on the mesh —
+            # plus one engine per coupled sibling observer, which runs
+            # live inside every rung (same count for every observer)
+            n_sib = len(spec.observers) - 1 if spec.coupled else 0
+            n = min(n, self._spmd_engines() - n_sib)
         return max(1, n)
 
     def run_matrix(self, specs: List[ScenarioSpec], *,
@@ -376,8 +451,12 @@ class CoreCoordinator:
         contention ladder per rung (interpret/tpu additionally measure
         the uncontended observer); ``spmd`` *executes* every rung —
         one fused shard_map dispatch over the engine mesh per rung,
-        observer + k live stressor engines between two psum barriers —
-        and the resulting curves carry ``source == "executed"``."""
+        observer + coupled sibling observers + k live stressor engines
+        between two psum barriers — and the resulting curves carry
+        ``source == "executed"``.  Every curve's ``execution``
+        provenance records the backend, executed-vs-modeled rungs,
+        effective ``coupled`` state, and the rung ``activity``
+        ("pallas" kernels, "jnp" fallback loops, or "none")."""
         for spec in specs:
             self.validate_spec(spec)
         triples = [(spec, obs, b) for spec in specs
@@ -389,10 +468,15 @@ class CoreCoordinator:
         executed: Dict[Tuple[int, int], WorkloadResult] = {}
         fenced_by_triple: Dict[int, bool] = {}
         if self.backend in ("interpret", "tpu"):
+            # the measured pass runs the real Pallas kernel library
+            activity = "pallas"
             measured = self._measure_triples(triples, batched, stats)
         elif self.backend == "spmd":
-            executed, fenced_by_triple = self._execute_spmd(triples,
-                                                            stats)
+            activity = self._resolved_activity()
+            executed, fenced_by_triple = self._execute_spmd(
+                triples, stats, activity)
+        else:
+            activity = "none"       # nothing executes on this backend
 
         runs: List[ScenarioRun] = []
         for i, (spec, obs, buf) in enumerate(triples):
@@ -419,12 +503,26 @@ class CoreCoordinator:
                 "modeled_rungs": [k for k in range(n_scen)
                                   if k not in exec_rungs],
                 "measured_uncontended": i in measured,
+                # whether this curve's siblings were part of its
+                # measured region / queueing network (effective
+                # coupling: a single-observer spec couples nothing)
+                "coupled": bool(spec.coupled and len(spec.observers) > 1),
+                # what fills the measured region: "pallas" (real
+                # kernels), "jnp" (traffic loops), "none" (modeled)
+                "activity": activity,
             }
             if self.backend == "spmd":
                 execution["n_engines"] = self._spmd_engines()
                 # the structurally VERIFIED fence state of this
                 # ladder's executed programs (jaxpr dataflow check)
                 execution["fenced"] = fenced_by_triple.get(i, False)
+                execution["operand_memory_kinds"] = sorted(
+                    {self.pools.pool(p).effective_memory_kind()
+                     or "default"
+                     for p in ([obs.pool]
+                               + [o.pool for o in
+                                  self._coupled_siblings(spec, obs)]
+                               + [s.pool for s in spec.stressors])})
             runs.append(ScenarioRun(spec=spec, buffer_bytes=buf,
                                     key=spec.key_for(obs, buf),
                                     observer=obs,
@@ -482,7 +580,7 @@ class CoreCoordinator:
         return max(1, min(self.platform.n_engines, len(jax.devices())))
 
     def _execute_spmd(
-        self, triples, stats: "DispatchStats",
+        self, triples, stats: "DispatchStats", activity: str = "jnp",
     ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool]]:
         """Execute every ladder rung of every (spec, observer, buffer)
         triple as ONE fused SPMD dispatch over the engine mesh.
@@ -504,7 +602,8 @@ class CoreCoordinator:
             fenced = True
             for k in range(self._ladder_depth(spec)):
                 executed[(i, k)], rung_fenced = self._run_spmd_rung(
-                    spec, obs, buf, k, n_eng, programs)
+                    spec, obs, buf, k, n_eng, programs,
+                    activity=activity)
                 fenced = fenced and rung_fenced
                 stats.measure_dispatches += 1
                 stats.spmd_rungs += 1
@@ -514,75 +613,103 @@ class CoreCoordinator:
     def _run_spmd_rung(self, spec: ScenarioSpec, obs: ObserverSpec,
                        buf: int, k: int, n_eng: int,
                        programs: Optional[Dict[Tuple, Tuple]] = None,
+                       activity: str = "jnp",
                        ) -> Tuple[WorkloadResult, bool]:
         """One rung, one fused program: engine 0 runs the observer,
-        engines 1..k the stressor ensemble (round-robin), the rest idle
-        — all branches of a single ``shard_map`` dispatch whose
-        measured region sits between the two psum barriers of
-        :func:`build_rung_program` (the spin-lock sandwich, collective
-        edition, dataflow-enforced; the returned bool is the
-        structurally *verified* fence state of this rung's program).
+        the next engines its coupled sibling observers (every observer
+        of a coupled multi-observer spec is live inside every sibling's
+        measured region), then k stressor engines (ensemble
+        round-robin), the rest idle — all branches of a single
+        ``shard_map`` dispatch whose measured region sits between the
+        two psum barriers of :func:`build_rung_program` (the spin-lock
+        sandwich, collective edition, dataflow-enforced; the returned
+        bool is the structurally *verified* fence state of this rung's
+        program).  ``activity`` selects what the branches execute: the
+        real Pallas kernels ("pallas") or pure-jnp traffic loops
+        ("jnp", the compat fallback).
 
         The wall time of the dispatch is the measured region: it closes
         at the stop barrier, i.e. when the SLOWEST engine finishes
-        (paper invariant 3).  Stressor iteration budgets are therefore
-        work-balanced against the observer's (equal line-touch totals)
-        so role imbalance does not masquerade as contention; residual
-        per-kind speed differences (a chase row costs more than a
-        stream row) remain — per-engine device-side timing is the
-        ROADMAP item."""
+        (paper invariant 3).  Sibling and stressor iteration budgets
+        are therefore work-balanced against the observer's (equal
+        line-touch totals) so role imbalance does not masquerade as
+        contention; residual per-kind speed differences (a chase row
+        costs more than a stream row) remain — per-engine device-side
+        timing is the ROADMAP item."""
         import time as _time
 
+        from repro import compat
         from repro.kernels import ops as kops
 
         iters = spec.iters
         obs_rows = _wl_rows(buf)
         roles = [(obs.strategy, obs.shape, obs_rows, iters)]
+        role_pools = [obs.pool]
         m = len(spec.stressors)
         # balance against the passes the observer branch will actually
         # execute (its duty cycle included), and divide out each
-        # stressor's own duty — the branch fns apply duty internally
+        # role's own duty — the branch fns apply duty internally
         obs_duty = getattr(obs.shape, "duty_cycle", 1.0)
         obs_work = obs_rows * max(1, round(iters * obs_duty))
-        for e in range(k):
+        for sib in self._coupled_siblings(spec, obs)[:n_eng - 1]:
+            sib_rows = _wl_rows(sib.buffers[0])
+            sib_duty = getattr(sib.shape, "duty_cycle", 1.0) or 1.0
+            sib_iters = max(1, round(obs_work / (sib_rows * sib_duty)))
+            roles.append((sib.strategy, sib.shape, sib_rows, sib_iters))
+            role_pools.append(sib.pool)
+        for e in range(min(k, n_eng - len(roles))):
             if m:
                 s = spec.stressors[e % m]
                 s_rows = _wl_rows(s.buffer_bytes)
                 s_duty = getattr(s.shape, "duty_cycle", 1.0) or 1.0
                 s_iters = max(1, round(obs_work / (s_rows * s_duty)))
                 roles.append((s.strategy, s.shape, s_rows, s_iters))
+                role_pools.append(s.pool)
             else:
                 roles.append(("i", None, 1, iters))
+                role_pools.append(obs.pool)
         while len(roles) < n_eng:
             roles.append(("i", None, 1, iters))
+            role_pools.append(obs.pool)
 
         rows_max = max(r[2] for r in roles)
-        program_key = (n_eng, tuple(roles))
+        # per-pool operand placement: when every engine's pool lands in
+        # one effective memory kind, the stacked operands carry that
+        # kind's sharding into the fused dispatch; mixed-pool rungs
+        # fall back to the default memory (one stacked array has one
+        # memory kind — per-engine kinds need a real multi-chip slice
+        # and per-pool operand splitting, the remaining ROADMAP item).
+        # The kind joins the cache key: identical role programs from
+        # differently-placed pools must not share operands.
+        kinds = {self.pools.pool(p).effective_memory_kind()
+                 for p in role_pools}
+        kind = kinds.pop() if len(kinds) == 1 else None
+        program_key = (n_eng, activity, kind, tuple(roles))
         cached = programs.get(program_key) if programs is not None \
             else None
 
-        # per-engine operands: a float stream buffer and an int chase
-        # chain, padded to the widest role.  (Per-pool memory kinds are
-        # not addressable per-engine on a host-device mesh; the pools'
-        # effective placement on this container is the default memory
-        # anyway, and the curve records its pool label from the spec.)
-        xf = np.broadcast_to(
-            np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
-            .reshape(rows_max, LINE_BYTES // 4),
-            (n_eng, rows_max, LINE_BYTES // 4)).copy()
-        xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
-        for e, (strategy, shape, rows, _ri) in enumerate(roles):
-            if resolve_strategy(strategy, shape) in _SPMD_CHASES:
-                if resolve_strategy(strategy, shape) == "t":
-                    chain = kops.strided_chain_buffer(
-                        rows, getattr(shape, "stride", 8) or 8)
-                else:
-                    chain = kops.chain_buffer(rows, seed=e)
-                xi[e, :rows, :chain.shape[1]] = chain
-
         if cached is not None:
-            mesh, fn, fenced = cached
+            # operands are fully determined by the cache key (chain
+            # seeds are engine indices): reuse the placed arrays too —
+            # no host-side rebuild, no repeated host->device transfer
+            mesh, fn, fenced, xf, xi = cached
         else:
+            # per-engine operands: a float stream buffer and an int
+            # chase chain, padded to the widest role
+            xf = np.broadcast_to(
+                np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
+                .reshape(rows_max, LINE_BYTES // 4),
+                (n_eng, rows_max, LINE_BYTES // 4)).copy()
+            xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
+            for e, (strategy, shape, rows, _ri) in enumerate(roles):
+                if resolve_strategy(strategy, shape) in _SPMD_CHASES:
+                    if resolve_strategy(strategy, shape) == "t":
+                        chain = kops.strided_chain_buffer(
+                            rows, getattr(shape, "stride", 8) or 8)
+                    else:
+                        chain = kops.chain_buffer(rows, seed=e)
+                    xi[e, :rows, :chain.shape[1]] = chain
+
             branch_fns: List = []
             engine_branch: List[int] = []
             branch_of: Dict[Tuple, int] = {}
@@ -591,7 +718,8 @@ class CoreCoordinator:
                 if sig not in branch_of:
                     branch_of[sig] = len(branch_fns)
                     branch_fns.append(_spmd_branch_fn(
-                        strategy, shape, rows, role_iters))
+                        strategy, shape, rows, role_iters,
+                        activity=activity))
                 engine_branch.append(branch_of[sig])
             mesh, fn = build_rung_program(n_eng, branch_fns,
                                           engine_branch)
@@ -600,17 +728,18 @@ class CoreCoordinator:
             # identity on JAX releases without the op — there the psum
             # folds away and this honestly reports unfenced)
             fenced = measured_region_is_fenced(fn, xf, xi)
+            # commit the operands onto the mesh BEFORE the measured
+            # region: a host array would be re-transferred inside
+            # every timed call, and the transfer (which scales with
+            # the widest role, not the observer) would dominate the
+            # measurement
+            from jax.sharding import PartitionSpec as P
+            sharding = compat.named_sharding(mesh, P("engine"), kind)
+            xf = jax.device_put(xf, sharding)
+            xi = jax.device_put(xi, sharding)
+            jax.block_until_ready((xf, xi))
             if programs is not None:
-                programs[program_key] = (mesh, fn, fenced)
-        # commit the operands onto the mesh BEFORE the measured region:
-        # a host array would be re-transferred inside every timed call,
-        # and the transfer (which scales with the widest role, not the
-        # observer) would dominate the measurement
-        from jax.sharding import PartitionSpec as P
-        sharding = jax.sharding.NamedSharding(mesh, P("engine"))
-        xf = jax.device_put(xf, sharding)
-        xi = jax.device_put(xi, sharding)
-        jax.block_until_ready((xf, xi))
+                programs[program_key] = (mesh, fn, fenced, xf, xi)
         jax.block_until_ready(fn(xf, xi))          # compile + warm
         samples = []
         for _ in range(3):
@@ -700,21 +829,30 @@ _SPMD_CHASES = ("l", "m", "t")      # latency walks: dependent gathers
 _SPMD_STREAM_2X = ("c", "x")        # copy/rmw touch two lines per line
 
 
-def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int):
+def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
+                    activity: str = "jnp"):
     """Per-engine activity for one SPMD rung: ``(xf, xi) -> f32``.
 
-    Pure-jnp traffic loops (no Pallas: every branch must trace under
-    ``shard_map``'s switch on any backend).  All branches take the SAME
-    operand pair and return a scalar so ``lax.switch`` can fuse them;
-    each closes over its own static row count and iteration budget.
-    Loop bodies either carry the buffer or re-issue it through
-    ``optimization_barrier`` so XLA cannot hoist the memory traffic out
-    of the loop."""
+    All branches take the SAME operand pair and return a scalar so
+    ``lax.switch`` can fuse them; each closes over its own static row
+    count and iteration budget.  Loop bodies either carry the buffer or
+    re-issue it through ``optimization_barrier`` so XLA cannot hoist
+    the memory traffic out of the loop.
+
+    ``activity="pallas"`` builds the branch from the real kernel
+    library (:mod:`repro.kernels.stream` / ``chase``: mixed-stream,
+    copy, seeded write streams, strided/Sattolo chases — compiled on
+    TPU, interpret-mode elsewhere); ``"jnp"`` is the pure-jnp traffic
+    loop fallback for hosts where Pallas is unavailable
+    (``compat.pallas_supported``)."""
     from repro import compat
 
     strat = resolve_strategy(strategy, shape)
     duty = getattr(shape, "duty_cycle", 1.0) if shape is not None else 1.0
     n = max(1, int(round(iters * duty)))
+
+    if activity == "pallas" and strategy != "i":
+        return _pallas_branch_fn(strat, shape, rows, n)
 
     if strategy == "i":
         def idle(xf, xi):
@@ -771,6 +909,117 @@ def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int):
     return read
 
 
+def _pallas_branch_fn(strat: str, shape, rows: int, n: int):
+    """Pallas-kernel edition of one rung activity (resolved strategy
+    letter ``strat``, ``n`` active passes): the branch's memory traffic
+    is the real kernel library, not a jnp stand-in.  Every branch keeps
+    a dataflow edge from its (barrier-fenced) operands into each
+    kernel call — carried loop state where the kernel's output feeds
+    the next pass (copy/rmw/seeded write), ``optimization_barrier``
+    re-issue where it cannot (reads, mixed streams, chases) — so the
+    extended jaxpr fence check can verify every ``pallas_call``
+    consumes fenced data."""
+    from repro import compat
+    from repro.kernels import chase as _kchase
+    from repro.kernels import ops as kops
+    from repro.kernels import stream as _kstream
+    from repro.core.workloads import _fits_vmem
+
+    interp = not kops.on_tpu()
+    blk = min(512, rows)
+
+    if strat in _SPMD_CHASES:
+        vmem = strat == "l" and _fits_vmem(rows * LINE_BYTES)
+        kern = _kchase.chase_vmem if vmem else _kchase.chase_hbm
+
+        def chase(xf, xi):
+            buf = xi[:rows]
+
+            def cycle(_, acc):
+                # re-issued buffer: one dependent full traversal per
+                # pass, not hoistable/CSE-able across passes
+                bb = compat.optimization_barrier(buf)
+                idx = kern(bb, n_steps=rows, interpret=interp)
+                return acc + idx.astype(jnp.float32)
+
+            return jax.lax.fori_loop(0, n, cycle, jnp.float32(0.0))
+        return chase
+
+    if strat == "y":
+        def write_stream(xf, xi):
+            def body(_, acc):
+                # the seed depends on the previous pass, serialising
+                # the passes; the kernel's stores depend on the seed
+                seed = xf[:1, :1] + acc * 1e-30
+                out = _kstream.write_hbm_seeded(
+                    seed, rows, block_rows=blk, interpret=interp)
+                return acc * 0.5 + out[0, 0]
+
+            return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
+        return write_stream
+
+    if strat in ("w", "x"):
+        def rmw(xf, xi):
+            def body(_, x):
+                # write-allocate: read + write back, carried so pass
+                # t+1 depends on pass t's stores.  Deliberate for 'w'
+                # too (matching the jnp fallback branch): a cacheable
+                # write allocates the line, so its memory traffic IS
+                # read+write — the interpret backend's pure-store 'w'
+                # kernel is the approximation, not this.  Useful-bytes
+                # accounting stays the registry's convention: 'w'
+                # counts the written lines (1x), 'x' both (2x,
+                # _SPMD_STREAM_2X) — same elapsed, different useful BW.
+                return _kstream.rmw_hbm(x, block_rows=blk,
+                                        interpret=interp)
+
+            x = jax.lax.fori_loop(0, n, body, xf[:rows])
+            return x[0, 0]
+        return rmw
+
+    if strat == "c":
+        def copy(xf, xi):
+            def body(_, x):
+                return _kstream.copy_hbm(x, block_rows=blk,
+                                         interpret=interp)
+
+            x = jax.lax.fori_loop(0, n, body, xf[:rows])
+            return x[0, 0]
+        return copy
+
+    if strat == "b":
+        rf = (shape.read_fraction
+              if getattr(shape, "kind", None) == "mixed" else 0.5)
+
+        def mixed(xf, xi):
+            x = xf[:rows]
+
+            def body(_, acc):
+                xx = compat.optimization_barrier(x)
+                # the seed fences the write half of the mix (its store
+                # kernel consumes no other operand)
+                s, out = _kstream.mixed_hbm(
+                    xx, read_fraction=rf, block_rows=blk,
+                    interpret=interp, seed=xx[:1, :1])
+                # consume one written row: keeps the store kernel live
+                # under DCE without re-reading the whole destination
+                return acc * 0.5 + s + jnp.sum(out[:1])
+
+            return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
+        return mixed
+
+    def read(xf, xi):                   # r / s: pure read stream
+        x = xf[:rows]
+
+        def body(_, acc):
+            xx = compat.optimization_barrier(x)
+            return acc * 0.5 + _kstream.read_hbm(xx, block_rows=blk,
+                                                 interpret=interp)
+
+        return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
+    return read
+
+
 def build_rung_program(n_engines: int, branch_fns, engine_branch):
     """One fused SPMD rung over an ("engine",) mesh.
 
@@ -817,9 +1066,13 @@ def build_rung_program(n_engines: int, branch_fns, engine_branch):
         done = jax.lax.psum(out, "engine")
         return out[None], done
 
+    # check_rep=False: no replication rule is registered for
+    # pallas_call, so Pallas rung activities cannot trace under the
+    # checker; the stop psum still replicates `done` at runtime
     f = compat.shard_map(per_engine, mesh=mesh,
                          in_specs=(P("engine"), P("engine")),
-                         out_specs=(P("engine"), P()))
+                         out_specs=(P("engine"), P()),
+                         check_rep=False)
     return mesh, jax.jit(f)
 
 
@@ -893,12 +1146,19 @@ def measured_region_is_fenced(fn, *example_args) -> bool:
 
     Walks the traced jaxpr: inside every ``shard_map`` body, takes the
     first psum equation (the start barrier), computes the forward
-    dataflow closure of its outputs, and requires the body's first
-    output (the measured activity result) to lie inside that closure.
-    A program whose barrier is advisory only — the pre-fix
-    ``build_scenario_program``, where ``out`` had no data dependency on
-    ``ready`` — returns False: XLA was free to begin the measured
-    activity before the stressors were running."""
+    dataflow closure of its outputs, and requires (a) the body's first
+    output (the measured activity result) to lie inside that closure,
+    and (b) every ``pallas_call`` reachable after the barrier —
+    recursing through switch branches and loop bodies — to consume at
+    least one operand inside the closure.  (b) extends the check past
+    the ``pallas_call`` boundary: a kernel is the *actual* memory
+    traffic of a Pallas rung activity, and one fed only by constants
+    (e.g. a no-operand write stream) could be hoisted above the
+    barrier even though the switch output downstream of it still
+    "depends" on the fence.  A program whose barrier is advisory only
+    — the pre-fix ``build_scenario_program``, where ``out`` had no
+    data dependency on ``ready`` — returns False: XLA was free to
+    begin the measured activity before the stressors were running."""
     closed = jax.make_jaxpr(fn)(*example_args)
     bodies = _shard_map_bodies(closed.jaxpr)
     if not bodies:
@@ -928,13 +1188,52 @@ def _shard_map_bodies(jaxpr) -> List[Any]:
 def _first_out_depends_on_psum(body) -> bool:
     live: set = set()
     seen_psum = False
+    kernels_ok = True
     for eqn in body.eqns:
         invars = [v for v in eqn.invars if not hasattr(v, "val")]
         if not seen_psum and "psum" in eqn.primitive.name:
             seen_psum = True
             live.update(eqn.outvars)
             continue
-        if seen_psum and any(v in live for v in invars):
-            live.update(eqn.outvars)
+        if seen_psum:
+            kernels_ok = kernels_ok and _kernels_fenced_in_eqn(eqn, live)
+            if any(v in live for v in invars):
+                live.update(eqn.outvars)
     out0 = body.outvars[0]
-    return out0 in live
+    return out0 in live and kernels_ok
+
+
+def _is_live(v, live) -> bool:
+    return not hasattr(v, "val") and v in live
+
+
+def _kernels_fenced_in_eqn(eqn, live) -> bool:
+    """Fence-reachability of the kernels *inside* one equation: a
+    ``pallas_call`` must consume at least one fence-dependent operand;
+    any other equation recurses into its sub-jaxprs (switch/cond
+    branches, while/scan loop bodies, inner pjit calls) with the live
+    set mapped onto the inner binders.  The mapping aligns outer
+    operands to inner invars from the END — exact for pjit/scan, and
+    for cond/switch (whose leading index operand has no binder) and
+    while bodies (whose leading cond-consts belong to the other
+    jaxpr) it aligns the carried values correctly, which is where the
+    fenced operands live."""
+    if "pallas_call" in eqn.primitive.name:
+        return any(_is_live(v, live) for v in eqn.invars)
+    ok = True
+    for inner in _sub_jaxprs(eqn.params):
+        inner_live = {iv for iv, ov in zip(reversed(inner.invars),
+                                           reversed(eqn.invars))
+                      if _is_live(ov, live)}
+        ok = ok and _kernels_fenced_in_jaxpr(inner, inner_live)
+    return ok
+
+
+def _kernels_fenced_in_jaxpr(jaxpr, live) -> bool:
+    live = set(live)
+    ok = True
+    for eqn in jaxpr.eqns:
+        ok = ok and _kernels_fenced_in_eqn(eqn, live)
+        if any(_is_live(v, live) for v in eqn.invars):
+            live.update(eqn.outvars)
+    return ok

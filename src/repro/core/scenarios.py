@@ -173,6 +173,15 @@ class ScenarioSpec:
     into the matrix runner's same-signature vmapped passes).  The first
     observer stays the ``observer`` attribute (v1-compatible keying);
     the rest land in ``co_observers``.
+
+    ``coupled`` (default True) makes co-observers part of each other's
+    measured region: on the spmd backend every sibling observer runs as
+    a live engine inside each observer's rung dispatch, and on modeled
+    backends each sibling contributes an always-on single-engine class
+    to the queueing network.  ``coupled=False`` restores the historical
+    semantics (each observer sees only the stressor ensemble); curves
+    record which one produced them via the CurveDB ``execution``
+    provenance entry.
     """
     name: str
     observer: ObserverSpec
@@ -180,6 +189,7 @@ class ScenarioSpec:
     iters: int = 500
     max_stressors: Optional[int] = None     # ladder depth; None = n_engines
     co_observers: Tuple[ObserverSpec, ...] = ()
+    coupled: bool = True
 
     def __post_init__(self):
         obs, co = self.observer, tuple(self.co_observers)
@@ -253,7 +263,8 @@ class ScenarioSpec:
                             max_stressors=d.get("max_stressors"),
                             co_observers=tuple(
                                 _obs_from_dict(o)
-                                for o in d.get("co_observers", ())))
+                                for o in d.get("co_observers", ())),
+                            coupled=d.get("coupled", True))
 
 
 def _obs_from_dict(obs: Dict[str, Any]) -> ObserverSpec:

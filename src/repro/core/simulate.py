@@ -307,6 +307,24 @@ def simulate_scenario(
     return out
 
 
+def co_observer_class(name: str, node: MemoryNode, strategy: str, *,
+                      read_fraction: Optional[float] = None,
+                      duty_cycle: float = 1.0,
+                      stride: int = 1) -> ActivityClass:
+    """The queueing-network term for one *coupled* co-observer.
+
+    A sibling observer of a coupled multi-observer scenario is always
+    on — it occupies exactly one engine at its strategy's native MLP at
+    EVERY ladder rung (unlike the stressor ensemble, which grows with
+    the rung index).  This mirrors the spmd backend's executed rungs,
+    where every sibling runs as a live engine inside the measured
+    region; an uncoupled scenario simply omits these classes (the
+    historical semantics)."""
+    return ActivityClass(name, node, strategy, 1,
+                         read_fraction=read_fraction,
+                         duty_cycle=duty_cycle, stride=stride)
+
+
 def scenario_ladder(
     platform: Platform,
     *,
@@ -315,12 +333,19 @@ def scenario_ladder(
     stress_node: MemoryNode,
     stress_strategy: str,
     max_stressors: Optional[int] = None,
+    co_observers: Optional[List[Tuple[MemoryNode, str]]] = None,
 ) -> List[Dict[str, ClassResult]]:
-    """The paper's best->worst scenario sequence: 0..p-1 stressor engines."""
+    """The paper's best->worst scenario sequence: 0..p-1 stressor
+    engines.  ``co_observers`` — (node, strategy) pairs — adds coupled
+    sibling observers present at every rung (see
+    :func:`co_observer_class`)."""
     p = platform.n_engines if max_stressors is None else max_stressors + 1
     results = []
     for k in range(p):
         classes = [ActivityClass("obs", obs_node, obs_strategy, 1)]
+        for j, (node, strat) in enumerate(co_observers or ()):
+            if strat != "i":
+                classes.append(co_observer_class(f"co{j}", node, strat))
         if k and stress_strategy != "i":
             classes.append(
                 ActivityClass("stress", stress_node, stress_strategy, k))

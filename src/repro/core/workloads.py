@@ -326,6 +326,13 @@ def _rows(buffer_bytes: int) -> int:
     return (rows // block) * block or rows
 
 
+def rows_for(buffer_bytes: int) -> int:
+    """Public spelling of the buffer->line-rows mapping every backend
+    shares (block-aligned row count for a byte budget); the spmd rung
+    builder and the batched measured pass must agree on it exactly."""
+    return _rows(buffer_bytes)
+
+
 def _timed(fn, *args, iters: int, **kw) -> float:
     """Median-of-3 wall time for `iters` back-to-back calls, ns."""
     jax.block_until_ready(fn(*args, **kw))       # compile + warm

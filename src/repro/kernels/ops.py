@@ -49,6 +49,14 @@ def stream_rmw(x, *, block_rows: int = 512,
                            interpret=_interp(interpret))
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("rows", "block_rows", "interpret"))
+def stream_write_seeded(seed, *, rows: int, block_rows: int = 512,
+                        interpret: Optional[bool] = None):
+    return _stream.write_hbm_seeded(seed, rows, block_rows=block_rows,
+                                    interpret=_interp(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def stream_copy(x, *, block_rows: int = 512,
                 interpret: Optional[bool] = None):

@@ -52,6 +52,13 @@ def _write_body(o_ref, *, value: float):
     o_ref[...] = jnp.full_like(o_ref, value)
 
 
+def _write_seeded_body(seed_ref, o_ref, *, value: float):
+    # the stored value depends on the (1,1) seed operand, so the store
+    # traffic carries a dataflow edge from whatever produced the seed —
+    # one extra scalar read total, still a pure write stream per line
+    o_ref[...] = jnp.full_like(o_ref, value) + seed_ref[0, 0]
+
+
 def _rmw_body(x_ref, o_ref):
     # write-allocate analog: the line is read, modified, written back
     o_ref[...] = x_ref[...] + 1.0
@@ -116,6 +123,27 @@ def write_hbm(shape_rows: int, *, value: float = 1.0,
     )()
 
 
+def write_hbm_seeded(seed: jnp.ndarray, shape_rows: int, *,
+                     value: float = 1.0,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Write-streaming (y) with a dataflow anchor: identical store
+    traffic to :func:`write_hbm`, but the stored value depends on the
+    (1, 1) f32 ``seed`` operand.  The SPMD backend uses this so a pure
+    write activity cannot be hoisted above the rung's start barrier —
+    ``write_hbm`` takes no operands at all, which leaves the measured
+    region structurally unfenced (see ``measured_region_is_fenced``)."""
+    n = _grid_blocks(shape_rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_write_seeded_body, value=value),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((shape_rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(seed)
+
+
 def rmw_hbm(x: jnp.ndarray, *, block_rows: int = DEFAULT_BLOCK_ROWS,
             interpret: bool = False) -> jnp.ndarray:
     """Write-allocate (x): every line read, modified, written back."""
@@ -160,7 +188,8 @@ def triad_hbm(b: jnp.ndarray, c: jnp.ndarray, *, scalar: float = 3.0,
 
 def mixed_hbm(x: jnp.ndarray, *, read_fraction: float,
               value: float = 1.0, block_rows: int = DEFAULT_BLOCK_ROWS,
-              interpret: bool = False):
+              interpret: bool = False,
+              seed: Optional[jnp.ndarray] = None):
     """Mixed read/write stream: ``read_fraction`` of the blocks are
     sum-reduced (pure read traffic), the rest are written (pure store
     traffic) — nothing else touches memory, so the realized read:write
@@ -174,6 +203,12 @@ def mixed_hbm(x: jnp.ndarray, *, read_fraction: float,
     holds few blocks at the requested block size, the block size is
     reduced (to the largest row-count divisor giving >= 8 blocks) so a
     small buffer cannot silently degenerate to a pure read or write.
+
+    ``seed`` (optional (1, 1) f32): route the write half through
+    :func:`write_hbm_seeded` so the store traffic carries a dataflow
+    edge from the seed — required when the mix runs inside a fenced
+    SPMD measured region (a no-operand write kernel could be hoisted
+    above the start barrier).
     """
     assert 0.0 <= read_fraction <= 1.0
     rows = x.shape[0]
@@ -192,8 +227,13 @@ def mixed_hbm(x: jnp.ndarray, *, read_fraction: float,
         acc = read_hbm(x[:n_r * block_rows], block_rows=block_rows,
                        interpret=interpret)
     if n_w:
-        out = write_hbm(n_w * block_rows, value=value,
-                        block_rows=block_rows, interpret=interpret)
+        if seed is not None:
+            out = write_hbm_seeded(seed, n_w * block_rows, value=value,
+                                   block_rows=block_rows,
+                                   interpret=interpret)
+        else:
+            out = write_hbm(n_w * block_rows, value=value,
+                            block_rows=block_rows, interpret=interpret)
     return acc, out
 
 

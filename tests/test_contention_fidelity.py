@@ -1,0 +1,419 @@
+"""Contention-fidelity suite (ISSUE 3): the spmd backend's curves must
+stay honest as the rung activities get real.
+
+Covers three fidelity claims:
+
+* **Backend consistency** — the same scenario run on the ``interpret``
+  and ``spmd`` backends produces the same curve keys and the same
+  (deterministic) modeled ladder, and the modeled ladder is monotone on
+  both: executing rungs must not change what the curves *mean*.
+* **Co-observer coupling** — a coupled multi-observer scenario shifts
+  each observer's curve versus the uncoupled baseline (the sibling is
+  live inside the measured region / queueing network), and CurveDB
+  provenance records ``coupled`` and ``activity`` for every curve.
+* **Fenced Pallas activities** — with rung activities promoted from jnp
+  loops to real Pallas kernels, ``measured_region_is_fenced`` still
+  verifies the barrier dataflow edge, now *through* the ``pallas_call``
+  boundary: a kernel fed only by constants (a no-operand write stream)
+  is rejected even though the switch output downstream still depends on
+  the fence.
+
+Multi-device execution happens in forced-device subprocesses (the main
+pytest process must keep seeing ONE device); the device count follows
+the ``REPRO_SPMD_DEVICES`` env var so CI can exercise a 2-device and an
+8-device mesh (see .github/workflows/ci.yml).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# CI matrix knob: how many host devices the spmd subprocesses force
+N_DEV = max(2, int(os.environ.get("REPRO_SPMD_DEVICES", "8")))
+
+
+def run_forced(body: str, n_devices: int = N_DEV, timeout: int = 480) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={n_devices}"
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+        print("SUBPROC_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "SUBPROC_OK" in r.stdout
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# spmd vs interpret: same scenario, same curve identity, sane ladder
+# ---------------------------------------------------------------------------
+
+
+def test_spmd_vs_interpret_consistency():
+    """The same ScenarioSpec on both executable backends: identical
+    curve keys, identical modeled rung values (the queueing network is
+    deterministic and backend-independent), monotone modeled ladder,
+    and executed spmd points present and positive for every rung the
+    mesh could hold."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+    K = 3
+    spec = ScenarioSpec(
+        "consistency", ObserverSpec("r", "hbm", (BUF,)),
+        (StressorSpec("w", "hbm", BUF),), iters=3, max_stressors=K)
+
+    n_dev = len(jax.devices())
+    interp = CoreCoordinator(backend="interpret").run_matrix([spec])
+    spmd = CoreCoordinator(backend="spmd").run_matrix([spec])
+
+    # curve identity agrees
+    assert [r.key for r in interp.runs] == [r.key for r in spmd.runs]
+    ri, rs = interp.runs[0], spmd.runs[0]
+    # the spmd ladder is capped at the rungs its mesh can hold;
+    # interpret models the full requested depth
+    depth = max(1, min(K + 1, n_dev))
+    assert len(ri.scenarios) == K + 1
+    assert len(rs.scenarios) == depth
+
+    # the modeled rung values are backend-independent (common prefix)
+    for si, ss in zip(ri.scenarios, rs.scenarios):
+        assert si.modeled_bw_gbps == ss.modeled_bw_gbps
+        assert si.modeled_lat_ns == ss.modeled_lat_ns
+    # ...and the modeled ladder is monotone (bw down, latency up)
+    bws = [s.modeled_bw_gbps for s in ri.scenarios]
+    lats = [s.modeled_lat_ns for s in ri.scenarios]
+    assert all(b <= a * 1.0001 for a, b in zip(bws, bws[1:]))
+    assert all(b >= a * 0.9999 for a, b in zip(lats, lats[1:]))
+
+    # the spmd backend executed every rung the mesh could hold, and
+    # the executed points are real measurements
+    assert rs.execution["executed_rungs"] == list(range(depth))
+    assert rs.execution["activity"] in ("pallas", "jnp")
+    assert rs.execution["fenced"]
+    for s in rs.scenarios:
+        assert s.source == "executed"
+        assert s.main.elapsed_ns > 0
+        assert s.main.bandwidth_gbps > 0
+    print("consistency OK on", n_dev, "devices")
+    """)
+
+
+def test_coupled_execution_on_mesh():
+    """Coupled multi-observer spmd execution: every sibling occupies a
+    live engine inside each observer's rung, so the executable ladder
+    depth shrinks by one engine per sibling; provenance records
+    coupled/activity per curve; the jnp fallback activity is selectable
+    and stamps itself honestly."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+    K = 3
+    obs = (ObserverSpec("r", "hbm", (BUF,)),
+           ObserverSpec("l", "host", (BUF,)))
+    stress = (StressorSpec("w", "hbm", BUF),)
+    coupled = ScenarioSpec("coupled", obs, stress, iters=3,
+                           max_stressors=K)
+    uncoupled = ScenarioSpec("uncoupled", obs, stress, iters=3,
+                             max_stressors=K, coupled=False)
+
+    n_dev = len(jax.devices())
+    c = CoreCoordinator(backend="spmd")
+    res = c.run_matrix([coupled, uncoupled])
+    assert res.stats.n_ladders == 4
+
+    depth_c = max(1, min(K + 1, n_dev - 1))   # 1 engine per sibling
+    depth_u = max(1, min(K + 1, n_dev))
+    for run in res.runs:
+        ex = run.execution
+        assert ex["fenced"]
+        assert ex["activity"] in ("pallas", "jnp")
+        if run.spec.name == "coupled":
+            assert ex["coupled"] is True
+            assert ex["executed_rungs"] == list(range(depth_c))
+        else:
+            assert ex["coupled"] is False
+            assert ex["executed_rungs"] == list(range(depth_u))
+        for s in run.scenarios:
+            if s.source == "executed":
+                assert s.main.elapsed_ns > 0
+
+    # forcing the jnp fallback stamps the provenance honestly
+    cj = CoreCoordinator(backend="spmd", spmd_activity="jnp")
+    resj = cj.run_matrix([coupled])
+    assert all(r.execution["activity"] == "jnp" for r in resj.runs)
+    assert all(r.execution["fenced"] for r in resj.runs)
+    print("coupled execution OK on", n_dev, "devices")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Coupling shifts curves (deterministic: the queueing model)
+# ---------------------------------------------------------------------------
+
+
+def test_coupled_vs_uncoupled_curves_differ_under_load():
+    """A live sibling bandwidth observer inside the measured region
+    must cost the observer bandwidth at EVERY rung — including rung 0,
+    where the uncoupled scenario sees no contention at all.  Modeled
+    backend: deterministic, so the comparison is exact."""
+    from repro.core.characterize import characterize_matrix
+    from repro.core.coordinator import CoreCoordinator
+
+    coupled, uncoupled = _twin_specs()
+    c = CoreCoordinator(backend="simulate")
+    db_c = characterize_matrix(c, [coupled])
+    db_u = characterize_matrix(c, [uncoupled])
+    key = "hbm:r|hbm:w"
+    bw_c = [p.bandwidth_gbps for p in db_c.curves[key]]
+    bw_u = [p.bandwidth_gbps for p in db_u.curves[key]]
+    lat_c = [p.latency_ns for p in db_c.curves[key]]
+    lat_u = [p.latency_ns for p in db_u.curves[key]]
+    assert all(cc < uu for cc, uu in zip(bw_c, bw_u))
+    assert all(cc > uu for cc, uu in zip(lat_c, lat_u))
+    # provenance records which semantics produced each curve
+    assert db_c.provenance[key]["execution"]["coupled"] is True
+    assert db_u.provenance[key]["execution"]["coupled"] is False
+    assert db_c.provenance[key]["coupled"] is True
+    assert db_u.provenance[key]["coupled"] is False
+
+
+def test_coupling_term_in_scenario_ladder():
+    """The queueing model's standalone ladder API carries the same
+    co-observer term: a coupled sibling read stream depresses the
+    observer at every rung."""
+    from repro.core import simulate as sim
+    from repro.core.devicetree import TPU_V5E
+
+    node = TPU_V5E.node("hbm")
+    plain = sim.scenario_ladder(
+        TPU_V5E, obs_node=node, obs_strategy="r", stress_node=node,
+        stress_strategy="w", max_stressors=3)
+    coupled = sim.scenario_ladder(
+        TPU_V5E, obs_node=node, obs_strategy="r", stress_node=node,
+        stress_strategy="w", max_stressors=3,
+        co_observers=[(node, "r")])
+    for p, q in zip(plain, coupled):
+        assert q["obs"].bw_gbps < p["obs"].bw_gbps
+        assert "co0" in q and "co0" not in p
+
+
+def test_uncoupled_spec_roundtrips_and_defaults_coupled():
+    """``coupled`` is part of the spec identity: it round-trips through
+    dicts, and absent keys (pre-coupling spec files) default to the new
+    coupled semantics."""
+    import json
+
+    from repro.core.scenarios import ScenarioSpec
+
+    coupled, uncoupled = _twin_specs()
+    for spec in (coupled, uncoupled):
+        back = ScenarioSpec.from_dict(json.loads(json.dumps(
+            spec.to_dict())))
+        assert back == spec and back.coupled == spec.coupled
+    legacy = coupled.to_dict()
+    del legacy["coupled"]
+    assert ScenarioSpec.from_dict(legacy).coupled is True
+
+
+def _twin_specs():
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+    BUF = 1 << 20
+    obs = (ObserverSpec("r", "hbm", (BUF,)),
+           ObserverSpec("r", "host", (BUF,)))
+    stress = (StressorSpec("w", "hbm", BUF),)
+    return (ScenarioSpec("twin-c", obs, stress, iters=5, max_stressors=3),
+            ScenarioSpec("twin-u", obs, stress, iters=5, max_stressors=3,
+                         coupled=False))
+
+
+def test_duplicate_observers_rejected():
+    """Two observers identical in every field would alias one curve key
+    per buffer and silently overwrite each other's ladders in CurveDB —
+    validate_spec must reject the spec up front (twins differing in any
+    field, e.g. buffer ladders, stay legal and key distinctly)."""
+    from repro.core.coordinator import CoreCoordinator, ValidationError
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 1 << 20
+    o = ObserverSpec("r", "hbm", (BUF,))
+    dup = ScenarioSpec("dup", (o, ObserverSpec("r", "hbm", (BUF,))),
+                       (StressorSpec("w", "hbm", BUF),), iters=5)
+    c = CoreCoordinator(backend="simulate")
+    with pytest.raises(ValidationError, match="duplicate observer"):
+        c.validate_spec(dup)
+    # same instance listed twice is the same duplicate
+    with pytest.raises(ValidationError, match="duplicate observer"):
+        c.validate_spec(ScenarioSpec(
+            "dup2", (o, o), (StressorSpec("w", "hbm", BUF),), iters=5))
+    # differing buffer ladders remain legal
+    c.validate_spec(ScenarioSpec(
+        "ok", (o, ObserverSpec("r", "hbm", (2 * BUF,))),
+        (StressorSpec("w", "hbm", BUF),), iters=5))
+
+
+def test_coupled_siblings_resolve_for_reconstructed_observers():
+    """_coupled_siblings drops exactly one occurrence of the measured
+    observer — including for a deserialized (equal, non-identical)
+    observer — so twins differing only in buffers still see each
+    other."""
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 1 << 20
+    a = ObserverSpec("r", "hbm", (BUF,))
+    b = ObserverSpec("r", "hbm", (2 * BUF,))
+    spec = ScenarioSpec("twins", (a, b),
+                        (StressorSpec("w", "hbm", BUF),), iters=5)
+    sib = CoreCoordinator._coupled_siblings
+    assert sib(spec, a) == (b,)
+    assert sib(spec, b) == (a,)
+    # reconstructed equal observer resolves by value
+    assert sib(spec, ObserverSpec("r", "hbm", (BUF,))) == (b,)
+    assert sib(spec, ObserverSpec("r", "hbm", (2 * BUF,))) == (a,)
+
+
+# ---------------------------------------------------------------------------
+# Pallas rung activities keep the fence (jaxpr check crosses pallas_call)
+# ---------------------------------------------------------------------------
+
+ROWS = 16
+
+
+def _operands(n_eng: int):
+    xf = np.ones((n_eng, ROWS, 128), np.float32)
+    xi = np.zeros((n_eng, ROWS, 128), np.int32)
+    xi[:, :ROWS, 0] = np.roll(np.arange(ROWS), 1)     # a valid cycle
+    return xf, xi
+
+
+@pytest.mark.parametrize("strategy", ["r", "w", "y", "c", "b", "l", "t"])
+def test_pallas_branch_fns_execute_and_stay_fenced(strategy):
+    """Every Pallas rung activity traces under the rung program, runs
+    to a finite result, and the measured region remains structurally
+    fenced — the dataflow edge from the start-barrier psum reaches
+    every pallas_call's operands."""
+    from repro.core.coordinator import (_spmd_branch_fn,
+                                        build_rung_program,
+                                        measured_region_is_fenced)
+    from repro.core.scenarios import TrafficShape
+
+    shape = {"b": TrafficShape.mixed(1, 1),
+             "t": TrafficShape.strided(4)}.get(strategy)
+    fns = [_spmd_branch_fn(strategy, shape, ROWS, 2, activity="pallas")]
+    _mesh, f = build_rung_program(1, fns, [0])
+    xf, xi = _operands(1)
+    out, _barrier = f(xf, xi)
+    assert np.isfinite(np.asarray(out)).all()
+    assert measured_region_is_fenced(f, xf, xi)
+
+
+def test_pallas_activity_programs_contain_pallas_calls():
+    """The promoted rung program really is pallas_call-backed (and the
+    jnp fallback really is not): the activity provenance claim is
+    structural, not a label."""
+    import jax
+
+    from repro.core.coordinator import _spmd_branch_fn, build_rung_program
+
+    def has_pallas(activity):
+        fns = [_spmd_branch_fn("r", None, ROWS, 2, activity=activity)]
+        _mesh, f = build_rung_program(1, fns, [0])
+        return "pallas_call" in str(jax.make_jaxpr(f)(*_operands(1)))
+
+    assert has_pallas("pallas")
+    assert not has_pallas("jnp")
+
+
+def test_fence_checker_rejects_unfenced_pallas_kernel():
+    """A pallas_call fed only by constants (write_hbm takes no operands
+    at all) is real memory traffic with NO dataflow edge from the start
+    barrier — XLA may hoist it above the fence.  The extended checker
+    must reject it even though the switch output downstream still
+    depends on the barrier through other equations."""
+    from repro.core.coordinator import (build_rung_program,
+                                        measured_region_is_fenced)
+    from repro.kernels import stream as _kstream
+
+    def unfenced(xf, xi):
+        out = _kstream.write_hbm(ROWS, block_rows=ROWS, interpret=True)
+        return out[0, 0] + xf[0, 0] * 0.0     # "depends" on the fence
+
+    _mesh, f = build_rung_program(1, [unfenced], [0])
+    assert not measured_region_is_fenced(f, *_operands(1))
+
+
+def test_mixed_stream_write_half_needs_the_seed():
+    """Regression (found by the extended checker): the mixed stream's
+    write half is a no-operand kernel, so an unseeded mix inside the
+    measured region is structurally unfenced; the seeded mix routes the
+    stores through write_hbm_seeded and restores the edge."""
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core.coordinator import (build_rung_program,
+                                        measured_region_is_fenced)
+    from repro.kernels import stream as _kstream
+
+    def mk(seeded):
+        def mixed(xf, xi):
+            x = compat.optimization_barrier(xf[:ROWS])
+            s, out = _kstream.mixed_hbm(
+                x, read_fraction=0.5, block_rows=ROWS // 8,
+                interpret=True, seed=x[:1, :1] if seeded else None)
+            return s + jnp.sum(out[:1])
+        return mixed
+
+    _m, f_seeded = build_rung_program(1, [mk(True)], [0])
+    _m, f_bare = build_rung_program(1, [mk(False)], [0])
+    xf, xi = _operands(1)
+    assert measured_region_is_fenced(f_seeded, xf, xi)
+    assert not measured_region_is_fenced(f_bare, xf, xi)
+
+
+def test_spmd_ladder_refuses_pinned_single_device():
+    """Regression: with XLA_FLAGS already pinning the host device count
+    below 2, benchmarks.spmd_ladder used to re-exec itself with the
+    same environment — unbounded process recursion.  It must fail fast
+    with an actionable message instead."""
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=1")
+    root = os.path.dirname(SRC)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.spmd_ladder"],
+        capture_output=True, text=True, timeout=240, env=env, cwd=root)
+    assert r.returncode != 0
+    assert "already pins" in r.stderr
+
+
+def test_jnp_fallback_branches_still_fenced():
+    """The compat fallback (pure-jnp loops) keeps the original fence
+    guarantee — the checker extension must not regress it."""
+    from repro.core.coordinator import (_spmd_branch_fn,
+                                        build_rung_program,
+                                        measured_region_is_fenced)
+
+    fns = [_spmd_branch_fn("r", None, ROWS, 2, activity="jnp"),
+           _spmd_branch_fn("w", None, ROWS, 2, activity="jnp")]
+    _mesh, f = build_rung_program(1, fns, [0])
+    assert measured_region_is_fenced(f, *_operands(1))

@@ -130,6 +130,147 @@ def test_simulate_throughput_conservation(n_classes, seed):
 
 
 # ---------------------------------------------------------------------------
+# TrafficShape.tag(): injective over the shape space (no key aliasing)
+# ---------------------------------------------------------------------------
+
+# shapes drawn through the public constructors (the canonical per-kind
+# parameter spaces); floats go through the same exact-spelling machinery
+# the CurveDB keys rely on
+def _shape_strategy():
+    from repro.core.scenarios import TrafficShape
+    return st.one_of(
+        st.just(TrafficShape.steady()),
+        st.tuples(st.integers(0, 97), st.integers(0, 97))
+        .filter(lambda t: t[0] + t[1] > 0)
+        .map(lambda t: TrafficShape.mixed(*t)),
+        st.tuples(st.floats(0.001, 1.0, allow_nan=False,
+                            allow_infinity=False),
+                  st.integers(1, 1024))
+        .map(lambda t: TrafficShape.burst(*t)),
+        st.integers(1, 4096).map(TrafficShape.strided),
+    )
+
+
+@FAST
+@given(data=st.data())
+def test_traffic_shape_tag_injective(data):
+    """Distinct shapes MUST NOT alias one CurveDB key component: the
+    tag is injective over the constructor-reachable shape space (the
+    historical 2-decimal rounding bug aliased mixed(2,1) with
+    mixed(67,33))."""
+    a = data.draw(_shape_strategy())
+    b = data.draw(_shape_strategy())
+    assert (a == b) == (a.tag() == b.tag()), (a, b)
+
+
+# ---------------------------------------------------------------------------
+# CurveDB v2: save -> load -> save is byte-idempotent (execution incl.)
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    ostrat=st.sampled_from(["r", "w", "l"]),
+    sstrat=st.sampled_from(["r", "w", "y", "c"]),
+    kind=st.sampled_from(["steady", "mixed", "burst", "strided"]),
+    coupled=st.booleans(),
+    n_co=st.integers(0, 2),
+    max_stressors=st.integers(0, 3),
+)
+def test_curvedb_v2_save_load_save_idempotent(ostrat, sstrat, kind,
+                                              coupled, n_co,
+                                              max_stressors):
+    """A CurveDB written, loaded, and written again must produce the
+    identical file — including the v2 ``execution`` provenance fields
+    (backend, activity, coupled, rung lists) introduced with the
+    coupled spmd backend."""
+    import json
+    import tempfile
+
+    from repro.core.characterize import characterize_matrix
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec, TrafficShape)
+
+    shape = {"steady": TrafficShape.steady(),
+             "mixed": TrafficShape.mixed(2, 1),
+             "burst": TrafficShape.burst(0.5),
+             "strided": TrafficShape.strided(8)}[kind]
+    BUF = 1 << 20
+    observers = tuple([ObserverSpec(ostrat, "hbm", (BUF,))]
+                      + [ObserverSpec("r", "host", ((j + 2) * BUF,))
+                         for j in range(n_co)])
+    spec = ScenarioSpec(
+        "prop", observers,
+        (StressorSpec(sstrat, "hbm", BUF, shape),),
+        iters=3, max_stressors=max_stressors, coupled=coupled)
+    db = characterize_matrix(CoreCoordinator(backend="simulate"), [spec])
+    for entry in db.provenance.values():
+        ex = entry["execution"]
+        assert ex["activity"] == "none" and ex["backend"] == "simulate"
+        assert ex["coupled"] == (coupled and n_co > 0)
+    with tempfile.TemporaryDirectory() as d:
+        p1, p2 = f"{d}/a.json", f"{d}/b.json"
+        db.save(p1)
+        db2 = type(db).load(p1)
+        db2.save(p2)
+        with open(p1) as f1, open(p2) as f2:
+            t1, t2 = f1.read(), f2.read()
+        assert t1 == t2
+        assert json.loads(t1)["schema"] == 2
+
+
+# ---------------------------------------------------------------------------
+# v1 curve files: forward-load on the current CurveDB
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    n_points=st.integers(1, 8),
+    bw0=st.floats(1.0, 4000.0, allow_nan=False, allow_infinity=False),
+    lat0=st.floats(1.0, 5000.0, allow_nan=False, allow_infinity=False),
+    pools=st.lists(st.sampled_from(["hbm", "host", "peer"]),
+                   min_size=1, max_size=3, unique=True),
+)
+def test_curvedb_v1_forward_load(n_points, bw0, lat0, pools):
+    """Any schema-less (seed-format) curve file loads as schema 1 with
+    empty provenance, serves lookups, and re-saves without mutating its
+    schema or values."""
+    import json
+    import tempfile
+
+    from repro.core.characterize import CurveDB
+
+    curves = {}
+    for pool in pools:
+        for strat in ("r", "l"):
+            curves[f"{pool}:{strat}|{pool}:w"] = [
+                {"n_stressors": k,
+                 "bandwidth_gbps": bw0 / (k + 1),
+                 "latency_ns": lat0 * (k + 1)}
+                for k in range(n_points)]
+    with tempfile.TemporaryDirectory() as d:
+        p = f"{d}/v1.json"
+        with open(p, "w") as f:
+            json.dump({"platform": "tpu-v5e", "curves": curves}, f)
+        db = CurveDB.load(p)
+        assert db.schema == 1 and db.provenance == {}
+        for pool in pools:
+            assert db.effective_bw(pool, n_points - 1) == \
+                bw0 / n_points
+            assert db.effective_lat(pool, 0) == lat0
+            # shaped lookups fall back to the steady curves on v1
+            assert db.effective_bw(pool, 0, shape_tag="dc0.50") == bw0
+        p2 = f"{d}/v1-resaved.json"
+        db.save(p2)
+        db2 = CurveDB.load(p2)
+        assert db2.schema == 1
+        assert {k: [vars(pt) for pt in v] for k, v in db2.curves.items()} \
+            == curves
+
+
+# ---------------------------------------------------------------------------
 # Interface grammar roundtrip
 # ---------------------------------------------------------------------------
 
