@@ -47,15 +47,27 @@ def _run() -> list:
     spmd = CoreCoordinator(backend="spmd")
     res = spmd.run_matrix([spec])
     st = res.stats
-    print(f"spmd ladder: {st.spmd_rungs} rungs -> "
-          f"{st.measure_dispatches} fused dispatches "
+    print(f"spmd ladder: {st.spmd_rungs} rungs "
           f"({st.n_ladders} observers x {st.spmd_rungs // st.n_ladders} "
-          f"rungs), {st.model_evals} model evals for comparison")
-    assert st.measure_dispatches == st.spmd_rungs
+          f"rungs) -> {st.measure_dispatches} fused whole-ladder "
+          f"dispatches ({st.host_sync_dispatches} host syncs total), "
+          f"{st.model_evals} model evals for comparison")
+    # the dispatch accounting depends on the RESOLVED mode: the fused
+    # ladder blocks the host once per ladder with in-dispatch device
+    # clocks; installs without a timestamp source honestly fall back
+    # to the legacy per-rung path (warm + 3 timed syncs per rung)
+    timing_source = res.runs[0].execution["timing_source"]
+    if timing_source == "device":
+        assert st.measure_dispatches == st.n_ladders
+        assert st.host_sync_dispatches == st.n_ladders
+    else:
+        assert st.measure_dispatches == st.spmd_rungs
+        assert st.host_sync_dispatches == 4 * st.spmd_rungs
 
     rows = []
     for run in res.runs:
         assert run.execution["fenced"]
+        assert run.execution["timing_source"] == timing_source
         for s in run.scenarios:
             rows.append({
                 "curve": run.key,
@@ -74,7 +86,9 @@ def _run() -> list:
     ex = db.provenance[key]["execution"]
     print(f"CurveDB provenance for {key!r}: backend={ex['backend']} "
           f"activity={ex['activity']} coupled={ex['coupled']} "
-          f"executed_rungs={ex['executed_rungs']} fenced={ex['fenced']}")
+          f"executed_rungs={ex['executed_rungs']} fenced={ex['fenced']} "
+          f"timing_source={ex['timing_source']} "
+          f"dispatches={ex['dispatches']}")
     return rows
 
 

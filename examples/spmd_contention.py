@@ -49,15 +49,18 @@ spec = ScenarioSpec(
 coord = CoreCoordinator(backend="spmd")
 res = coord.run_matrix([spec])
 print(f"\n{res.stats.spmd_rungs} ladder rungs -> "
-      f"{res.stats.measure_dispatches} fused SPMD dispatches "
-      f"(one per rung), across {res.stats.n_ladders} observer curves")
+      f"{res.stats.measure_dispatches} fused whole-ladder SPMD "
+      f"dispatches (ONE per observer curve, "
+      f"{res.stats.n_ladders} curves; per-rung elapsed from "
+      f"in-dispatch device clocks)")
 
 for run in res.runs:
     print(f"\n-- curve {run.key} "
           f"(executed rungs {run.execution['executed_rungs']}, "
           f"activity={run.execution['activity']}, "
           f"coupled={run.execution['coupled']}, "
-          f"fenced={run.execution['fenced']})")
+          f"fenced={run.execution['fenced']}, "
+          f"timing={run.execution['timing_source']})")
     for s in run.scenarios:
         val = (f"{s.main.latency_ns:8.1f} ns/tx"
                if run.observer.strategy == "l"

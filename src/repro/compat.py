@@ -137,6 +137,98 @@ def pallas_supported() -> bool:
         return False
 
 
+# ---------------------------------------------------------------------------
+# In-dispatch timing probe (device-side rung clocks)
+# ---------------------------------------------------------------------------
+
+
+def _clock_parts(_dep=None):
+    """Monotonic wall clock split into x32-safe int32 parts."""
+    import time
+    t = time.perf_counter_ns()
+    return np.asarray([t // 1_000_000_000, t % 1_000_000_000], np.int32)
+
+
+@functools.lru_cache(maxsize=1)
+def _resolve_io_callback():
+    """``jax.experimental.io_callback`` where it exists (it graduated
+    from the old host_callback machinery); ``None`` on releases without
+    it."""
+    try:
+        from jax.experimental import io_callback
+        return io_callback
+    except ImportError:
+        return None
+
+
+@functools.lru_cache(maxsize=1)
+def device_clock_source() -> str:
+    """Where :func:`device_clock` timestamps come from on this install.
+
+    ``"device"`` when an on-accelerator cycle counter is exposed by the
+    installed JAX (none is, on current public releases — when a TPU/GPU
+    clock primitive lands it slots in here, ahead of the fallback);
+    ``"callback"`` when the ``io_callback`` timestamp fallback is
+    available; ``"none"`` when neither exists — callers (the fused spmd
+    ladder) must then fall back to host wall-clock timing around whole
+    dispatches."""
+    if _resolve_io_callback() is not None:
+        return "callback"
+    return "none"
+
+
+def device_clock(dep):
+    """A ``(2,)``-int32 ``[seconds, nanoseconds]`` monotonic timestamp
+    taken INSIDE the dispatch, data-dependent on ``dep``.
+
+    The fused spmd ladder brackets every scanned rung sample with two of
+    these, so per-rung elapsed time comes from in-dispatch deltas
+    instead of host ``perf_counter`` around ``block_until_ready`` — no
+    dispatch/interrupt jitter in the measured region, no extra host
+    round-trips.  On installs without a timestamp source
+    (``device_clock_source() == "none"``) this returns zeros; callers
+    must check the source first.
+
+    Consumers MUST thread the returned stamp's *value* into the work
+    being timed (see the coordinator's exact-zero ``min(stamp, 0)``
+    trick): the callback fallback fills its result buffer
+    asynchronously, so a scheduling-only edge (``optimization_barrier``)
+    does not make the measured work wait for the stamp."""
+    import jax.numpy as jnp
+    ioc = _resolve_io_callback()
+    if ioc is None:
+        return jnp.zeros((2,), jnp.int32)
+    return ioc(_clock_parts, jax.ShapeDtypeStruct((2,), jnp.int32),
+               dep, ordered=False)
+
+
+# ---------------------------------------------------------------------------
+# Input buffer donation (per-backend availability)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def donation_supported() -> bool:
+    """Does this process's backend implement input buffer donation?
+
+    Probed by compiling a trivial donated program and checking that JAX
+    did not warn the donation away (platforms without donation keep the
+    program correct but ignore ``donate_argnums``).  The fused spmd
+    ladder donates its cached rung operands so repeated dispatches alias
+    buffers in place instead of copying."""
+    import warnings
+    import jax.numpy as jnp
+    try:
+        x = jnp.ones((8,), jnp.float32)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = jax.jit(lambda v: v + 1.0, donate_argnums=0)(x)
+            jax.block_until_ready(out)
+        return not any("donat" in str(m.message).lower() for m in w)
+    except Exception:
+        return False
+
+
 def optimization_barrier(x):
     """``jax.lax.optimization_barrier`` where it exists (it moved into
     ``jax.lax`` from ad_checkpoint internals); identity on releases

@@ -209,6 +209,8 @@ def curvedb_from_result(result: MatrixResult, platform: str, *,
         "measure_dispatches": result.stats.measure_dispatches,
         "model_evals": result.stats.model_evals,
         "spmd_rungs": result.stats.spmd_rungs,
+        "host_sync_dispatches": result.stats.host_sync_dispatches,
+        "program_cache_hits": result.stats.program_cache_hits,
     }
     for run in result.runs:
         # the curve methods pick executed values where the backend ran

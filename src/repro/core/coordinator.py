@@ -27,13 +27,21 @@ Backends:
                     the model (single real device).
   * ``tpu``       — same SPMD program, real hardware (not available in
                     this container; code path kept identical).
-  * ``spmd``      — *executes* every ladder rung as one fused
-                    ``shard_map`` dispatch over an ("engine",) mesh:
-                    observer + coupled sibling observers + live
+  * ``spmd``      — *executes* contention ladders on an ("engine",)
+                    mesh: observer + coupled sibling observers + live
                     stressor engines, rung activities built from the
                     real Pallas kernel library (pure-jnp fallback via
                     ``compat.pallas_supported``), measured region
-                    dataflow-fenced between two psum barriers.
+                    dataflow-fenced between two psum barriers.  The
+                    default dispatch mode (``spmd_dispatch="ladder"``)
+                    runs the ENTIRE ladder as ONE fused dispatch — a
+                    ``lax.scan`` over per-rung role tables, every scan
+                    step its own psum sandwich, per-rung elapsed time
+                    captured in-dispatch via ``compat.device_clock``
+                    (median-of-N samples, no host round-trips inside
+                    the measured region); ``spmd_dispatch="rung"``
+                    keeps the legacy one-dispatch-per-rung path with
+                    host wall-clock timing.
 """
 from __future__ import annotations
 
@@ -56,6 +64,18 @@ from repro.core.workloads import (LINE_BYTES, Workload, WorkloadResult,
                                   rows_for as _wl_rows)
 
 # ---------------------------------------------------------------------------
+
+
+def _effective_duty(shape) -> float:
+    """Duty cycle of a role's traffic shape, with the degenerate-value
+    guard every call site must share: absent shapes and 0/None duties
+    count as always-on.  Work balancing *divides* by this (a 0-duty
+    role would otherwise get an infinite iteration budget) and the
+    observer's ``n_active`` stamping multiplies by it — both sides of
+    the accounting must use the same number."""
+    if shape is None:
+        return 1.0
+    return getattr(shape, "duty_cycle", 1.0) or 1.0
 
 
 @dataclass(frozen=True)
@@ -140,10 +160,23 @@ class ValidationError(ValueError):
 
 
 class CoreCoordinator:
+    # compiled spmd programs kept per coordinator (LRU): fused ladder
+    # programs are expensive to trace, and back-to-back run_matrix
+    # calls must not re-trace/re-transfer what they just built.  Each
+    # entry also holds its placed operand arrays, so the bound is a
+    # MEMORY bound; the fused path needs one entry per ladder
+    # signature where the legacy per-rung path needs K — big sweeps
+    # can overflow the default on the legacy path (raise
+    # ``spmd_cache_cap`` to trade memory for re-compiles).
+    _SPMD_CACHE_CAP = 32
+
     def __init__(self, pool_mgr: Optional[PoolManager] = None,
                  platform: Optional[Platform] = None,
                  backend: str = "auto",
-                 spmd_activity: str = "auto"):
+                 spmd_activity: str = "auto",
+                 spmd_dispatch: str = "ladder",
+                 spmd_samples: int = 3,
+                 spmd_cache_cap: Optional[int] = None):
         self.platform = platform or detect_platform()
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
@@ -159,6 +192,25 @@ class CoreCoordinator:
         # ``execution["activity"]`` provenance.
         assert spmd_activity in ("auto", "pallas", "jnp"), spmd_activity
         self.spmd_activity = spmd_activity
+        # how the spmd backend dispatches a ladder: "ladder" fuses all
+        # K rungs into ONE dispatch (scanned psum sandwiches, per-rung
+        # in-dispatch device_clock timing); "rung" is the legacy
+        # one-dispatch-per-rung path (host wall-clock, median-of-3).
+        # "ladder" needs an in-dispatch timestamp source and falls
+        # back to "rung" honestly when compat.device_clock_source()
+        # reports none; the resolved choice lands in every curve's
+        # ``execution["timing_source"]`` ("device" vs "host").
+        assert spmd_dispatch in ("ladder", "rung"), spmd_dispatch
+        assert spmd_samples >= 1, spmd_samples
+        self.spmd_dispatch = spmd_dispatch
+        self.spmd_samples = spmd_samples
+        self.spmd_cache_cap = (spmd_cache_cap if spmd_cache_cap
+                               is not None else self._SPMD_CACHE_CAP)
+        assert self.spmd_cache_cap >= 1, self.spmd_cache_cap
+        # (program key) -> [mesh, fn, fenced, xf, xi]; mutable entries
+        # because donated dispatches rebind the operand arrays
+        from collections import OrderedDict
+        self._spmd_programs: "OrderedDict[Tuple, list]" = OrderedDict()
 
     def _resolved_activity(self) -> str:
         """The rung-activity implementation the spmd backend will use."""
@@ -166,6 +218,31 @@ class CoreCoordinator:
         if self.spmd_activity != "auto":
             return self.spmd_activity
         return "pallas" if compat.pallas_supported() else "jnp"
+
+    def _resolved_dispatch(self) -> str:
+        """The spmd dispatch mode that will actually run: the fused
+        ladder needs an in-dispatch timestamp source."""
+        from repro import compat
+        if self.spmd_dispatch == "rung":
+            return "rung"
+        return ("ladder" if compat.device_clock_source() != "none"
+                else "rung")
+
+    # -- spmd program cache (LRU, coordinator lifetime) -----------------
+    def _program_cache_get(self, key: Tuple,
+                           stats: Optional["DispatchStats"] = None):
+        entry = self._spmd_programs.get(key)
+        if entry is not None:
+            self._spmd_programs.move_to_end(key)
+            if stats is not None:
+                stats.program_cache_hits += 1
+        return entry
+
+    def _program_cache_put(self, key: Tuple, entry: list) -> None:
+        self._spmd_programs[key] = entry
+        self._spmd_programs.move_to_end(key)
+        while len(self._spmd_programs) > self.spmd_cache_cap:
+            self._spmd_programs.popitem(last=False)
 
     # -- Experiment Instantiator ----------------------------------------
     def validate(self, cfg: ExperimentConfig) -> None:
@@ -467,14 +544,15 @@ class CoreCoordinator:
         measured: Dict[int, WorkloadResult] = {}
         executed: Dict[Tuple[int, int], WorkloadResult] = {}
         fenced_by_triple: Dict[int, bool] = {}
+        timing_by_triple: Dict[int, Dict[str, Any]] = {}
         if self.backend in ("interpret", "tpu"):
             # the measured pass runs the real Pallas kernel library
             activity = "pallas"
             measured = self._measure_triples(triples, batched, stats)
         elif self.backend == "spmd":
             activity = self._resolved_activity()
-            executed, fenced_by_triple = self._execute_spmd(
-                triples, stats, activity)
+            executed, fenced_by_triple, timing_by_triple = \
+                self._execute_spmd(triples, stats, activity)
         else:
             activity = "none"       # nothing executes on this backend
 
@@ -516,6 +594,12 @@ class CoreCoordinator:
                 # the structurally VERIFIED fence state of this
                 # ladder's executed programs (jaxpr dataflow check)
                 execution["fenced"] = fenced_by_triple.get(i, False)
+                # how the executed rungs were timed: "device" (fused
+                # ladder, in-dispatch device_clock deltas) or "host"
+                # (legacy per-rung wall clock), plus the per-rung
+                # sample spreads and the host-synchronous dispatch
+                # count this ladder cost
+                execution.update(timing_by_triple.get(i, {}))
                 execution["operand_memory_kinds"] = sorted(
                     {self.pools.pool(p).effective_memory_kind()
                      or "default"
@@ -581,11 +665,15 @@ class CoreCoordinator:
 
     def _execute_spmd(
         self, triples, stats: "DispatchStats", activity: str = "jnp",
-    ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool]]:
-        """Execute every ladder rung of every (spec, observer, buffer)
-        triple as ONE fused SPMD dispatch over the engine mesh.
-        Returns the per-(triple, rung) observer results and the
-        verified fence state per triple."""
+    ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool],
+               Dict[int, Dict[str, Any]]]:
+        """Execute every (spec, observer, buffer) triple's contention
+        ladder on the engine mesh — the whole ladder as ONE fused
+        dispatch (``spmd_dispatch="ladder"``, the default) or one
+        dispatch per rung (``"rung"``, the legacy path).  Returns the
+        per-(triple, rung) observer results, the verified fence state
+        per triple, and per-triple timing provenance (source, sample
+        spreads, host-synchronous dispatch counts)."""
         n_eng = self._spmd_engines()
         if n_eng < 2:
             raise ValidationError(
@@ -594,75 +682,68 @@ class CoreCoordinator:
                 "(CPU container) or run on a real multi-device slice")
         executed: Dict[Tuple[int, int], WorkloadResult] = {}
         fenced_by_triple: Dict[int, bool] = {}
-        # program cache across rungs/triples with identical role
-        # signatures: one mesh+jit+fence-trace per distinct program,
-        # however many curves reuse it (dispatch accounting unchanged)
-        programs: Dict[Tuple, Tuple] = {}
+        timing_by_triple: Dict[int, Dict[str, Any]] = {}
+        dispatch = self._resolved_dispatch()
         for i, (spec, obs, buf) in enumerate(triples):
-            fenced = True
-            for k in range(self._ladder_depth(spec)):
-                executed[(i, k)], rung_fenced = self._run_spmd_rung(
-                    spec, obs, buf, k, n_eng, programs,
-                    activity=activity)
-                fenced = fenced and rung_fenced
-                stats.measure_dispatches += 1
-                stats.spmd_rungs += 1
+            if dispatch == "ladder":
+                results, fenced, timing = self._run_spmd_ladder(
+                    spec, obs, buf, n_eng, stats, activity)
+                for k, res in enumerate(results):
+                    executed[(i, k)] = res
+            else:
+                fenced, timing = True, {
+                    "timing_source": "host",
+                    "samples": self.spmd_samples,
+                    "rung_time_spread_ns": [], "dispatches": 0}
+                for k in range(self._ladder_depth(spec)):
+                    res, rung_fenced, spread = self._run_spmd_rung(
+                        spec, obs, buf, k, n_eng, stats,
+                        activity=activity)
+                    executed[(i, k)] = res
+                    fenced = fenced and rung_fenced
+                    timing["rung_time_spread_ns"].append(spread)
+                    # 1 warm + the timed samples
+                    timing["dispatches"] += 1 + self.spmd_samples
             fenced_by_triple[i] = fenced
-        return executed, fenced_by_triple
+            timing_by_triple[i] = timing
+        return executed, fenced_by_triple, timing_by_triple
 
-    def _run_spmd_rung(self, spec: ScenarioSpec, obs: ObserverSpec,
-                       buf: int, k: int, n_eng: int,
-                       programs: Optional[Dict[Tuple, Tuple]] = None,
-                       activity: str = "jnp",
-                       ) -> Tuple[WorkloadResult, bool]:
-        """One rung, one fused program: engine 0 runs the observer,
-        the next engines its coupled sibling observers (every observer
-        of a coupled multi-observer spec is live inside every sibling's
-        measured region), then k stressor engines (ensemble
-        round-robin), the rest idle — all branches of a single
-        ``shard_map`` dispatch whose measured region sits between the
-        two psum barriers of :func:`build_rung_program` (the spin-lock
-        sandwich, collective edition, dataflow-enforced; the returned
-        bool is the structurally *verified* fence state of this rung's
-        program).  ``activity`` selects what the branches execute: the
-        real Pallas kernels ("pallas") or pure-jnp traffic loops
-        ("jnp", the compat fallback).
+    def _rung_roles(self, spec: ScenarioSpec, obs: ObserverSpec,
+                    buf: int, k: int, n_eng: int,
+                    ) -> Tuple[List[Tuple], List[str]]:
+        """The per-engine role layout of rung k: engine 0 runs the
+        observer, the next engines its coupled sibling observers (every
+        observer of a coupled multi-observer spec is live inside every
+        sibling's measured region), then k stressor engines (ensemble
+        round-robin), the rest idle.  Returns ``(roles, role_pools)``
+        with one ``(strategy, shape, rows, iters)`` tuple per engine.
 
-        The wall time of the dispatch is the measured region: it closes
-        at the stop barrier, i.e. when the SLOWEST engine finishes
-        (paper invariant 3).  Sibling and stressor iteration budgets
-        are therefore work-balanced against the observer's (equal
-        line-touch totals) so role imbalance does not masquerade as
-        contention; residual per-kind speed differences (a chase row
-        costs more than a stream row) remain — per-engine device-side
-        timing is the ROADMAP item."""
-        import time as _time
-
-        from repro import compat
-        from repro.kernels import ops as kops
-
+        Sibling and stressor iteration budgets are work-balanced
+        against the passes the observer branch will actually execute
+        (its duty cycle included, via :func:`_effective_duty` on BOTH
+        sides of the division) so role imbalance does not masquerade
+        as contention; residual per-kind speed differences (a chase
+        row costs more than a stream row) remain and are what the
+        in-dispatch rung clocks measure."""
         iters = spec.iters
         obs_rows = _wl_rows(buf)
-        roles = [(obs.strategy, obs.shape, obs_rows, iters)]
+        roles: List[Tuple] = [(obs.strategy, obs.shape, obs_rows, iters)]
         role_pools = [obs.pool]
         m = len(spec.stressors)
-        # balance against the passes the observer branch will actually
-        # execute (its duty cycle included), and divide out each
-        # role's own duty — the branch fns apply duty internally
-        obs_duty = getattr(obs.shape, "duty_cycle", 1.0)
-        obs_work = obs_rows * max(1, round(iters * obs_duty))
+        obs_work = obs_rows * max(
+            1, round(iters * _effective_duty(obs.shape)))
         for sib in self._coupled_siblings(spec, obs)[:n_eng - 1]:
             sib_rows = _wl_rows(sib.buffers[0])
-            sib_duty = getattr(sib.shape, "duty_cycle", 1.0) or 1.0
-            sib_iters = max(1, round(obs_work / (sib_rows * sib_duty)))
+            sib_iters = max(1, round(
+                obs_work / (sib_rows * _effective_duty(sib.shape))))
             roles.append((sib.strategy, sib.shape, sib_rows, sib_iters))
             role_pools.append(sib.pool)
         for e in range(min(k, n_eng - len(roles))):
             if m:
                 s = spec.stressors[e % m]
                 s_rows = _wl_rows(s.buffer_bytes)
-                s_duty = getattr(s.shape, "duty_cycle", 1.0) or 1.0
-                s_iters = max(1, round(obs_work / (s_rows * s_duty)))
+                s_iters = max(1, round(
+                    obs_work / (s_rows * _effective_duty(s.shape))))
                 roles.append((s.strategy, s.shape, s_rows, s_iters))
                 role_pools.append(s.pool)
             else:
@@ -671,55 +752,185 @@ class CoreCoordinator:
         while len(roles) < n_eng:
             roles.append(("i", None, 1, iters))
             role_pools.append(obs.pool)
+        return roles, role_pools
 
-        rows_max = max(r[2] for r in roles)
-        # per-pool operand placement: when every engine's pool lands in
-        # one effective memory kind, the stacked operands carry that
-        # kind's sharding into the fused dispatch; mixed-pool rungs
-        # fall back to the default memory (one stacked array has one
-        # memory kind — per-engine kinds need a real multi-chip slice
-        # and per-pool operand splitting, the remaining ROADMAP item).
-        # The kind joins the cache key: identical role programs from
-        # differently-placed pools must not share operands.
+    def _operand_kind(self, role_pools) -> Optional[str]:
+        """Per-pool operand placement: when every engine's pool lands
+        in one effective memory kind, the stacked operands carry that
+        kind's sharding into the fused dispatch; mixed-pool programs
+        fall back to the default memory (one stacked array has one
+        memory kind — per-engine kinds need a real multi-chip slice
+        and per-pool operand splitting, the remaining ROADMAP item)."""
         kinds = {self.pools.pool(p).effective_memory_kind()
                  for p in role_pools}
-        kind = kinds.pop() if len(kinds) == 1 else None
-        program_key = (n_eng, activity, kind, tuple(roles))
-        cached = programs.get(program_key) if programs is not None \
-            else None
+        return kinds.pop() if len(kinds) == 1 else None
 
-        if cached is not None:
+    def _observer_result(self, obs: ObserverSpec, buf: int, iters: int,
+                         elapsed: float) -> WorkloadResult:
+        """Stamp one executed rung's observer measurement.  Uses the
+        RESOLVED strategy letter, like the interpret-path group
+        measurement does: the executed branch for a mixed 'r' observer
+        is the 'b' loop, and provenance must say so."""
+        obs_rows = _wl_rows(buf)
+        strat = resolve_strategy(obs.strategy, obs.shape)
+        n_active = max(1, int(round(iters * _effective_duty(obs.shape))))
+        if strat in _SPMD_CHASES:
+            # elapsed spans n_active full traversals: bytes and
+            # transactions both scale with it (latency = elapsed/tx)
+            return WorkloadResult(strat, obs.pool, buf, iters,
+                                  obs_rows * LINE_BYTES * n_active,
+                                  elapsed,
+                                  transactions=obs_rows * n_active)
+        mult = 2 if strat in _SPMD_STREAM_2X else 1
+        return WorkloadResult(strat, obs.pool, buf, iters,
+                              mult * obs_rows * LINE_BYTES * n_active,
+                              elapsed, 0)
+
+    def _run_spmd_ladder(self, spec: ScenarioSpec, obs: ObserverSpec,
+                         buf: int, n_eng: int, stats: "DispatchStats",
+                         activity: str = "jnp",
+                         ) -> Tuple[List[WorkloadResult], bool,
+                                    Dict[str, Any]]:
+        """The ENTIRE ladder (rungs k=0..K-1) as ONE fused dispatch.
+
+        :func:`build_ladder_program` scans over the K per-rung role
+        tables inside a single ``shard_map``; every scan step keeps its
+        own psum sandwich, and per-rung elapsed time is captured
+        IN-dispatch by ``compat.device_clock`` deltas — ``spmd_samples``
+        sandwiched repetitions per rung, median taken on the host.
+        Versus the legacy per-rung path this turns 4·K host-synchronous
+        round-trips per ladder into one, and removes Python dispatch
+        jitter from the measured region entirely (the fidelity gap the
+        kernel-level framework exists to close).
+
+        The compiled program and its placed (donated, where the backend
+        supports donation) operands live in the coordinator-level LRU
+        cache, so repeated ``run_matrix`` calls re-dispatch without
+        re-tracing or re-transferring."""
+        from repro import compat
+
+        n_scen = self._ladder_depth(spec)
+        samples = self.spmd_samples
+        per_rung = [self._rung_roles(spec, obs, buf, k, n_eng)
+                    for k in range(n_scen)]
+        # ONE operand set serves every scanned rung: placement must
+        # agree across the whole ladder, not per rung
+        kind = self._operand_kind(
+            [p for _r, pools in per_rung for p in pools])
+        key = ("ladder", n_eng, activity, kind, samples,
+               tuple(tuple(r) for r, _p in per_rung))
+        entry = self._program_cache_get(key, stats)
+        if entry is None:
+            # the DEEPEST rung holds every engine's non-idle role
+            # (shallower rungs only flip engines back to idle), so its
+            # layout decides operand shapes and chase chains
+            deep_roles = per_rung[-1][0]
+            rows_max = max(r[2] for r in deep_roles)
+            xf, xi = _build_rung_operands(deep_roles, n_eng, rows_max)
+            branch_fns: List = []
+            branch_of: Dict[Tuple, int] = {}
+            table = np.zeros((n_scen, n_eng), np.int32)
+            for k, (roles, _pools) in enumerate(per_rung):
+                for e, sig in enumerate(roles):
+                    if sig not in branch_of:
+                        branch_of[sig] = len(branch_fns)
+                        branch_fns.append(_spmd_branch_fn(
+                            *sig, activity=activity))
+                    table[k, e] = branch_of[sig]
+            mesh, fn = build_ladder_program(
+                n_eng, branch_fns, table, samples=samples,
+                donate=compat.donation_supported())
+            # provenance records the VERIFIED fence state of every
+            # scanned rung, not an assertion (compat degradation is
+            # honestly reported as unfenced)
+            fenced = measured_region_is_fenced(fn, xf, xi)
+            from jax.sharding import PartitionSpec as P
+            sharding = compat.named_sharding(mesh, P("engine"), kind)
+            xf = jax.device_put(xf, sharding)
+            xi = jax.device_put(xi, sharding)
+            jax.block_until_ready((xf, xi))
+            entry = [mesh, fn, fenced, xf, xi]
+            self._program_cache_put(key, entry)
+        _mesh, fn, fenced, xf, xi = entry
+        # ONE host-synchronous dispatch measures the whole ladder (no
+        # warm-up run: compilation happens before execution, and the
+        # per-rung median over `samples` in-dispatch repetitions
+        # absorbs first-touch effects)
+        out = jax.block_until_ready(fn(xf, xi))
+        stats.host_sync_dispatches += 1
+        stats.measure_dispatches += 1
+        stats.spmd_rungs += n_scen
+        # donated dispatch consumed the cached operands; rebind the
+        # returned (aliased in place where donation is real) arrays
+        entry[3], entry[4] = out[3], out[4]
+
+        # engine 0 is the observer: its [s, ns] stamp pairs bracket
+        # each scanned sandwich, stop stamp taken after the stop psum
+        # (i.e. when the SLOWEST engine finished — paper invariant 3)
+        t0 = np.asarray(out[1][0]).reshape(n_scen, samples, 2)
+        t1 = np.asarray(out[2][0]).reshape(n_scen, samples, 2)
+        d = ((t1[..., 0].astype(np.int64) - t0[..., 0]) * 1_000_000_000
+             + (t1[..., 1] - t0[..., 1]))
+        med = np.median(d, axis=1)
+        results = [self._observer_result(obs, buf, spec.iters,
+                                         float(max(med[k], 1.0)))
+                   for k in range(n_scen)]
+        timing = {
+            "timing_source": "device",
+            "samples": samples,
+            "rung_time_spread_ns": [int(s) for s in
+                                    d.max(axis=1) - d.min(axis=1)],
+            "dispatches": 1,
+        }
+        return results, fenced, timing
+
+    def _run_spmd_rung(self, spec: ScenarioSpec, obs: ObserverSpec,
+                       buf: int, k: int, n_eng: int,
+                       stats: "DispatchStats",
+                       activity: str = "jnp",
+                       ) -> Tuple[WorkloadResult, bool, int]:
+        """The legacy per-rung path: one rung, one fused program —
+        all branches of a single ``shard_map`` dispatch whose measured
+        region sits between the two psum barriers of
+        :func:`build_rung_program` (the returned bool is the
+        structurally *verified* fence state of this rung's program,
+        the final int the spread of the host wall-time samples).
+
+        The wall time of the dispatch is the measured region: host
+        ``perf_counter_ns`` around ``block_until_ready``, median of
+        ``spmd_samples`` — which costs 1 + ``spmd_samples`` host
+        round-trips per rung (4 at the default) and includes Python
+        dispatch jitter.  The fused ladder path
+        (:meth:`_run_spmd_ladder`) replaces both; this path is kept
+        for comparison (``benchmarks/perf_harness.py``) and as the
+        fallback where no in-dispatch timestamp source exists."""
+        import time as _time
+
+        from repro import compat
+
+        roles, role_pools = self._rung_roles(spec, obs, buf, k, n_eng)
+        rows_max = max(r[2] for r in roles)
+        # the kind joins the cache key: identical role programs from
+        # differently-placed pools must not share operands
+        kind = self._operand_kind(role_pools)
+        program_key = ("rung", n_eng, activity, kind, tuple(roles))
+        entry = self._program_cache_get(program_key, stats)
+
+        if entry is not None:
             # operands are fully determined by the cache key (chain
             # seeds are engine indices): reuse the placed arrays too —
             # no host-side rebuild, no repeated host->device transfer
-            mesh, fn, fenced, xf, xi = cached
+            _mesh, fn, fenced, xf, xi = entry
         else:
-            # per-engine operands: a float stream buffer and an int
-            # chase chain, padded to the widest role
-            xf = np.broadcast_to(
-                np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
-                .reshape(rows_max, LINE_BYTES // 4),
-                (n_eng, rows_max, LINE_BYTES // 4)).copy()
-            xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
-            for e, (strategy, shape, rows, _ri) in enumerate(roles):
-                if resolve_strategy(strategy, shape) in _SPMD_CHASES:
-                    if resolve_strategy(strategy, shape) == "t":
-                        chain = kops.strided_chain_buffer(
-                            rows, getattr(shape, "stride", 8) or 8)
-                    else:
-                        chain = kops.chain_buffer(rows, seed=e)
-                    xi[e, :rows, :chain.shape[1]] = chain
-
+            xf, xi = _build_rung_operands(roles, n_eng, rows_max)
             branch_fns: List = []
             engine_branch: List[int] = []
             branch_of: Dict[Tuple, int] = {}
-            for strategy, shape, rows, role_iters in roles:
-                sig = (strategy, shape, rows, role_iters)
+            for sig in roles:
                 if sig not in branch_of:
                     branch_of[sig] = len(branch_fns)
                     branch_fns.append(_spmd_branch_fn(
-                        strategy, shape, rows, role_iters,
-                        activity=activity))
+                        *sig, activity=activity))
                 engine_branch.append(branch_of[sig])
             mesh, fn = build_rung_program(n_eng, branch_fns,
                                           engine_branch)
@@ -738,35 +949,20 @@ class CoreCoordinator:
             xf = jax.device_put(xf, sharding)
             xi = jax.device_put(xi, sharding)
             jax.block_until_ready((xf, xi))
-            if programs is not None:
-                programs[program_key] = (mesh, fn, fenced, xf, xi)
+            self._program_cache_put(program_key,
+                                    [mesh, fn, fenced, xf, xi])
         jax.block_until_ready(fn(xf, xi))          # compile + warm
         samples = []
-        for _ in range(3):
+        for _ in range(self.spmd_samples):
             t0 = _time.perf_counter_ns()
             jax.block_until_ready(fn(xf, xi))
             samples.append(_time.perf_counter_ns() - t0)
+        stats.host_sync_dispatches += 1 + self.spmd_samples
+        stats.measure_dispatches += 1
+        stats.spmd_rungs += 1
         elapsed = float(np.median(samples))
-
-        strat = resolve_strategy(obs.strategy, obs.shape)
-        duty = getattr(obs.shape, "duty_cycle", 1.0)
-        n_active = max(1, int(round(iters * duty)))
-        # stamp the RESOLVED strategy letter, like the interpret-path
-        # group measurement does: the executed branch for a mixed 'r'
-        # observer is the 'b' loop, and provenance must say so
-        if strat in _SPMD_CHASES:
-            # elapsed spans n_active full traversals: bytes and
-            # transactions both scale with it (latency = elapsed/tx)
-            res = WorkloadResult(strat, obs.pool, buf, iters,
-                                 obs_rows * LINE_BYTES * n_active,
-                                 elapsed,
-                                 transactions=obs_rows * n_active)
-        else:
-            mult = 2 if strat in _SPMD_STREAM_2X else 1
-            res = WorkloadResult(strat, obs.pool, buf, iters,
-                                 mult * obs_rows * LINE_BYTES * n_active,
-                                 elapsed, 0)
-        return res, fenced
+        res = self._observer_result(obs, buf, spec.iters, elapsed)
+        return res, fenced, int(max(samples) - min(samples))
 
 
 # ---------------------------------------------------------------------------
@@ -807,9 +1003,17 @@ class DispatchStats:
     checked against these numbers in the tests."""
     n_scenarios: int = 0            # ScenarioSpecs in the matrix
     n_ladders: int = 0              # (spec, observer, buffer) ladders
-    measure_dispatches: int = 0     # timed executable kernel passes
+    measure_dispatches: int = 0     # timed executable measurement passes
     model_evals: int = 0            # queueing-network solves
-    spmd_rungs: int = 0             # fused SPMD rung dispatches
+    spmd_rungs: int = 0             # ladder rungs executed on the mesh
+    # host-blocking spmd program executions: the fused ladder path does
+    # ONE per ladder (vs 4 per RUNG — warm + 3 timed — on the legacy
+    # path); benchmarks/perf_harness.py holds the fused path to it
+    host_sync_dispatches: int = 0
+    # compiled spmd programs (+ placed operands) reused from the
+    # coordinator-level LRU cache — across rungs, ladders, AND
+    # back-to-back run_matrix calls on one coordinator
+    program_cache_hits: int = 0
 
 
 @dataclass
@@ -827,6 +1031,30 @@ class MatrixResult:
 
 _SPMD_CHASES = ("l", "m", "t")      # latency walks: dependent gathers
 _SPMD_STREAM_2X = ("c", "x")        # copy/rmw touch two lines per line
+
+
+def _build_rung_operands(roles, n_eng: int,
+                         rows_max: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-engine operands for one SPMD program: a float stream buffer
+    and an int chase chain (seeded by engine index), padded to the
+    widest role.  Operands are fully determined by the role layout, so
+    cached programs can reuse their placed arrays verbatim."""
+    from repro.kernels import ops as kops
+
+    xf = np.broadcast_to(
+        np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
+        .reshape(rows_max, LINE_BYTES // 4),
+        (n_eng, rows_max, LINE_BYTES // 4)).copy()
+    xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
+    for e, (strategy, shape, rows, _ri) in enumerate(roles):
+        if resolve_strategy(strategy, shape) in _SPMD_CHASES:
+            if resolve_strategy(strategy, shape) == "t":
+                chain = kops.strided_chain_buffer(
+                    rows, getattr(shape, "stride", 8) or 8)
+            else:
+                chain = kops.chain_buffer(rows, seed=e)
+            xi[e, :rows, :chain.shape[1]] = chain
+    return xf, xi
 
 
 def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
@@ -848,8 +1076,7 @@ def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
     from repro import compat
 
     strat = resolve_strategy(strategy, shape)
-    duty = getattr(shape, "duty_cycle", 1.0) if shape is not None else 1.0
-    n = max(1, int(round(iters * duty)))
+    n = max(1, int(round(iters * _effective_duty(shape))))
 
     if activity == "pallas" and strategy != "i":
         return _pallas_branch_fn(strat, shape, rows, n)
@@ -1076,6 +1303,105 @@ def build_rung_program(n_engines: int, branch_fns, engine_branch):
     return mesh, jax.jit(f)
 
 
+def build_ladder_program(n_engines: int, branch_fns, branch_table,
+                         samples: int = 3, donate: bool = False):
+    """The WHOLE contention ladder as one fused SPMD dispatch.
+
+    ``branch_table`` is a (K, n_engines) int table: scan step for rung
+    ``k`` runs ``branch_fns[branch_table[k][e]]`` on engine ``e``'s
+    shard.  Each rung is repeated ``samples`` times, and EVERY repeat
+    is its own psum sandwich — the scanned edition of
+    :func:`build_rung_program`'s spin-lock-sandwich invariants:
+
+      start — every sample's token psum is derived from live operand
+          data AND the loop carry (a loop-invariant psum would be
+          hoisted out of the scan), and the operands are re-issued with
+          an exact-zero contribution from the start timestamp, so no
+          engine's measured work can begin before the barrier completed
+          and the stamp's buffer was actually filled;
+      stop — the activity outputs are all-reduced (psum #2) and the
+          carry value-consumes the stop timestamp, so sample s+1's
+          start barrier cannot open until sample s fully retired —
+          invariant 4, enforced in-dispatch by dataflow instead of a
+          host round-trip per rung.
+
+    Per-rung elapsed time comes from ``compat.device_clock`` stamp
+    pairs taken inside the dispatch (engine 0's stop stamp follows the
+    stop psum, i.e. the SLOWEST engine's finish), returned as
+    ``(n_eng, K*samples, 2)`` int32 ``[s, ns]`` arrays alongside the
+    per-engine activity outputs.  Host-side cost of a whole ladder: ONE
+    synchronous dispatch, versus 4·K for the per-rung path.
+
+    Returns ``(mesh, fn)`` with ``fn(xf, xi) ->
+    (outs, t0s, t1s, xf, xi)``; the operands are passed through (and
+    donated when ``donate=True``) so callers can cache and rebind them
+    without any host->device re-transfer.
+    :func:`measured_region_is_fenced` verifies the sandwich of every
+    scanned step structurally (the scan body carries the psum fence)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    devs = jax.devices()[:n_engines]
+    mesh = compat.make_mesh_from_devices(devs, ("engine",))
+    table = np.repeat(np.asarray(branch_table, np.int32),
+                      int(samples), axis=0)
+    table_j = jnp.asarray(table)
+
+    def per_engine(xf, xi):
+        xf, xi = xf[0], xi[0]
+        eng = jax.lax.axis_index("engine")
+
+        def clock(dep):
+            # only the OBSERVER engine pays the stamp cost (on the
+            # callback fallback each stamp is a host round-trip; 2
+            # per engine per sample would dominate small rungs); the
+            # other engines still serialize on it through the carry
+            # -> token psum collective below
+            return jax.lax.cond(eng == 0, compat.device_clock,
+                                lambda _d: jnp.zeros((2,), jnp.int32),
+                                dep)
+
+        def step(carry, row):
+            # barrier #1: data-derived, carry-dependent, all-reduced
+            token = jax.lax.psum(
+                xf[0, 0] + xi[0, 0].astype(xf.dtype) + carry * 1e-30,
+                "engine")
+            t0 = clock(token)
+            # thread the start stamp into every operand as an EXACT
+            # zero: min(t, 0) == 0 at runtime (monotonic clock parts
+            # are non-negative) but XLA cannot fold it away — the
+            # activity cannot start until the stamp exists.  A
+            # scheduling-only edge is not enough: the callback
+            # fallback fills its result buffer asynchronously.
+            z = jnp.minimum(t0[0] + t0[1], 0)
+            xf_, xi_, _tok = compat.optimization_barrier(
+                (xf + z.astype(xf.dtype), xi + z, token))
+            out = jax.lax.switch(row[eng], branch_fns, xf_, xi_)
+            # barrier #2: consumes every engine's finished activity
+            done = jax.lax.psum(out, "engine")
+            t1 = clock(done)
+            # the carry value-consumes the stop stamp: the next
+            # sample's start barrier waits for this one to retire
+            carry = (done * 1e-30
+                     + jnp.minimum(t1[0] + t1[1], 0).astype(xf.dtype))
+            return carry, (out, t0, t1)
+
+        _c, (outs, t0s, t1s) = jax.lax.scan(step, jnp.float32(0.0),
+                                            table_j)
+        return outs[None], t0s[None], t1s[None], xf[None], xi[None]
+
+    f = compat.shard_map(per_engine, mesh=mesh,
+                         in_specs=(P("engine"), P("engine")),
+                         out_specs=(P("engine", None),
+                                    P("engine", None, None),
+                                    P("engine", None, None),
+                                    P("engine"), P("engine")),
+                         check_rep=False)
+    kw = {"donate_argnums": (0, 1)} if donate else {}
+    return mesh, jax.jit(f, **kw)
+
+
 def build_scenario_program(n_engines: int, n_stressors: int,
                            main_fn, stress_fn, idle_fn):
     """Returns f(main_x, stress_x) -> (main_out, barrier) running under
@@ -1158,7 +1484,15 @@ def measured_region_is_fenced(fn, *example_args) -> bool:
     "depends" on the fence.  A program whose barrier is advisory only
     — the pre-fix ``build_scenario_program``, where ``out`` had no
     data dependency on ``ready`` — returns False: XLA was free to
-    begin the measured activity before the stressors were running."""
+    begin the measured activity before the stressors were running.
+
+    Fused whole-ladder programs (:func:`build_ladder_program`) carry
+    their psum sandwiches INSIDE a ``lax.scan``: there the check
+    recurses into every psum-bearing scan/while body and requires the
+    step itself to pass — the step's first output is the loop carry,
+    which by construction value-consumes the stop barrier and stamp,
+    so verifying the body verifies EVERY scanned rung sample (one body
+    serves all steps structurally)."""
     closed = jax.make_jaxpr(fn)(*example_args)
     bodies = _shard_map_bodies(closed.jaxpr)
     if not bodies:
@@ -1185,6 +1519,16 @@ def _shard_map_bodies(jaxpr) -> List[Any]:
     return out
 
 
+def _jaxpr_has_psum(jaxpr) -> bool:
+    for eqn in jaxpr.eqns:
+        if "psum" in eqn.primitive.name:
+            return True
+        for inner in _sub_jaxprs(eqn.params):
+            if _jaxpr_has_psum(inner):
+                return True
+    return False
+
+
 def _first_out_depends_on_psum(body) -> bool:
     live: set = set()
     seen_psum = False
@@ -1195,6 +1539,22 @@ def _first_out_depends_on_psum(body) -> bool:
             seen_psum = True
             live.update(eqn.outvars)
             continue
+        if not seen_psum and eqn.primitive.name in ("scan", "while"):
+            inners = [j for j in _sub_jaxprs(eqn.params)
+                      if _jaxpr_has_psum(j)]
+            if inners:
+                # a scanned/looped sandwich (the fused whole-ladder
+                # program): every step must pass the same check — its
+                # first output is the loop carry, which must consume
+                # the step's own stop barrier, and every kernel inside
+                # the step must consume fence-dependent operands.  One
+                # body serves all steps, so this verifies every rung.
+                if all(_first_out_depends_on_psum(j) for j in inners):
+                    seen_psum = True
+                    live.update(eqn.outvars)
+                else:
+                    kernels_ok = False
+                continue
         if seen_psum:
             kernels_ok = kernels_ok and _kernels_fenced_in_eqn(eqn, live)
             if any(v in live for v in invars):

@@ -391,6 +391,131 @@ def test_mixed_stream_write_half_needs_the_seed():
     assert not measured_region_is_fenced(f_bare, xf, xi)
 
 
+# ---------------------------------------------------------------------------
+# Fused whole-ladder dispatch (ISSUE 4): accounting, equivalence, cache
+# ---------------------------------------------------------------------------
+
+
+def test_fused_dispatch_accounting():
+    """DispatchStats under fusion: the fused path blocks the host ONCE
+    per (triple, ladder) — versus 4 per RUNG on the legacy path — and
+    the execution provenance records the timing source, the per-rung
+    sample spreads, and the per-ladder dispatch count."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+    K = 2
+    spec = ScenarioSpec(
+        "acct", (ObserverSpec("r", "hbm", (BUF,)),
+                 ObserverSpec("w", "hbm", (BUF,))),
+        (StressorSpec("w", "hbm", BUF),), iters=3, max_stressors=K)
+    n_dev = len(jax.devices())
+    depth = max(1, min(K + 1, n_dev - 1))     # 1 engine per sibling
+
+    fused = CoreCoordinator(backend="spmd").run_matrix([spec])
+    st = fused.stats
+    assert st.n_ladders == 2
+    assert st.spmd_rungs == 2 * depth
+    assert st.measure_dispatches == st.n_ladders          # 1 per ladder
+    assert st.host_sync_dispatches == st.n_ladders
+    for run in fused.runs:
+        ex = run.execution
+        assert ex["timing_source"] == "device"
+        assert ex["dispatches"] == 1
+        assert ex["samples"] == 3
+        assert len(ex["rung_time_spread_ns"]) == depth
+        assert all(s >= 0 for s in ex["rung_time_spread_ns"])
+
+    legacy = CoreCoordinator(backend="spmd",
+                             spmd_dispatch="rung").run_matrix([spec])
+    st = legacy.stats
+    assert st.spmd_rungs == 2 * depth
+    assert st.measure_dispatches == 2 * depth             # K per ladder
+    assert st.host_sync_dispatches == 4 * 2 * depth       # warm + 3 timed
+    for run in legacy.runs:
+        ex = run.execution
+        assert ex["timing_source"] == "host"
+        assert ex["dispatches"] == 4 * depth
+        assert len(ex["rung_time_spread_ns"]) == depth
+    print("accounting OK on", n_dev, "devices")
+    """)
+
+
+def test_fused_vs_per_rung_curve_equivalence():
+    """The fused whole-ladder dispatch must produce the SAME curves as
+    the legacy per-rung path: identical keys, every rung executed and
+    fenced on both, and the measured timings within a (generous — this
+    is shared-CPU wall time on tiny budgets) agreement band."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 128 << 10
+    K = 3
+    spec = ScenarioSpec(
+        "equiv", ObserverSpec("r", "hbm", (BUF,)),
+        (StressorSpec("w", "hbm", BUF),), iters=20, max_stressors=K)
+    n_dev = len(jax.devices())
+    depth = max(1, min(K + 1, n_dev))
+
+    fused = CoreCoordinator(backend="spmd").run_matrix([spec])
+    legacy = CoreCoordinator(backend="spmd",
+                             spmd_dispatch="rung").run_matrix([spec])
+    assert [r.key for r in fused.runs] == [r.key for r in legacy.runs]
+    rf, rl = fused.runs[0], legacy.runs[0]
+    assert rf.execution["fenced"] and rl.execution["fenced"]
+    assert rf.execution["executed_rungs"] == list(range(depth))
+    assert rl.execution["executed_rungs"] == list(range(depth))
+    for sf, sl in zip(rf.scenarios, rl.scenarios):
+        assert sf.source == sl.source == "executed"
+        assert sf.main.strategy == sl.main.strategy
+        assert sf.main.bytes_moved == sl.main.bytes_moved
+        assert sf.main.elapsed_ns > 0 and sl.main.elapsed_ns > 0
+        ratio = sf.main.elapsed_ns / sl.main.elapsed_ns
+        assert 1 / 50 < ratio < 50, (sf.n_stressors, ratio)
+    print("equivalence OK on", n_dev, "devices")
+    """)
+
+
+def test_program_cache_reuse_across_run_matrix():
+    """The spmd program cache lives on the COORDINATOR: a second
+    run_matrix call reuses every compiled program (and its placed,
+    donated operand buffers) instead of re-tracing, and the
+    DispatchStats counter proves it."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+    spec = ScenarioSpec(
+        "cache", ObserverSpec("r", "hbm", (BUF,)),
+        (StressorSpec("w", "hbm", BUF),), iters=3, max_stressors=2)
+
+    depth = max(1, min(3, len(jax.devices())))
+    for mode, n_programs in (("ladder", 1), ("rung", depth)):
+        c = CoreCoordinator(backend="spmd", spmd_dispatch=mode)
+        first = c.run_matrix([spec])
+        assert first.stats.program_cache_hits == 0
+        again = c.run_matrix([spec])
+        # every program the second run needs is already cached: ONE
+        # whole-ladder program, or one per rung on the legacy path
+        assert again.stats.program_cache_hits == n_programs
+        for run in again.runs:
+            assert run.execution["fenced"]
+            for s in run.scenarios:
+                assert s.main.elapsed_ns > 0
+    print("cache reuse OK")
+    """)
+
+
 def test_spmd_ladder_refuses_pinned_single_device():
     """Regression: with XLA_FLAGS already pinning the host device count
     below 2, benchmarks.spmd_ladder used to re-exec itself with the

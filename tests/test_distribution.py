@@ -197,11 +197,13 @@ def test_dryrun_cell_on_8_devices():
 
 
 def test_spmd_backend_executes_fenced_ladder_on_8_devices():
-    """ISSUE-2 acceptance: on an 8-virtual-device CPU mesh the spmd
-    backend executes a k=0..3 ladder as one fused SPMD dispatch per
-    rung (DispatchStats proves it), the barrier dependency holds
-    structurally, and a multi-observer spec measuring two pools yields
-    per-observer CurveDB curves whose every point was executed."""
+    """ISSUE-2/4 acceptance: on an 8-virtual-device CPU mesh the spmd
+    backend executes a k=0..3 ladder as ONE fused whole-ladder dispatch
+    (DispatchStats proves it: one host-synchronous dispatch per ladder,
+    per-rung elapsed from in-dispatch device clocks), the barrier
+    dependency holds structurally on every scanned rung, and a
+    multi-observer spec measuring two pools yields per-observer CurveDB
+    curves whose every point was executed."""
     run_forced("""
     import jax
     from repro.core.characterize import characterize_matrix
@@ -224,16 +226,20 @@ def test_spmd_backend_executes_fenced_ladder_on_8_devices():
 
     c = CoreCoordinator(backend="spmd")
     res = c.run_matrix([spec])
-    # 2 observers x 4 rungs (k=0..3), ONE fused dispatch per rung
+    # 2 observers x 4 rungs (k=0..3), ONE fused dispatch per LADDER
     assert res.stats.n_scenarios == 1
     assert res.stats.n_ladders == 2
     assert res.stats.spmd_rungs == 8
-    assert res.stats.measure_dispatches == 8
+    assert res.stats.measure_dispatches == 2
+    assert res.stats.host_sync_dispatches == 2
     for run in res.runs:
         assert run.execution["backend"] == "spmd"
         assert run.execution["executed_rungs"] == [0, 1, 2, 3]
         assert run.execution["modeled_rungs"] == []
         assert run.execution["n_engines"] == 8
+        assert run.execution["timing_source"] == "device"
+        assert run.execution["dispatches"] == 1
+        assert len(run.execution["rung_time_spread_ns"]) == 4
         for s in run.scenarios:
             assert s.source == "executed"
             assert s.main.elapsed_ns > 0

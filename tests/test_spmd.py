@@ -17,7 +17,9 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.coordinator import (_spmd_branch_fn, build_rung_program,
+from repro.core.coordinator import (_effective_duty, _spmd_branch_fn,
+                                    build_ladder_program,
+                                    build_rung_program,
                                     build_scenario_program,
                                     measured_region_is_fenced)
 
@@ -96,6 +98,103 @@ def test_scenario_program_executes():
 # ---------------------------------------------------------------------------
 # Every spmd branch traces and runs (single engine, every strategy kind)
 # ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# The fused whole-ladder program: scanned sandwiches + in-dispatch clocks
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_program_measured_region_is_fenced():
+    """Every scanned rung of the fused ladder carries its own verified
+    psum sandwich — the checker recurses into the scan body and
+    requires the step carry to consume the stop barrier."""
+    fns = [_spmd_branch_fn("r", None, ROWS, 2),
+           _spmd_branch_fn("w", None, ROWS, 2)]
+    _mesh, f = build_ladder_program(1, fns, [[0], [1]], samples=2)
+    assert measured_region_is_fenced(f, *_operands(1))
+
+
+def test_ladder_program_executes_with_monotone_clock():
+    """The fused ladder runs end to end and its in-dispatch stamp pairs
+    bracket every sample: stop strictly after start (the value-threaded
+    device_clock fills must serialize), and consecutive samples must
+    not overlap."""
+    if compat.device_clock_source() == "none":
+        pytest.skip("no in-dispatch timestamp source on this install")
+    fns = [_spmd_branch_fn("r", None, ROWS, 4),
+           _spmd_branch_fn("w", None, ROWS, 4)]
+    K, S = 3, 2
+    _mesh, f = build_ladder_program(1, fns, [[0], [1], [0]], samples=S)
+    xf, xi = _operands(1)
+    outs, t0s, t1s, xf2, xi2 = f(xf, xi)
+    assert np.isfinite(np.asarray(outs)).all()
+    # operands pass through unchanged (the cache rebinds them)
+    np.testing.assert_array_equal(np.asarray(xf2), xf)
+    np.testing.assert_array_equal(np.asarray(xi2), xi)
+    t0 = np.asarray(t0s[0]).astype(np.int64)
+    t1 = np.asarray(t1s[0]).astype(np.int64)
+    start = t0[:, 0] * 10**9 + t0[:, 1]
+    stop = t1[:, 0] * 10**9 + t1[:, 1]
+    assert t0.shape == (K * S, 2)
+    assert (stop > start).all()                 # every sample bracketed
+    assert (start[1:] >= stop[:-1]).all()       # samples serialized
+
+
+def test_ladder_checker_rejects_unfenced_scan():
+    """A scanned ladder whose steps carry no psum sandwich (or only an
+    advisory one nothing depends on) must NOT verify."""
+    from repro.core.coordinator import _shard_map_bodies
+
+    mesh = compat.make_mesh_from_devices(jax.devices()[:1], ("engine",))
+
+    def no_fence(xf, xi):
+        xf, xi = xf[0], xi[0]
+
+        def step(carry, _):
+            out = jnp.sum(xf) + carry
+            return carry + 1.0, out
+
+        _c, outs = jax.lax.scan(step, jnp.float32(0.0), jnp.arange(3))
+        return outs[None]
+
+    f = compat.shard_map(no_fence, mesh=mesh,
+                         in_specs=(P("engine"), P("engine")),
+                         out_specs=P("engine", None))
+    assert not measured_region_is_fenced(f, *_operands(1))
+
+    def advisory(xf, xi):
+        xf, xi = xf[0], xi[0]
+
+        def step(carry, _):
+            ready = jax.lax.psum(xf[0, 0], "engine")   # nothing uses it
+            out = jnp.sum(xf) + carry
+            return carry + 1.0, (out, ready)
+
+        _c, (outs, _r) = jax.lax.scan(step, jnp.float32(0.0),
+                                      jnp.arange(3))
+        return outs[None]
+
+    f2 = compat.shard_map(advisory, mesh=mesh,
+                          in_specs=(P("engine"), P("engine")),
+                          out_specs=P("engine", None))
+    assert not measured_region_is_fenced(f2, *_operands(1))
+
+
+def test_effective_duty_guard_unified():
+    """All three work-balancing call sites and the n_active stamping
+    share one duty helper: absent shapes and degenerate 0/None duties
+    count as always-on, real duty cycles pass through."""
+    from repro.core.scenarios import TrafficShape
+
+    assert _effective_duty(None) == 1.0
+    assert _effective_duty(TrafficShape.steady()) == 1.0
+    assert _effective_duty(TrafficShape.burst(0.5)) == 0.5
+
+    class DuckShape:        # a deserialized/foreign shape with 0 duty
+        duty_cycle = 0.0
+
+    assert _effective_duty(DuckShape()) == 1.0
 
 
 @pytest.mark.parametrize("strategy", ["r", "w", "c", "b", "l", "t", "i"])
