@@ -1,25 +1,38 @@
-"""Perf harness: fused whole-ladder dispatch vs legacy per-rung spmd.
+"""Perf harness: sweep-batched vs fused-per-ladder vs per-rung spmd.
 
-Times ``CoreCoordinator(backend="spmd")`` in both dispatch modes —
-``spmd_dispatch="ladder"`` (ONE fused dispatch per ladder, scanned psum
-sandwiches, in-dispatch ``compat.device_clock`` rung timing) against
-``"rung"`` (the legacy 4-host-round-trips-per-rung path) — over a
-64-scenario sweep (8 with ``--smoke``) on 2- and 8-device meshes, and
-writes ``BENCH_spmd.json``: the committed perf trajectory for the spmd
-hot path.
+Times ``CoreCoordinator(backend="spmd")`` in all three dispatch modes —
+``spmd_dispatch="batched"`` (sweep-level megabatching: same-signature
+ladders stacked into ONE dispatch per distinct role-program signature),
+``"ladder"`` (one fused dispatch per ladder, scanned psum sandwiches,
+in-dispatch ``compat.device_clock`` rung timing) and ``"rung"`` (the
+legacy 4-host-round-trips-per-rung path) — over a 64-scenario sweep
+(16 with ``--smoke``) on 2- and 8-device meshes, and writes
+``BENCH_spmd.json`` (schema 2): the committed perf trajectory for the
+spmd hot path.
 
     PYTHONPATH=src python -m benchmarks.perf_harness \
-        [--smoke] [--out BENCH_spmd.json] [--fail-if-slower]
+        [--smoke] [--out BENCH_spmd.json] [--fail-if-slower] \
+        [--compile-cache-dir DIR]
 
 Each mesh leg runs in a fresh subprocess (jax fixes the device count at
 first init).  Per mode the sweep runs TWICE on one coordinator: the
-cold pass pays tracing + fence verification + compilation (the fused
-path builds ONE program per ladder where the per-rung path builds K),
-the warm pass is the steady-state re-dispatch cost on cached programs.
+cold pass pays tracing + fence verification + AOT compilation (ONE
+program per distinct signature on the batched path, one per ladder
+signature fused, K per signature per-rung), the warm pass is the
+steady-state re-dispatch cost on cached programs.  Each mode reports
+its distinct-program and AOT-compile counts next to its dispatch
+counts, so the dispatch-vs-compile attribution is explicit rather than
+inferred.  ``--compile-cache-dir`` opts into JAX's persistent
+compilation cache (CI persists it across workflow runs via
+actions/cache; host-callback-bearing programs are excluded by XLA —
+see compat.persistent_cache).
+
 ``--smoke`` sizes the leg by ``REPRO_SPMD_DEVICES`` (the CI matrix
-knob); ``--fail-if-slower`` exits non-zero when the fused TOTAL sweep
-(cold + warm) is slower than the per-rung one on the largest leg — the
-CI perf gate.
+knob); ``--fail-if-slower`` exits non-zero when any measured leg fails
+its perf gate (``GATE_CRITERION`` below: beat per-rung outright, stay
+within a documented noise band of fused — whose dispatch-count
+advantage is asserted structurally) — the gate verdict is recorded in
+``BENCH_spmd.json`` either way.
 """
 import argparse
 import json
@@ -31,8 +44,31 @@ import time
 
 BUF = 256 << 10
 ITERS = 40
+# the smoke sweep is 4x smaller, so its per-ladder work must be larger
+# for the warm-path gate to measure dispatch structure rather than
+# scheduler noise: with tiny rungs the per-rung path's many cheap
+# dispatches sit within noise of the batched path's few larger ones
+SMOKE_ITERS = 120
 MAX_STRESSORS = 3
 CACHE_CAP = 128
+
+MODES = (("batched", "batched"), ("fused", "ladder"), ("per_rung", "rung"))
+# The gate (both CI legs): the batched sweep must beat the per-rung
+# path outright on the warm (steady-state) sweep, and must not lose to
+# the fused-per-ladder path beyond a 10% noise band.  Batched and
+# fused share identical in-dispatch work and differ only in dispatch
+# count, so on smoke-sized sweeps their true wall-clock gap is a few
+# milliseconds — smaller than shared-runner scheduler noise; the
+# dispatch-count advantage itself is asserted STRUCTURALLY
+# (host_sync_dispatches == distinct signatures, unconditionally), so a
+# broken grouping fails the leg regardless of wall clock.  The
+# committed full-sweep BENCH numbers show batched beating both paths
+# outright on both legs.
+FUSED_NOISE_BAND = 1.10
+GATE_CRITERION = ("batched warm sweep < per_rung warm sweep AND "
+                  "batched warm sweep <= fused warm sweep x "
+                  f"{FUSED_NOISE_BAND} (noise band; dispatch advantage "
+                  "asserted structurally)")
 
 
 def _sweep_specs(smoke: bool):
@@ -46,10 +82,14 @@ def _sweep_specs(smoke: bool):
               ("m", TrafficShape.strided(8)),
               ("w", TrafficShape.burst(0.25))]
     if smoke:
-        # 1 pool x 2 observers x 1 stress pool x 4 shapes = 8 scenarios
-        return scenario_matrix(pools=("hbm",), buffer_bytes=BUF,
+        # 2 pools x 2 observers x 2 stress pools x 2 shapes = 16
+        # scenarios — the pool axes repeat each role-program signature
+        # (hbm/host share one effective memory kind here), so even the
+        # smoke sweep exercises real >1-ladder stacking
+        return scenario_matrix(pools=("hbm", "host"), buffer_bytes=BUF,
                                obs_strategies=("r", "w"),
-                               stress_shapes=shapes[:4], iters=ITERS,
+                               stress_shapes=shapes[:2],
+                               iters=SMOKE_ITERS,
                                max_stressors=MAX_STRESSORS)
     # 2 pools x 2 observers x 2 stress pools x 8 shapes = 64 scenarios
     return scenario_matrix(pools=("hbm", "host"), buffer_bytes=BUF,
@@ -58,88 +98,180 @@ def _sweep_specs(smoke: bool):
                            max_stressors=MAX_STRESSORS)
 
 
-def _time_mode(dispatch: str, specs) -> dict:
+def _count_signatures(specs) -> int:
+    """Distinct role-program signatures in the sweep (mode-independent:
+    what the batched path stacks under, and the honest denominator for
+    every mode's compiles-per-signature number)."""
     from repro.core.coordinator import CoreCoordinator
-    # a cache cap that holds BOTH paths' full program sets (the
-    # per-rung path needs K programs per ladder signature, the fused
-    # path one): the comparison must measure dispatch mechanics, not
-    # LRU evictions.  The default cap (32) is a memory bound; the
-    # fused path fits it on this sweep, the per-rung path does not —
-    # which is itself a consequence of fusing, recorded via
-    # program_cache_hits.
-    coord = CoreCoordinator(backend="spmd", spmd_dispatch=dispatch,
-                            spmd_cache_cap=CACHE_CAP)
-    t0 = time.perf_counter()
-    coord.run_matrix(specs)
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    warm_res = coord.run_matrix(specs)
-    warm = time.perf_counter() - t0
-    st = warm_res.stats
-    # every executed rung of every curve must be the verified sandwich
-    assert all(run.execution["fenced"] for run in warm_res.runs), \
-        "unfenced executed ladder in the perf sweep"
-    assert all(s.main.elapsed_ns > 0 for run in warm_res.runs
-               for s in run.scenarios if s.source == "executed")
-    return {
-        "wall_s_cold": round(cold, 3),
-        "wall_s_warm": round(warm, 3),
-        "wall_s_total": round(cold + warm, 3),
-        "n_ladders": st.n_ladders,
-        "rungs_per_ladder": st.spmd_rungs // max(1, st.n_ladders),
-        "measure_dispatches": st.measure_dispatches,
-        "host_sync_dispatches": st.host_sync_dispatches,
-        "host_sync_per_ladder": round(
-            st.host_sync_dispatches / max(1, st.n_ladders), 3),
-        "program_cache_hits": st.program_cache_hits,
-        "timing_source": warm_res.runs[0].execution["timing_source"],
-    }
+    coord = CoreCoordinator(backend="spmd")
+    return len({coord._spmd_group_key(spec, obs, b)
+                for spec in specs for obs in spec.observers
+                for b in obs.buffers})
 
 
-def _run_leg(smoke: bool) -> dict:
+WARM_ROUNDS = 3
+
+
+def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
+    """Cold + warm timings for all three contenders.
+
+    The cold pass runs once per mode; the warm (steady-state) passes
+    are INTERLEAVED round-robin across the modes and reported as the
+    per-mode median — the gate rides on the warm numbers, and on a
+    shared runner the machine drifts (frequency, thread placement)
+    on second timescales, so back-to-back blocks per mode would hand
+    whichever mode ran during a fast phase a spurious win."""
+    from repro.core.coordinator import CoreCoordinator
+    # a cache cap that holds EVERY mode's full program set (per-rung
+    # needs K programs per signature, fused/batched one): the
+    # comparison must measure dispatch mechanics, not LRU evictions.
+    # The default cap (32) is a memory bound; the batched and fused
+    # paths fit it on this sweep, the per-rung path does not — which
+    # is itself a consequence of fusing, recorded via the program
+    # counts below.
+    # absorb one-time PROCESS costs (backend init, compat probes, XLA
+    # thread pools) before any timed pass: they belong to the process,
+    # not to whichever contender happens to be timed first.  One
+    # single-spec matrix on a throwaway coordinator; its program cache
+    # dies with it, so no contender inherits compiled sweep programs.
+    CoreCoordinator(backend="spmd").run_matrix(specs[:1])
+    coords, colds, cold_stats = {}, {}, {}
+    for name, dispatch in MODES:
+        coord = CoreCoordinator(backend="spmd", spmd_dispatch=dispatch,
+                                spmd_cache_cap=CACHE_CAP,
+                                compile_cache_dir=cache_dir)
+        t0 = time.perf_counter()
+        cold_res = coord.run_matrix(specs)
+        colds[name] = time.perf_counter() - t0
+        cold_stats[name] = cold_res.stats
+        coords[name] = coord
+    warm_samples = {name: [] for name, _d in MODES}
+    warm_res = {}
+    for _ in range(WARM_ROUNDS):
+        for name, _dispatch in MODES:
+            t0 = time.perf_counter()
+            res = coords[name].run_matrix(specs)
+            warm_samples[name].append(time.perf_counter() - t0)
+            warm_res[name] = res
+    modes = {}
+    for name, dispatch in MODES:
+        st = warm_res[name].stats
+        cst = cold_stats[name]
+        warm = sorted(warm_samples[name])[WARM_ROUNDS // 2]
+        # every executed rung of every curve must be the verified
+        # sandwich
+        assert all(run.execution["fenced"]
+                   for run in warm_res[name].runs), \
+            "unfenced executed ladder in the perf sweep"
+        assert all(s.main.elapsed_ns > 0 for run in warm_res[name].runs
+                   for s in run.scenarios if s.source == "executed")
+        if dispatch == "batched":
+            # the sweep-level claim: host-synchronous dispatches
+            # collapse to the number of distinct program signatures
+            assert st.host_sync_dispatches == st.spmd_groups == n_sig, \
+                (st.host_sync_dispatches, st.spmd_groups, n_sig)
+            assert all(run.execution["batched"]
+                       for run in warm_res[name].runs)
+        modes[name] = {
+            "wall_s_cold": round(colds[name], 3),
+            "wall_s_warm": round(warm, 3),
+            "wall_s_warm_samples": [round(w, 3)
+                                    for w in warm_samples[name]],
+            "wall_s_total": round(colds[name] + warm, 3),
+            "n_ladders": st.n_ladders,
+            "rungs_per_ladder": st.spmd_rungs // max(1, st.n_ladders),
+            "measure_dispatches": st.measure_dispatches,
+            "host_sync_dispatches": st.host_sync_dispatches,
+            "host_sync_per_ladder": round(
+                st.host_sync_dispatches / max(1, st.n_ladders), 3),
+            "program_cache_hits": st.program_cache_hits,
+            # compile attribution (cold pass): programs actually
+            # built, how many AOT lower().compile()-ed, and the
+            # per-signature compile count this mode pays
+            "distinct_programs": cst.programs_built,
+            "aot_compiles": cst.aot_compiles,
+            "compiles_per_signature": round(
+                cst.programs_built / max(1, n_sig), 3),
+            "timing_source":
+                warm_res[name].runs[0].execution["timing_source"],
+        }
+    return modes
+
+
+def _run_leg(smoke: bool, cache_dir=None) -> dict:
     import jax
     n_dev = len(jax.devices())
     assert n_dev >= 2, "perf harness leg needs a multi-device mesh"
     specs = _sweep_specs(smoke)
-    fused = _time_mode("ladder", specs)
-    per_rung = _time_mode("rung", specs)
+    n_sig = _count_signatures(specs)
+    cache_prewarmed = bool(cache_dir and os.path.isdir(cache_dir)
+                           and os.listdir(cache_dir))
+    modes = _time_modes(specs, n_sig, cache_dir)
+    batched, fused, per_rung = (modes["batched"], modes["fused"],
+                                modes["per_rung"])
+    assert batched["timing_source"] == "device", batched
     assert fused["timing_source"] == "device", fused
     assert per_rung["timing_source"] == "host", per_rung
     k = fused["rungs_per_ladder"]
+
+    def _ratios(a, b):
+        return {kk: round(b[f"wall_s_{kk}"] / a[f"wall_s_{kk}"], 3)
+                for kk in ("cold", "warm", "total")}
+
+    gate_pass = (batched["wall_s_warm"] < per_rung["wall_s_warm"]
+                 and batched["wall_s_warm"]
+                 <= fused["wall_s_warm"] * FUSED_NOISE_BAND)
     leg = {
         "devices": n_dev,
         "n_scenarios": len(specs),
         "ladder_rungs": k,
+        "distinct_signatures": n_sig,
+        "persistent_cache": bool(cache_dir),
+        "cache_prewarmed": cache_prewarmed,
+        "batched": batched,
         "fused": fused,
         "per_rung": per_rung,
         # the sweep cost a characterization run actually pays: tracing
-        # + fence verification + compile + dispatch (cold) and the
+        # + fence verification + AOT compile + dispatch (cold) and the
         # steady-state re-dispatch on cached programs (warm).  The
-        # fused path builds/verifies/compiles ONE program per ladder
-        # where the per-rung path builds K, and dispatches once where
-        # it blocks 4K times — "total" is what the CI gate holds.
-        "speedup_cold": round(
-            per_rung["wall_s_cold"] / fused["wall_s_cold"], 3),
-        "speedup_warm": round(
-            per_rung["wall_s_warm"] / fused["wall_s_warm"], 3),
-        "speedup_total": round(
-            per_rung["wall_s_total"] / fused["wall_s_total"], 3),
-        "dispatch_reduction_per_ladder": round(
-            per_rung["host_sync_per_ladder"]
-            / fused["host_sync_per_ladder"], 2),
+        # batched path compiles ONE program per distinct signature and
+        # blocks the host once per signature per sweep, where fused
+        # blocks once per ladder and per-rung 4K times per ladder.
+        "speedup_batched_vs_fused": _ratios(batched, fused),
+        "speedup_batched_vs_per_rung": _ratios(batched, per_rung),
+        "speedup_fused_vs_per_rung": _ratios(fused, per_rung),
+        "dispatch_reduction_vs_fused": round(
+            fused["host_sync_dispatches"]
+            / batched["host_sync_dispatches"], 2),
+        "dispatch_reduction_vs_per_rung": round(
+            per_rung["host_sync_dispatches"]
+            / batched["host_sync_dispatches"], 2),
+        # the perf gate verdict (CI fails the leg on it with
+        # --fail-if-slower): steady-state sweep, batched vs both
+        "gate": {
+            "criterion": GATE_CRITERION,
+            "pass": gate_pass,
+            "batched_warm_s": batched["wall_s_warm"],
+            "fused_warm_s": fused["wall_s_warm"],
+            "per_rung_warm_s": per_rung["wall_s_warm"],
+        },
     }
-    # the structural claims hold regardless of machine noise:
-    # 4 host-synchronous dispatches per RUNG collapse to <= 2 per LADDER
+    # the structural claims hold regardless of machine noise: the
+    # batched sweep syncs once per SIGNATURE, fused once per LADDER,
+    # per-rung 4 times per RUNG
+    assert batched["host_sync_dispatches"] == n_sig, leg
     assert fused["host_sync_per_ladder"] <= 2, leg
     assert per_rung["host_sync_per_ladder"] == 4 * k, leg
-    assert leg["dispatch_reduction_per_ladder"] >= 3, leg
+    assert leg["dispatch_reduction_vs_per_rung"] >= 3, leg
+    # and the batched path compiles exactly one program per signature
+    assert batched["distinct_programs"] <= n_sig, leg
     return leg
 
 
 _FORCE = "--xla_force_host_platform_device_count"
 
 
-def _spawn_leg(n_dev: int, smoke: bool) -> dict:
+def _spawn_leg(n_dev: int, smoke: bool, cache_dir=None) -> dict:
     """One mesh size = one fresh interpreter (the harness process never
     initialises jax, so every leg gets its own device count)."""
     env = dict(os.environ)
@@ -155,6 +287,8 @@ def _spawn_leg(n_dev: int, smoke: bool) -> dict:
                "--_leg", str(n_dev), "--_fragment", frag]
         if smoke:
             cmd.append("--smoke")
+        if cache_dir:
+            cmd += ["--compile-cache-dir", cache_dir]
         r = subprocess.run(cmd, env=env, timeout=1800)
         if r.returncode != 0:
             raise RuntimeError(f"perf harness {n_dev}-device leg failed")
@@ -168,15 +302,20 @@ def main(argv=None) -> int:
                     help="small sweep, single leg (CI)")
     ap.add_argument("--out", default="BENCH_spmd.json")
     ap.add_argument("--fail-if-slower", action="store_true",
-                    help="exit 1 if fused is slower than per-rung on "
-                         "the largest leg")
+                    help="exit 1 if any measured leg fails its perf "
+                         "gate (batched must beat per-rung warm and "
+                         "stay within the fused noise band)")
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="enable JAX's persistent compilation cache "
+                         "at this directory (CI persists it across "
+                         "runs)")
     ap.add_argument("--_leg", type=int, default=None,
                     help=argparse.SUPPRESS)
     ap.add_argument("--_fragment", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
     if args._leg is not None:            # subprocess mode: one mesh leg
-        leg = _run_leg(args.smoke)
+        leg = _run_leg(args.smoke, args.compile_cache_dir)
         with open(args._fragment, "w") as f:
             json.dump(leg, f)
         return 0
@@ -186,58 +325,66 @@ def main(argv=None) -> int:
     else:
         legs = [2, 8]
     out = {
-        "schema": 1,
-        "bench": "spmd_fused_ladder_vs_per_rung",
+        "schema": 2,
+        "bench": "spmd_batched_vs_fused_vs_per_rung",
         "generated_by": "benchmarks/perf_harness.py"
                         + (" --smoke" if args.smoke else ""),
-        "n_scenarios": 8 if args.smoke else 64,
-        "iters": ITERS,
+        "n_scenarios": 16 if args.smoke else 64,
+        "iters": SMOKE_ITERS if args.smoke else ITERS,
         "buffer_bytes": BUF,
         "spmd_cache_cap": CACHE_CAP,
+        "gate_criterion": GATE_CRITERION,
         "legs": {},
     }
+
+    def _write():
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+
     for n_dev in legs:
         print(f"== perf harness: {n_dev}-device leg "
               f"({out['n_scenarios']} scenarios) ==")
-        leg = _spawn_leg(n_dev, args.smoke)
+        leg = _spawn_leg(n_dev, args.smoke, args.compile_cache_dir)
         out["legs"][str(n_dev)] = leg
-        for mode in ("fused", "per_rung"):
+        for mode, _dispatch in MODES:
             m = leg[mode]
             print(f"   {mode:8s} cold {m['wall_s_cold']:7.3f}s  warm "
                   f"{m['wall_s_warm']:7.3f}s  "
-                  f"{m['host_sync_per_ladder']:.1f} sync "
-                  f"dispatches/ladder  [{m['timing_source']}]")
-        print(f"   speedup: cold {leg['speedup_cold']}x, warm "
-              f"{leg['speedup_warm']}x, total {leg['speedup_total']}x; "
-              f"dispatch reduction "
-              f"{leg['dispatch_reduction_per_ladder']}x")
-    with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
-        f.write("\n")
+                  f"{m['host_sync_dispatches']} syncs/sweep  "
+                  f"{m['distinct_programs']} programs "
+                  f"({m['aot_compiles']} AOT)  [{m['timing_source']}]")
+        print(f"   {leg['distinct_signatures']} distinct signatures; "
+              f"batched warm speedup: "
+              f"{leg['speedup_batched_vs_fused']['warm']}x vs fused, "
+              f"{leg['speedup_batched_vs_per_rung']['warm']}x vs "
+              f"per-rung; gate "
+              f"{'PASS' if leg['gate']['pass'] else 'FAIL'}")
+    _write()
     print(f"wrote {args.out}")
 
-    gate_leg = str(max(legs))
-    if args.fail_if_slower and out["legs"][gate_leg]["speedup_total"] < 1.0:
-        # the structural claims (dispatch_reduction >= 3x, <= 2 syncs
-        # per ladder) are asserted unconditionally inside every leg;
-        # the wall-clock sign additionally rides on a noisy shared
-        # runner, so re-measure once before declaring the fused path
-        # slower
-        print(f"gate leg measured speedup_total "
-              f"{out['legs'][gate_leg]['speedup_total']} < 1.0; "
-              f"re-measuring once to separate regression from noise")
-        retry = _spawn_leg(max(legs), args.smoke)
-        if retry["speedup_total"] > out["legs"][gate_leg]["speedup_total"]:
-            out["legs"][gate_leg] = retry
-            with open(args.out, "w") as f:
-                json.dump(out, f, indent=1)
-                f.write("\n")
-        if out["legs"][gate_leg]["speedup_total"] < 1.0:
-            print(f"FAIL: fused path slower than per-rung on the "
-                  f"{gate_leg}-device leg (total-sweep speedup "
-                  f"{out['legs'][gate_leg]['speedup_total']})",
-                  file=sys.stderr)
-            return 1
+    if args.fail_if_slower:
+        for n_dev in legs:
+            leg = out["legs"][str(n_dev)]
+            if not leg["gate"]["pass"]:
+                # the structural claims (sync-per-signature, program
+                # counts) are asserted unconditionally inside every
+                # leg; the wall-clock sign additionally rides on a
+                # noisy shared runner, so re-measure once before
+                # declaring a regression
+                print(f"{n_dev}-device gate failed "
+                      f"({leg['gate']}); re-measuring once to "
+                      f"separate regression from noise")
+                retry = _spawn_leg(n_dev, args.smoke,
+                                   args.compile_cache_dir)
+                if retry["gate"]["pass"]:
+                    out["legs"][str(n_dev)] = retry
+                    _write()
+            if not out["legs"][str(n_dev)]["gate"]["pass"]:
+                print(f"FAIL: perf gate on the {n_dev}-device leg: "
+                      f"{out['legs'][str(n_dev)]['gate']}",
+                      file=sys.stderr)
+                return 1
     return 0
 
 

@@ -52,14 +52,17 @@ def _run() -> list:
           f"rungs) -> {st.measure_dispatches} fused whole-ladder "
           f"dispatches ({st.host_sync_dispatches} host syncs total), "
           f"{st.model_evals} model evals for comparison")
-    # the dispatch accounting depends on the RESOLVED mode: the fused
-    # ladder blocks the host once per ladder with in-dispatch device
-    # clocks; installs without a timestamp source honestly fall back
-    # to the legacy per-rung path (warm + 3 timed syncs per rung)
+    # the dispatch accounting depends on the RESOLVED mode: the
+    # sweep-batched default blocks the host once per distinct
+    # role-program signature (here the two observers differ, so two
+    # groups) with in-dispatch device clocks; installs without a
+    # timestamp source honestly fall back to the legacy per-rung path
+    # (warm + 3 timed syncs per rung)
     timing_source = res.runs[0].execution["timing_source"]
     if timing_source == "device":
-        assert st.measure_dispatches == st.n_ladders
-        assert st.host_sync_dispatches == st.n_ladders
+        assert st.measure_dispatches == st.spmd_groups
+        assert st.host_sync_dispatches == st.spmd_groups
+        assert st.host_sync_dispatches <= st.n_ladders
     else:
         assert st.measure_dispatches == st.spmd_rungs
         assert st.host_sync_dispatches == 4 * st.spmd_rungs

@@ -49,10 +49,10 @@ spec = ScenarioSpec(
 coord = CoreCoordinator(backend="spmd")
 res = coord.run_matrix([spec])
 print(f"\n{res.stats.spmd_rungs} ladder rungs -> "
-      f"{res.stats.measure_dispatches} fused whole-ladder SPMD "
-      f"dispatches (ONE per observer curve, "
-      f"{res.stats.n_ladders} curves; per-rung elapsed from "
-      f"in-dispatch device clocks)")
+      f"{res.stats.measure_dispatches} stacked SPMD dispatches "
+      f"(ONE per distinct role-program signature — here one per "
+      f"observer curve, {res.stats.n_ladders} curves; per-rung "
+      f"elapsed from in-dispatch device clocks)")
 
 for run in res.runs:
     print(f"\n-- curve {run.key} "

@@ -203,6 +203,104 @@ def device_clock(dep):
 
 
 # ---------------------------------------------------------------------------
+# AOT compilation + persistent compile cache (jit staging / config drift)
+# ---------------------------------------------------------------------------
+
+
+def aot_trace(jitted, *args):
+    """``jitted.trace(*args)`` where the installed JAX exposes the AOT
+    ``Traced`` stage of the trace -> lower -> compile pipeline; ``None``
+    on releases without it.  One trace then serves BOTH the structural
+    fence check (via ``traced.jaxpr``) and :func:`aot_compile` — without
+    it the spmd program builder traces every program twice (once in
+    ``make_jaxpr`` for the fence walk, once again at first dispatch)."""
+    trace = getattr(jitted, "trace", None)
+    if trace is None:
+        return None
+    try:
+        traced = trace(*args)
+    except Exception:
+        return None
+    return traced if hasattr(traced, "jaxpr") else None
+
+
+def aot_compile(jitted, *args, traced=None):
+    """Ahead-of-time ``jit(...).lower(...).compile()``: ONE compiled
+    executable per program signature, built at a controlled point
+    instead of inside the first timed dispatch (reusing a ``traced``
+    stage from :func:`aot_trace` when given, so the program is traced
+    exactly once end to end).  With :func:`persistent_cache` enabled,
+    ``compile()`` consults the on-disk cache, so repeated processes
+    skip the XLA compile wall for cacheable programs.  Returns ``None``
+    when the installed JAX cannot AOT-compile this program — callers
+    fall back to dispatch-triggered compilation and must record the
+    degradation (the CurveDB ``execution["aot"]`` provenance)."""
+    try:
+        if traced is not None:
+            return traced.lower().compile()
+        lower = getattr(jitted, "lower", None)
+        if lower is None:
+            return None
+        return lower(*args).compile()
+    except Exception:
+        return None
+
+
+def persistent_cache(cache_dir: str) -> bool:
+    """Enable JAX's persistent compilation cache at ``cache_dir`` and
+    return whether it took effect.
+
+    SCOPE: the cache is PROCESS-GLOBAL JAX configuration, not
+    per-caller state — once enabled it serves (and is written by)
+    every compile in the process, and a later call with a different
+    directory re-points the whole process.  Callers advertising an
+    opt-in (``CoreCoordinator(compile_cache_dir=...)``) must document
+    that the opt-in escapes the instance; pass a directory that
+    outlives the process's compiles.
+
+    The config spelling drifted (``jax_compilation_cache_dir`` config
+    key on current releases, ``compilation_cache.set_cache_dir`` on
+    older ones); the write-threshold knobs
+    (``jax_persistent_cache_min_*``) are best-effort — absent knobs
+    keep that release's defaults.  Honesty note: XLA refuses to persist
+    programs containing HOST CALLBACKS, so on installs where
+    :func:`device_clock_source` is ``"callback"`` the device-timed
+    fused/batched ladder programs recompile per process — the cache
+    still eliminates the compile wall for the host-timed rung programs
+    and the interpret-path measured passes, and a real accelerator
+    clock primitive (no callback) would make the fused programs
+    cacheable too."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+    except Exception:
+        try:
+            from jax.experimental.compilation_cache import (
+                compilation_cache as _cc)
+            _cc.set_cache_dir(cache_dir)
+        except Exception:
+            return False
+    # the cache module memoizes a "disabled" verdict if anything was
+    # compiled before the dir was set (e.g. compat probes); reset it so
+    # the next compilation re-initializes against the new directory
+    try:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as _cc)
+        _cc.reset_cache()
+    except Exception:
+        pass
+    # cache every program, however small/fast to compile: the spmd
+    # sweeps are dominated by many medium-sized programs that sit
+    # below the default write thresholds
+    for opt, val in (("jax_persistent_cache_min_entry_size_bytes", -1),
+                     ("jax_persistent_cache_min_compile_time_secs", 0.0)):
+        try:
+            jax.config.update(opt, val)
+        except Exception:
+            pass
+    return True
+
+
+# ---------------------------------------------------------------------------
 # Input buffer donation (per-backend availability)
 # ---------------------------------------------------------------------------
 

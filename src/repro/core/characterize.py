@@ -211,6 +211,12 @@ def curvedb_from_result(result: MatrixResult, platform: str, *,
         "spmd_rungs": result.stats.spmd_rungs,
         "host_sync_dispatches": result.stats.host_sync_dispatches,
         "program_cache_hits": result.stats.program_cache_hits,
+        # sweep-level megabatching + AOT attribution (PR 5): distinct
+        # stacked-signature groups, programs actually compiled, and
+        # how many compiled ahead of time
+        "spmd_groups": result.stats.spmd_groups,
+        "programs_built": result.stats.programs_built,
+        "aot_compiles": result.stats.aot_compiles,
     }
     for run in result.runs:
         # the curve methods pick executed values where the backend ran

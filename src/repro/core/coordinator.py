@@ -33,15 +33,24 @@ Backends:
                     real Pallas kernel library (pure-jnp fallback via
                     ``compat.pallas_supported``), measured region
                     dataflow-fenced between two psum barriers.  The
-                    default dispatch mode (``spmd_dispatch="ladder"``)
-                    runs the ENTIRE ladder as ONE fused dispatch — a
-                    ``lax.scan`` over per-rung role tables, every scan
-                    step its own psum sandwich, per-rung elapsed time
-                    captured in-dispatch via ``compat.device_clock``
-                    (median-of-N samples, no host round-trips inside
-                    the measured region); ``spmd_dispatch="rung"``
-                    keeps the legacy one-dispatch-per-rung path with
-                    host wall-clock timing.
+                    default dispatch mode (``spmd_dispatch="batched"``)
+                    applies SWEEP-LEVEL megabatching: ``run_matrix``
+                    groups ladders by role-program signature and runs
+                    each group as ONE stacked dispatch — the fused
+                    ladder's ``lax.scan`` over per-rung role tables
+                    gains a leading scenario axis, every scanned rung
+                    of every stacked ladder keeps its own psum
+                    sandwich and in-dispatch ``compat.device_clock``
+                    stamp pair, so a whole sweep costs ~one
+                    host-synchronous dispatch per distinct signature.
+                    ``spmd_dispatch="ladder"`` keeps the one-fused-
+                    dispatch-per-ladder mode, ``"rung"`` the legacy
+                    one-dispatch-per-rung path with host wall-clock
+                    timing.  Programs are AOT-compiled once per
+                    signature (``compat.aot_compile``) and an opt-in
+                    persistent compile cache
+                    (``compile_cache_dir=``) reuses cacheable
+                    executables across processes.
 """
 from __future__ import annotations
 
@@ -174,9 +183,10 @@ class CoreCoordinator:
                  platform: Optional[Platform] = None,
                  backend: str = "auto",
                  spmd_activity: str = "auto",
-                 spmd_dispatch: str = "ladder",
+                 spmd_dispatch: str = "batched",
                  spmd_samples: int = 3,
-                 spmd_cache_cap: Optional[int] = None):
+                 spmd_cache_cap: Optional[int] = None,
+                 compile_cache_dir: Optional[str] = None):
         self.platform = platform or detect_platform()
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
@@ -192,25 +202,48 @@ class CoreCoordinator:
         # ``execution["activity"]`` provenance.
         assert spmd_activity in ("auto", "pallas", "jnp"), spmd_activity
         self.spmd_activity = spmd_activity
-        # how the spmd backend dispatches a ladder: "ladder" fuses all
-        # K rungs into ONE dispatch (scanned psum sandwiches, per-rung
-        # in-dispatch device_clock timing); "rung" is the legacy
-        # one-dispatch-per-rung path (host wall-clock, median-of-3).
-        # "ladder" needs an in-dispatch timestamp source and falls
-        # back to "rung" honestly when compat.device_clock_source()
-        # reports none; the resolved choice lands in every curve's
-        # ``execution["timing_source"]`` ("device" vs "host").
-        assert spmd_dispatch in ("ladder", "rung"), spmd_dispatch
+        # how the spmd backend dispatches a sweep: "batched" (default)
+        # groups same-signature ladders ACROSS the whole matrix and
+        # executes each group as ONE stacked dispatch (the fused
+        # ladder's lax.scan gains a leading scenario axis — ~1 dispatch
+        # per distinct role-program signature per sweep); "ladder"
+        # fuses the K rungs of ONE ladder into one dispatch (scanned
+        # psum sandwiches, per-rung in-dispatch device_clock timing);
+        # "rung" is the legacy one-dispatch-per-rung path (host
+        # wall-clock, median-of-3).  "batched"/"ladder" need an
+        # in-dispatch timestamp source and fall back to "rung"
+        # honestly when compat.device_clock_source() reports none; the
+        # resolved choice lands in every curve's
+        # ``execution["timing_source"]`` ("device" vs "host"), and the
+        # batched path additionally stamps ``execution["batched"]`` /
+        # ``["group_size"]``.
+        assert spmd_dispatch in ("batched", "ladder", "rung"), spmd_dispatch
         assert spmd_samples >= 1, spmd_samples
         self.spmd_dispatch = spmd_dispatch
         self.spmd_samples = spmd_samples
         self.spmd_cache_cap = (spmd_cache_cap if spmd_cache_cap
                                is not None else self._SPMD_CACHE_CAP)
         assert self.spmd_cache_cap >= 1, self.spmd_cache_cap
-        # (program key) -> [mesh, fn, fenced, xf, xi]; mutable entries
-        # because donated dispatches rebind the operand arrays
+        # (program key) -> [mesh, fn, fenced, xf, xi, aot]; mutable
+        # entries because donated dispatches rebind the operand arrays
         from collections import OrderedDict
         self._spmd_programs: "OrderedDict[Tuple, list]" = OrderedDict()
+        # opt-in persistent compile cache: repeated harness/CI/process
+        # runs reuse on-disk XLA executables for cacheable programs.
+        # NOTE: the underlying JAX config is PROCESS-GLOBAL — enabling
+        # it here serves every compile in the process (other
+        # coordinators included), and a second coordinator with a
+        # different dir re-points the whole process; the attribute
+        # below records only what THIS coordinator requested
+        # (compat.persistent_cache documents scope + the host-callback
+        # caveat)
+        self.compile_cache_dir = compile_cache_dir
+        if compile_cache_dir:
+            from repro import compat
+            self.persistent_cache_enabled = compat.persistent_cache(
+                compile_cache_dir)
+        else:
+            self.persistent_cache_enabled = False
 
     def _resolved_activity(self) -> str:
         """The rung-activity implementation the spmd backend will use."""
@@ -221,12 +254,16 @@ class CoreCoordinator:
 
     def _resolved_dispatch(self) -> str:
         """The spmd dispatch mode that will actually run: the fused
-        ladder needs an in-dispatch timestamp source."""
+        ladder and the sweep-batched stacking both need an in-dispatch
+        timestamp source (per-rung elapsed comes from device_clock
+        deltas; without one, only the host-timed per-rung path is
+        honest)."""
         from repro import compat
         if self.spmd_dispatch == "rung":
             return "rung"
-        return ("ladder" if compat.device_clock_source() != "none"
-                else "rung")
+        if compat.device_clock_source() == "none":
+            return "rung"
+        return self.spmd_dispatch
 
     # -- spmd program cache (LRU, coordinator lifetime) -----------------
     def _program_cache_get(self, key: Tuple,
@@ -242,7 +279,20 @@ class CoreCoordinator:
         self._spmd_programs[key] = entry
         self._spmd_programs.move_to_end(key)
         while len(self._spmd_programs) > self.spmd_cache_cap:
-            self._spmd_programs.popitem(last=False)
+            _k, evicted = self._spmd_programs.popitem(last=False)
+            # the cap is a MEMORY bound: dropping only the dict entry
+            # would leave the evicted program's placed (and possibly
+            # donation-aliased) operand buffers alive on the devices
+            # until Python GC got around to them — delete the device
+            # buffers eagerly so a capped cache cannot pin memory for
+            # programs it no longer holds
+            for arr in evicted[3:5]:
+                delete = getattr(arr, "delete", None)
+                if delete is not None:
+                    try:
+                        delete()
+                    except Exception:
+                        pass        # already consumed by donation
 
     # -- Experiment Instantiator ----------------------------------------
     def validate(self, cfg: ExperimentConfig) -> None:
@@ -480,24 +530,9 @@ class CoreCoordinator:
     def _coupled_siblings(spec: ScenarioSpec,
                           observer: ObserverSpec) -> Tuple[ObserverSpec, ...]:
         """The sibling observers sharing this observer's measured
-        region (empty when the scenario is uncoupled).  Drops exactly
-        ONE occurrence of the measured observer — by identity when it
-        is one of the spec's own entries (so value-equal twins still
-        see each other), by value for reconstructed/deserialized equal
-        observers."""
-        if not spec.coupled:
-            return ()
-        rest = list(spec.observers)
-        for i, o in enumerate(rest):
-            if o is observer:
-                del rest[i]
-                break
-        else:
-            for i, o in enumerate(rest):
-                if o == observer:
-                    del rest[i]
-                    break
-        return tuple(rest)
+        region (the logic lives on :meth:`ScenarioSpec.coupled_siblings`
+        so the sweep-level grouping signature can reuse it)."""
+        return spec.coupled_siblings(observer)
 
     def _ladder_depth(self, spec: ScenarioSpec) -> int:
         n = (spec.max_stressors + 1 if spec.max_stressors is not None
@@ -527,13 +562,20 @@ class CoreCoordinator:
         Backends: ``simulate``/``interpret``/``tpu`` model the
         contention ladder per rung (interpret/tpu additionally measure
         the uncontended observer); ``spmd`` *executes* every rung —
-        one fused shard_map dispatch over the engine mesh per rung,
         observer + coupled sibling observers + k live stressor engines
         between two psum barriers — and the resulting curves carry
-        ``source == "executed"``.  Every curve's ``execution``
+        ``source == "executed"``.  On the spmd backend ``batched=True``
+        additionally applies SWEEP-LEVEL megabatching (the default
+        ``spmd_dispatch="batched"``): ladders are grouped by
+        role-program signature across the whole matrix and every group
+        executes as ONE stacked dispatch, so a sweep costs ~one
+        host-synchronous dispatch per distinct signature instead of
+        one per ladder; ``batched=False`` degrades the batched mode to
+        one fused dispatch per ladder.  Every curve's ``execution``
         provenance records the backend, executed-vs-modeled rungs,
-        effective ``coupled`` state, and the rung ``activity``
-        ("pallas" kernels, "jnp" fallback loops, or "none")."""
+        effective ``coupled`` state, the rung ``activity`` ("pallas"
+        kernels, "jnp" fallback loops, or "none"), and — for spmd —
+        ``batched``/``group_size``/``aot``."""
         for spec in specs:
             self.validate_spec(spec)
         triples = [(spec, obs, b) for spec in specs
@@ -552,7 +594,8 @@ class CoreCoordinator:
         elif self.backend == "spmd":
             activity = self._resolved_activity()
             executed, fenced_by_triple, timing_by_triple = \
-                self._execute_spmd(triples, stats, activity)
+                self._execute_spmd(triples, stats, activity,
+                                   batched=batched)
         else:
             activity = "none"       # nothing executes on this backend
 
@@ -665,15 +708,18 @@ class CoreCoordinator:
 
     def _execute_spmd(
         self, triples, stats: "DispatchStats", activity: str = "jnp",
+        batched: bool = True,
     ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool],
                Dict[int, Dict[str, Any]]]:
         """Execute every (spec, observer, buffer) triple's contention
-        ladder on the engine mesh — the whole ladder as ONE fused
-        dispatch (``spmd_dispatch="ladder"``, the default) or one
-        dispatch per rung (``"rung"``, the legacy path).  Returns the
-        per-(triple, rung) observer results, the verified fence state
-        per triple, and per-triple timing provenance (source, sample
-        spreads, host-synchronous dispatch counts)."""
+        ladder on the engine mesh — same-signature ladders stacked into
+        ONE dispatch per group (``spmd_dispatch="batched"``, the
+        default), the whole ladder as one fused dispatch per triple
+        (``"ladder"``), or one dispatch per rung (``"rung"``, the
+        legacy path).  Returns the per-(triple, rung) observer results,
+        the verified fence state per triple, and per-triple timing
+        provenance (source, sample spreads, host-synchronous dispatch
+        counts, batching/AOT state)."""
         n_eng = self._spmd_engines()
         if n_eng < 2:
             raise ValidationError(
@@ -684,6 +730,25 @@ class CoreCoordinator:
         fenced_by_triple: Dict[int, bool] = {}
         timing_by_triple: Dict[int, Dict[str, Any]] = {}
         dispatch = self._resolved_dispatch()
+        if dispatch == "batched" and not batched:
+            dispatch = "ladder"       # megabatching explicitly disabled
+        if dispatch == "batched":
+            from collections import OrderedDict
+            groups: "OrderedDict[Tuple, List[int]]" = OrderedDict()
+            for i, (spec, obs, buf) in enumerate(triples):
+                key = self._spmd_group_key(spec, obs, buf)
+                groups.setdefault(key, []).append(i)
+            stats.spmd_groups += len(groups)
+            for idxs in groups.values():
+                members = [triples[i] for i in idxs]
+                results, fenced, timings = self._run_spmd_group(
+                    members, n_eng, stats, activity)
+                for g, i in enumerate(idxs):
+                    for k, res in enumerate(results[g]):
+                        executed[(i, k)] = res
+                    fenced_by_triple[i] = fenced
+                    timing_by_triple[i] = timings[g]
+            return executed, fenced_by_triple, timing_by_triple
         for i, (spec, obs, buf) in enumerate(triples):
             if dispatch == "ladder":
                 results, fenced, timing = self._run_spmd_ladder(
@@ -694,19 +759,164 @@ class CoreCoordinator:
                 fenced, timing = True, {
                     "timing_source": "host",
                     "samples": self.spmd_samples,
-                    "rung_time_spread_ns": [], "dispatches": 0}
+                    "rung_time_spread_ns": [], "dispatches": 0,
+                    "batched": False, "group_size": 1, "aot": True}
                 for k in range(self._ladder_depth(spec)):
-                    res, rung_fenced, spread = self._run_spmd_rung(
-                        spec, obs, buf, k, n_eng, stats,
-                        activity=activity)
+                    res, rung_fenced, spread, rung_aot = \
+                        self._run_spmd_rung(spec, obs, buf, k, n_eng,
+                                            stats, activity=activity)
                     executed[(i, k)] = res
                     fenced = fenced and rung_fenced
+                    timing["aot"] = timing["aot"] and rung_aot
                     timing["rung_time_spread_ns"].append(spread)
                     # 1 warm + the timed samples
                     timing["dispatches"] += 1 + self.spmd_samples
             fenced_by_triple[i] = fenced
             timing_by_triple[i] = timing
         return executed, fenced_by_triple, timing_by_triple
+
+    def _spmd_group_key(self, spec: ScenarioSpec, obs: ObserverSpec,
+                        buf: int) -> Tuple:
+        """Sweep-level grouping key: triples with equal keys expand to
+        the SAME per-rung role tables and operand placement, so their
+        ladders legally stack into one batched dispatch.  The
+        spec-level role signature (pool-free — see
+        :meth:`ScenarioSpec.ladder_signature`) is refined by each role
+        pool's *effective* memory kind: pools that differ only in name
+        but land in one physical memory merge (like the interpret
+        path's signature groups); pools that really differ split."""
+        kinds = tuple(self.pools.pool(p).effective_memory_kind()
+                      for p in spec.role_pools(obs))
+        return (spec.ladder_signature(obs, buf), kinds)
+
+    def _build_ladder_entry(self, per_rung, n_eng: int, activity: str,
+                            samples: int, kind: Optional[str],
+                            group: int, stats: "DispatchStats") -> list:
+        """Build, fence-verify, place and (where the installed JAX
+        allows) AOT-compile one fused ladder program — ``group > 1``
+        stacks the scan table for a whole same-signature group, the
+        scanned edition of a leading scenario axis.  The program is
+        traced exactly ONCE (``compat.aot_trace``): the same trace
+        feeds the structural fence walk and ``lower().compile()``."""
+        from repro import compat
+
+        deep_roles = per_rung[-1][0]
+        rows_max = max(r[2] for r in deep_roles)
+        xf, xi = _build_rung_operands(deep_roles, n_eng, rows_max)
+        branch_fns: List = []
+        branch_of: Dict[Tuple, int] = {}
+        table = np.zeros((len(per_rung), n_eng), np.int32)
+        for k, (roles, _pools) in enumerate(per_rung):
+            for e, sig in enumerate(roles):
+                if sig not in branch_of:
+                    branch_of[sig] = len(branch_fns)
+                    branch_fns.append(_spmd_branch_fn(
+                        *sig, activity=activity))
+                table[k, e] = branch_of[sig]
+        if group > 1:
+            # the leading scenario axis: ladder g's rungs are scan
+            # steps [g*K, (g+1)*K) — every stacked rung keeps its own
+            # psum sandwich and stamp pair, and the scan carry
+            # serializes ladder g+1 behind ladder g exactly like rung
+            # k+1 behind rung k (invariant 4, across the whole group)
+            table = np.tile(table, (group, 1))
+        mesh, fn = build_ladder_program(
+            n_eng, branch_fns, table, samples=samples,
+            donate=compat.donation_supported())
+        # commit the operands onto the mesh BEFORE tracing: the AOT
+        # executable is specialized to the placed shardings, and the
+        # fence walk sees the same program the dispatch runs
+        from jax.sharding import PartitionSpec as P
+        sharding = compat.named_sharding(mesh, P("engine"), kind)
+        xf = jax.device_put(xf, sharding)
+        xi = jax.device_put(xi, sharding)
+        jax.block_until_ready((xf, xi))
+        traced = compat.aot_trace(fn, xf, xi)
+        # provenance records the VERIFIED fence state of every scanned
+        # rung of every stacked ladder, not an assertion (compat
+        # degradation is honestly reported as unfenced)
+        fenced = measured_region_is_fenced(
+            fn, xf, xi, jaxpr=getattr(traced, "jaxpr", None))
+        compiled = compat.aot_compile(fn, xf, xi, traced=traced)
+        stats.programs_built += 1
+        if compiled is not None:
+            stats.aot_compiles += 1
+        return [mesh, compiled if compiled is not None else fn, fenced,
+                xf, xi, compiled is not None]
+
+    def _dispatch_ladder_entry(self, entry: list, group: int,
+                               n_scen: int, samples: int,
+                               stats: "DispatchStats"):
+        """ONE host-synchronous dispatch executes ``group`` stacked
+        ladders of ``n_scen`` rungs each; returns the per-(ladder,
+        rung) elapsed medians and sample spreads decoded from engine
+        0's in-dispatch stamp pairs."""
+        _mesh, call, fenced, xf, xi = entry[:5]
+        out = jax.block_until_ready(call(xf, xi))
+        stats.host_sync_dispatches += 1
+        stats.measure_dispatches += 1
+        stats.spmd_rungs += group * n_scen
+        # donated dispatch consumed the cached operands; rebind the
+        # returned (aliased in place where donation is real) arrays
+        entry[3], entry[4] = out[3], out[4]
+        # engine 0 is the observer: its [s, ns] stamp pairs bracket
+        # each scanned sandwich, stop stamp taken after the stop psum
+        # (i.e. when the SLOWEST engine finished — paper invariant 3)
+        t0 = np.asarray(out[1])[0].reshape(group, n_scen, samples, 2)
+        t1 = np.asarray(out[2])[0].reshape(group, n_scen, samples, 2)
+        d = ((t1[..., 0].astype(np.int64) - t0[..., 0]) * 1_000_000_000
+             + (t1[..., 1] - t0[..., 1]))
+        med = np.median(d, axis=2)                      # (group, n_scen)
+        spread = d.max(axis=2) - d.min(axis=2)
+        return med, spread, fenced
+
+    def _run_spmd_group(self, members, n_eng: int,
+                        stats: "DispatchStats", activity: str = "jnp",
+                        ) -> Tuple[List[List[WorkloadResult]], bool,
+                                   List[Dict[str, Any]]]:
+        """A whole same-signature ladder GROUP as one stacked dispatch:
+        the fused ladder program's scan gains a leading scenario axis
+        (ladder-major step order), every stacked rung keeps its own
+        psum sandwich + device_clock stamp pair, and the host blocks
+        ONCE for the entire group.  A 64-ladder sweep with S distinct
+        signatures costs S host-synchronous dispatches and S cache
+        entries instead of 64 — the sweep-level extension of the
+        per-ladder fusion, attacking the warm-path dispatch tax."""
+        spec0, obs0, buf0 = members[0]
+        group = len(members)
+        n_scen = self._ladder_depth(spec0)
+        samples = self.spmd_samples
+        per_rung = [self._rung_roles(spec0, obs0, buf0, k, n_eng)
+                    for k in range(n_scen)]
+        kind = self._operand_kind(
+            [p for _r, pools in per_rung for p in pools])
+        key = ("batched", n_eng, activity, kind, samples, group,
+               tuple(tuple(r) for r, _p in per_rung))
+        entry = self._program_cache_get(key, stats)
+        if entry is None:
+            entry = self._build_ladder_entry(per_rung, n_eng, activity,
+                                             samples, kind, group, stats)
+            self._program_cache_put(key, entry)
+        aot = entry[5]
+        med, spread, fenced = self._dispatch_ladder_entry(
+            entry, group, n_scen, samples, stats)
+        results: List[List[WorkloadResult]] = []
+        timings: List[Dict[str, Any]] = []
+        for g, (spec, obs, buf) in enumerate(members):
+            results.append([
+                self._observer_result(obs, buf, spec.iters,
+                                      float(max(med[g, k], 1.0)))
+                for k in range(n_scen)])
+            timings.append({
+                "timing_source": "device",
+                "samples": samples,
+                "rung_time_spread_ns": [int(s) for s in spread[g]],
+                "dispatches": 1,
+                "batched": True,
+                "group_size": group,
+                "aot": aot,
+            })
+        return results, fenced, timings
 
     def _rung_roles(self, spec: ScenarioSpec, obs: ObserverSpec,
                     buf: int, k: int, n_eng: int,
@@ -807,80 +1017,42 @@ class CoreCoordinator:
         supports donation) operands live in the coordinator-level LRU
         cache, so repeated ``run_matrix`` calls re-dispatch without
         re-tracing or re-transferring."""
-        from repro import compat
-
         n_scen = self._ladder_depth(spec)
         samples = self.spmd_samples
         per_rung = [self._rung_roles(spec, obs, buf, k, n_eng)
                     for k in range(n_scen)]
         # ONE operand set serves every scanned rung: placement must
-        # agree across the whole ladder, not per rung
+        # agree across the whole ladder, not per rung.  (The DEEPEST
+        # rung holds every engine's non-idle role — shallower rungs
+        # only flip engines back to idle — so its layout decides
+        # operand shapes and chase chains inside the builder.)
         kind = self._operand_kind(
             [p for _r, pools in per_rung for p in pools])
         key = ("ladder", n_eng, activity, kind, samples,
                tuple(tuple(r) for r, _p in per_rung))
         entry = self._program_cache_get(key, stats)
         if entry is None:
-            # the DEEPEST rung holds every engine's non-idle role
-            # (shallower rungs only flip engines back to idle), so its
-            # layout decides operand shapes and chase chains
-            deep_roles = per_rung[-1][0]
-            rows_max = max(r[2] for r in deep_roles)
-            xf, xi = _build_rung_operands(deep_roles, n_eng, rows_max)
-            branch_fns: List = []
-            branch_of: Dict[Tuple, int] = {}
-            table = np.zeros((n_scen, n_eng), np.int32)
-            for k, (roles, _pools) in enumerate(per_rung):
-                for e, sig in enumerate(roles):
-                    if sig not in branch_of:
-                        branch_of[sig] = len(branch_fns)
-                        branch_fns.append(_spmd_branch_fn(
-                            *sig, activity=activity))
-                    table[k, e] = branch_of[sig]
-            mesh, fn = build_ladder_program(
-                n_eng, branch_fns, table, samples=samples,
-                donate=compat.donation_supported())
-            # provenance records the VERIFIED fence state of every
-            # scanned rung, not an assertion (compat degradation is
-            # honestly reported as unfenced)
-            fenced = measured_region_is_fenced(fn, xf, xi)
-            from jax.sharding import PartitionSpec as P
-            sharding = compat.named_sharding(mesh, P("engine"), kind)
-            xf = jax.device_put(xf, sharding)
-            xi = jax.device_put(xi, sharding)
-            jax.block_until_ready((xf, xi))
-            entry = [mesh, fn, fenced, xf, xi]
+            entry = self._build_ladder_entry(per_rung, n_eng, activity,
+                                             samples, kind, 1, stats)
             self._program_cache_put(key, entry)
-        _mesh, fn, fenced, xf, xi = entry
+        aot = entry[5]
         # ONE host-synchronous dispatch measures the whole ladder (no
         # warm-up run: compilation happens before execution, and the
         # per-rung median over `samples` in-dispatch repetitions
         # absorbs first-touch effects)
-        out = jax.block_until_ready(fn(xf, xi))
-        stats.host_sync_dispatches += 1
-        stats.measure_dispatches += 1
-        stats.spmd_rungs += n_scen
-        # donated dispatch consumed the cached operands; rebind the
-        # returned (aliased in place where donation is real) arrays
-        entry[3], entry[4] = out[3], out[4]
-
-        # engine 0 is the observer: its [s, ns] stamp pairs bracket
-        # each scanned sandwich, stop stamp taken after the stop psum
-        # (i.e. when the SLOWEST engine finished — paper invariant 3)
-        t0 = np.asarray(out[1][0]).reshape(n_scen, samples, 2)
-        t1 = np.asarray(out[2][0]).reshape(n_scen, samples, 2)
-        d = ((t1[..., 0].astype(np.int64) - t0[..., 0]) * 1_000_000_000
-             + (t1[..., 1] - t0[..., 1]))
-        med = np.median(d, axis=1)
+        med, spread, fenced = self._dispatch_ladder_entry(
+            entry, 1, n_scen, samples, stats)
         results = [self._observer_result(obs, buf, spec.iters,
-                                         float(max(med[k], 1.0)))
+                                         float(max(med[0, k], 1.0)))
                    for k in range(n_scen)]
         timing = {
             "timing_source": "device",
             "samples": samples,
-            "rung_time_spread_ns": [int(s) for s in
-                                    d.max(axis=1) - d.min(axis=1)],
+            "rung_time_spread_ns": [int(s) for s in spread[0]],
             "dispatches": 1,
+            "batched": False,
+            "group_size": 1,
+            "aot": aot,
         }
         return results, fenced, timing
 
@@ -888,7 +1060,7 @@ class CoreCoordinator:
                        buf: int, k: int, n_eng: int,
                        stats: "DispatchStats",
                        activity: str = "jnp",
-                       ) -> Tuple[WorkloadResult, bool, int]:
+                       ) -> Tuple[WorkloadResult, bool, int, bool]:
         """The legacy per-rung path: one rung, one fused program —
         all branches of a single ``shard_map`` dispatch whose measured
         region sits between the two psum barriers of
@@ -920,7 +1092,7 @@ class CoreCoordinator:
             # operands are fully determined by the cache key (chain
             # seeds are engine indices): reuse the placed arrays too —
             # no host-side rebuild, no repeated host->device transfer
-            _mesh, fn, fenced, xf, xi = entry
+            _mesh, fn, fenced, xf, xi, aot = entry
         else:
             xf, xi = _build_rung_operands(roles, n_eng, rows_max)
             branch_fns: List = []
@@ -934,11 +1106,6 @@ class CoreCoordinator:
                 engine_branch.append(branch_of[sig])
             mesh, fn = build_rung_program(n_eng, branch_fns,
                                           engine_branch)
-            # provenance records the VERIFIED fence state, not an
-            # assertion (compat.optimization_barrier degrades to
-            # identity on JAX releases without the op — there the psum
-            # folds away and this honestly reports unfenced)
-            fenced = measured_region_is_fenced(fn, xf, xi)
             # commit the operands onto the mesh BEFORE the measured
             # region: a host array would be re-transferred inside
             # every timed call, and the transfer (which scales with
@@ -949,10 +1116,27 @@ class CoreCoordinator:
             xf = jax.device_put(xf, sharding)
             xi = jax.device_put(xi, sharding)
             jax.block_until_ready((xf, xi))
+            # one trace serves the fence walk AND the AOT compile; the
+            # rung programs carry no host callbacks, so with a
+            # persistent cache enabled the compile is also reused
+            # across processes.  provenance records the VERIFIED fence
+            # state, not an assertion (compat.optimization_barrier
+            # degrades to identity on JAX releases without the op —
+            # there the psum folds away and this honestly reports
+            # unfenced)
+            traced = compat.aot_trace(fn, xf, xi)
+            fenced = measured_region_is_fenced(
+                fn, xf, xi, jaxpr=getattr(traced, "jaxpr", None))
+            compiled = compat.aot_compile(fn, xf, xi, traced=traced)
+            stats.programs_built += 1
+            if compiled is not None:
+                stats.aot_compiles += 1
+            aot = compiled is not None
+            fn = compiled if compiled is not None else fn
             self._program_cache_put(program_key,
-                                    [mesh, fn, fenced, xf, xi])
-        jax.block_until_ready(fn(xf, xi))          # compile + warm
-        samples = []
+                                    [mesh, fn, fenced, xf, xi, aot])
+        jax.block_until_ready(fn(xf, xi))          # warm (+ compile
+        samples = []                               # when not AOT-built)
         for _ in range(self.spmd_samples):
             t0 = _time.perf_counter_ns()
             jax.block_until_ready(fn(xf, xi))
@@ -962,7 +1146,7 @@ class CoreCoordinator:
         stats.spmd_rungs += 1
         elapsed = float(np.median(samples))
         res = self._observer_result(obs, buf, spec.iters, elapsed)
-        return res, fenced, int(max(samples) - min(samples))
+        return res, fenced, int(max(samples) - min(samples)), aot
 
 
 # ---------------------------------------------------------------------------
@@ -1006,14 +1190,26 @@ class DispatchStats:
     measure_dispatches: int = 0     # timed executable measurement passes
     model_evals: int = 0            # queueing-network solves
     spmd_rungs: int = 0             # ladder rungs executed on the mesh
-    # host-blocking spmd program executions: the fused ladder path does
-    # ONE per ladder (vs 4 per RUNG — warm + 3 timed — on the legacy
-    # path); benchmarks/perf_harness.py holds the fused path to it
+    # host-blocking spmd program executions: the sweep-batched path
+    # does ONE per same-signature ladder GROUP (~ one per distinct
+    # program signature per sweep), the fused ladder path one per
+    # ladder, the legacy path 4 per RUNG (warm + 3 timed);
+    # benchmarks/perf_harness.py holds each contender to its number
     host_sync_dispatches: int = 0
     # compiled spmd programs (+ placed operands) reused from the
     # coordinator-level LRU cache — across rungs, ladders, AND
     # back-to-back run_matrix calls on one coordinator
     program_cache_hits: int = 0
+    # sweep-level megabatching: distinct role-program signatures this
+    # run stacked ladders under (0 on the non-batched paths)
+    spmd_groups: int = 0
+    # spmd programs actually traced + compiled this run (cache
+    # misses), and how many of those went through the AOT
+    # lower().compile() pipeline (compat.aot_compile) — together with
+    # host_sync_dispatches these make the dispatch-vs-compile
+    # attribution in BENCH_spmd.json explicit
+    programs_built: int = 0
+    aot_compiles: int = 0
 
 
 @dataclass
@@ -1466,7 +1662,7 @@ def build_scenario_program(n_engines: int, n_stressors: int,
 # ---------------------------------------------------------------------------
 
 
-def measured_region_is_fenced(fn, *example_args) -> bool:
+def measured_region_is_fenced(fn, *example_args, jaxpr=None) -> bool:
     """Does the measured output depend — through DATAFLOW, not just
     program order — on the start-barrier psum?
 
@@ -1492,8 +1688,13 @@ def measured_region_is_fenced(fn, *example_args) -> bool:
     step itself to pass — the step's first output is the loop carry,
     which by construction value-consumes the stop barrier and stamp,
     so verifying the body verifies EVERY scanned rung sample (one body
-    serves all steps structurally)."""
-    closed = jax.make_jaxpr(fn)(*example_args)
+    serves all steps structurally) — including every ladder of a
+    sweep-batched stacked program, whose scan table merely gains a
+    leading scenario axis.  Pass ``jaxpr=`` (a ClosedJaxpr, e.g. from
+    ``compat.aot_trace(fn, *args).jaxpr``) to reuse an existing trace
+    instead of paying a second one here."""
+    closed = jaxpr if jaxpr is not None \
+        else jax.make_jaxpr(fn)(*example_args)
     bodies = _shard_map_bodies(closed.jaxpr)
     if not bodies:
         return False

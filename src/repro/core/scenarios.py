@@ -207,6 +207,61 @@ class ScenarioSpec:
         """All measured activities, primary first."""
         return (self.observer,) + self.co_observers
 
+    def coupled_siblings(self,
+                         observer: ObserverSpec) -> Tuple[ObserverSpec, ...]:
+        """The sibling observers sharing ``observer``'s measured region
+        (empty when the scenario is uncoupled).  Drops exactly ONE
+        occurrence of the measured observer — by identity when it is
+        one of this spec's own entries (so value-equal twins still see
+        each other), by value for reconstructed/deserialized equal
+        observers."""
+        if not self.coupled:
+            return ()
+        rest = list(self.observers)
+        for i, o in enumerate(rest):
+            if o is observer:
+                del rest[i]
+                break
+        else:
+            for i, o in enumerate(rest):
+                if o == observer:
+                    del rest[i]
+                    break
+        return tuple(rest)
+
+    # -- cross-ladder grouping (sweep-level megabatching) -------------------
+    def role_pools(self, observer: ObserverSpec) -> Tuple[str, ...]:
+        """Every pool a ladder of this (spec, observer) pair can place
+        an engine's operands in, in role order: the observer first (idle
+        engines share its pool), then coupled siblings, then the
+        stressor ensemble."""
+        return (observer.pool,
+                *(o.pool for o in self.coupled_siblings(observer)),
+                *(s.pool for s in self.stressors))
+
+    def ladder_signature(self, observer: ObserverSpec,
+                         buffer_bytes: int) -> Tuple:
+        """Hashable *role-program* identity of this (spec, observer,
+        buffer) ladder, for sweep-level grouping: two triples with equal
+        signatures AND equal per-pool effective memory kinds (see
+        :meth:`role_pools`) expand to identical per-rung role tables at
+        any mesh size, so their ladders legally stack into ONE batched
+        SPMD dispatch.  Pool *names* are deliberately absent — pools
+        that differ only in name but land in the same physical memory
+        merge, exactly like the interpret path's signature groups;
+        anything that changes the compiled program or the stamped
+        numbers (strategies, shapes, buffer sizes, iteration budgets,
+        ladder depth, sibling coupling) splits."""
+        return (
+            (observer.strategy, observer.shape, int(buffer_bytes)),
+            tuple((o.strategy, o.shape, o.buffers[0])
+                  for o in self.coupled_siblings(observer)),
+            tuple((s.strategy, s.shape, s.buffer_bytes)
+                  for s in self.stressors),
+            self.iters,
+            self.max_stressors,
+        )
+
     # -- CurveDB keying ------------------------------------------------------
     def _stress_key(self) -> str:
         if self.stressors:

@@ -125,6 +125,48 @@ def test_donation_supported_probe():
     assert compat.donation_supported() == compat.donation_supported()
 
 
+def test_aot_trace_and_compile_shims():
+    """The AOT pipeline shims: one trace feeds both the jaxpr consumer
+    (the fence checker) and lower().compile(); the compiled executable
+    computes the same values; non-stageable callables degrade to None
+    instead of raising."""
+    f = jax.jit(lambda x: x * 2 + 1)
+    x = jnp.ones((8,))
+    traced = compat.aot_trace(f, x)
+    if traced is not None:
+        assert hasattr(traced, "jaxpr")
+    compiled = compat.aot_compile(f, x, traced=traced)
+    if compiled is None:
+        pytest.skip("no AOT lower/compile pipeline on this install")
+    np.testing.assert_allclose(np.asarray(compiled(x)),
+                               3.0 * np.ones(8))
+    # a bare Python callable has no AOT stages: None, not an exception
+    assert compat.aot_trace(lambda v: v, x) is None
+    assert compat.aot_compile(lambda v: v, x) is None
+
+
+def test_persistent_cache_shim(tmp_path):
+    """compat.persistent_cache enables JAX's on-disk compile cache (and
+    reports honestly whether it took effect): a freshly-compiled
+    callback-free program lands in the directory."""
+    import os
+
+    old = getattr(jax.config, "jax_compilation_cache_dir", None)
+    enabled = compat.persistent_cache(str(tmp_path))
+    try:
+        assert enabled in (True, False)
+        if not enabled:
+            pytest.skip("persistent compilation cache unavailable")
+        x = jnp.ones((32, 32))
+        jax.block_until_ready(jax.jit(lambda v: v @ v + 1.75)(x))
+        assert any(n.endswith("-cache") for n in os.listdir(tmp_path))
+    finally:
+        try:
+            jax.config.update("jax_compilation_cache_dir", old)
+        except Exception:
+            pass
+
+
 # ---------------------------------------------------------------------------
 # Drift lint: grep the tree for version-sensitive symbols
 # ---------------------------------------------------------------------------
@@ -157,6 +199,13 @@ _FORBIDDEN = [
     # io_callback graduated from host_callback and its fill semantics
     # are backend-dependent; compat.device_clock is the only consumer
     r"\bio_call" + r"back\b",
+    # the persistent compilation cache's config spellings drifted
+    # (config keys on current JAX, compilation_cache.set_cache_dir on
+    # older); compat.persistent_cache is the only allowed consumer
+    r"jax_compilation_" + r"cache_dir",
+    r"jax_persistent_" + r"cache_min",
+    r"\bset_cache_" + r"dir\b",
+    r"jax\.experimental\.compilation_" + r"cache",
 ]
 
 _SCAN_DIRS = ("src", "tests", "benchmarks", "examples")

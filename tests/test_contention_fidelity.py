@@ -483,6 +483,100 @@ def test_fused_vs_per_rung_curve_equivalence():
     """)
 
 
+def test_batched_sweep_equivalence_and_accounting():
+    """Sweep-level megabatching (ISSUE 5): a mixed sweep whose ladders
+    repeat a role-program signature costs ONE host-synchronous dispatch
+    per distinct signature — and produces curves IDENTICAL in keys,
+    resolved strategies, bytes and fence state to the same sweep with
+    batching off (one fused dispatch per ladder)."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+    K = 2
+
+    def mk(name, pool, iters):
+        return ScenarioSpec(name, ObserverSpec("r", pool, (BUF,)),
+                            (StressorSpec("w", "hbm", BUF),),
+                            iters=iters, max_stressors=K)
+
+    # 4 ladders, 2 distinct signatures: hbm/host observers share one
+    # effective memory kind on this container (so they stack), while
+    # differing iteration budgets MUST split
+    specs = [mk("a", "hbm", 3), mk("b", "host", 3),
+             mk("c", "hbm", 5), mk("d", "host", 5)]
+    n_dev = len(jax.devices())
+    depth = max(1, min(K + 1, n_dev))
+
+    c = CoreCoordinator(backend="spmd")
+    bat = c.run_matrix(specs)
+    st = bat.stats
+    assert st.n_ladders == 4
+    assert st.spmd_groups == 2
+    assert st.host_sync_dispatches == 2        # one per SIGNATURE
+    assert st.measure_dispatches == 2
+    assert st.spmd_rungs == 4 * depth          # every rung executed
+    assert st.programs_built == 2              # one program per group
+    for run in bat.runs:
+        ex = run.execution
+        assert ex["batched"] is True
+        assert ex["group_size"] == 2
+        assert ex["timing_source"] == "device"
+        assert ex["dispatches"] == 1
+        assert ex["fenced"]
+        assert isinstance(ex["aot"], bool)
+
+    # batching off: same coordinator API, one fused dispatch per ladder
+    unb = CoreCoordinator(backend="spmd").run_matrix(specs,
+                                                     batched=False)
+    assert unb.stats.host_sync_dispatches == 4   # one per LADDER
+    assert unb.stats.spmd_groups == 0
+    assert [r.key for r in bat.runs] == [r.key for r in unb.runs]
+    for rb, ru in zip(bat.runs, unb.runs):
+        assert ru.execution["batched"] is False
+        assert ru.execution["group_size"] == 1
+        assert ru.execution["fenced"]
+        assert rb.execution["executed_rungs"] \
+            == ru.execution["executed_rungs"]
+        for sb, su in zip(rb.scenarios, ru.scenarios):
+            assert sb.source == su.source == "executed"
+            assert sb.main.strategy == su.main.strategy
+            assert sb.main.bytes_moved == su.main.bytes_moved
+            assert sb.main.elapsed_ns > 0 and su.main.elapsed_ns > 0
+    print("batched equivalence OK on", n_dev, "devices")
+    """)
+
+
+def test_lru_eviction_deletes_operand_buffers():
+    """Satellite regression: the spmd program cache cap is a MEMORY
+    bound — evicting an entry must delete its placed operand device
+    buffers eagerly, not just drop the dict reference (a capped cache
+    must not pin device memory for programs it no longer holds)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.coordinator import CoreCoordinator
+
+    c = CoreCoordinator(backend="simulate", spmd_cache_cap=1)
+
+    def entry():
+        xf = jax.device_put(jnp.ones((4, 4), jnp.float32))
+        xi = jax.device_put(jnp.zeros((4, 4), jnp.int32))
+        return [None, None, True, xf, xi, False]
+
+    e1, e2 = entry(), entry()
+    c._program_cache_put(("k1",), e1)
+    c._program_cache_put(("k2",), e2)
+    assert list(c._spmd_programs) == [("k2",)]
+    # the evicted entry's device buffers are gone NOW, not at GC time
+    assert e1[3].is_deleted() and e1[4].is_deleted()
+    # the resident entry's buffers are untouched
+    assert not e2[3].is_deleted() and not e2[4].is_deleted()
+
+
 def test_program_cache_reuse_across_run_matrix():
     """The spmd program cache lives on the COORDINATOR: a second
     run_matrix call reuses every compiled program (and its placed,
@@ -500,15 +594,35 @@ def test_program_cache_reuse_across_run_matrix():
         (StressorSpec("w", "hbm", BUF),), iters=3, max_stressors=2)
 
     depth = max(1, min(3, len(jax.devices())))
-    for mode, n_programs in (("ladder", 1), ("rung", depth)):
+    for mode, n_programs in (("batched", 1), ("ladder", 1),
+                             ("rung", depth)):
         c = CoreCoordinator(backend="spmd", spmd_dispatch=mode)
         first = c.run_matrix([spec])
         assert first.stats.program_cache_hits == 0
+        assert first.stats.programs_built == n_programs
         again = c.run_matrix([spec])
         # every program the second run needs is already cached: ONE
-        # whole-ladder program, or one per rung on the legacy path
+        # stacked/whole-ladder program, or one per rung on the legacy
+        # path
         assert again.stats.program_cache_hits == n_programs
+        assert again.stats.programs_built == 0
         for run in again.runs:
+            assert run.execution["fenced"]
+            for s in run.scenarios:
+                assert s.main.elapsed_ns > 0
+
+    # spmd_cache_cap=1 under eviction churn (the per-rung path needs
+    # `depth` programs): every eviction must delete the evicted
+    # operand buffers, execution must stay correct, and the single
+    # resident entry must keep live buffers
+    c1 = CoreCoordinator(backend="spmd", spmd_dispatch="rung",
+                         spmd_cache_cap=1)
+    for _ in range(2):
+        r1 = c1.run_matrix([spec])
+        assert len(c1._spmd_programs) == 1
+        live = next(iter(c1._spmd_programs.values()))
+        assert not live[3].is_deleted() and not live[4].is_deleted()
+        for run in r1.runs:
             assert run.execution["fenced"]
             for s in run.scenarios:
                 assert s.main.elapsed_ns > 0

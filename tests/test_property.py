@@ -164,6 +164,80 @@ def test_traffic_shape_tag_injective(data):
 
 
 # ---------------------------------------------------------------------------
+# Sweep-level grouping: the ladder signature determines the role tables
+# ---------------------------------------------------------------------------
+
+
+@FAST
+@given(
+    ostrat=st.sampled_from(["r", "w", "l", "c"]),
+    sstrat=st.sampled_from(["r", "w", "y"]),
+    obs_pool=st.sampled_from(["hbm", "host"]),
+    stress_pool=st.sampled_from(["hbm", "host"]),
+    iters=st.integers(1, 40),
+    buf_kb=st.sampled_from([64, 128, 256]),
+    duty=st.sampled_from([1.0, 0.5, 0.25]),
+    max_stressors=st.integers(1, 3),
+    n_eng=st.sampled_from([2, 4, 8]),
+)
+def test_ladder_signature_determines_role_tables(
+        ostrat, sstrat, obs_pool, stress_pool, iters, buf_kb, duty,
+        max_stressors, n_eng):
+    """Megabatching soundness: ``ladder_signature`` is (a) a pure
+    function of the role-relevant fields — a dict-round-tripped spec
+    signs identically, pool renames don't change it — and (b) a
+    sufficient statistic for the per-rung role tables: two specs with
+    equal signatures expand to identical (strategy, shape, rows,
+    iters) tables at every mesh size; perturbing iters or the buffer
+    always changes the signature."""
+    import json as _json
+
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec, TrafficShape)
+
+    buf = buf_kb << 10
+    shape = (TrafficShape.steady() if duty == 1.0
+             else TrafficShape.burst(duty))
+    spec = ScenarioSpec(
+        "sig", ObserverSpec(ostrat, obs_pool, (buf,), shape),
+        (StressorSpec(sstrat, stress_pool, buf),),
+        iters=iters, max_stressors=max_stressors)
+    sig = spec.ladder_signature(spec.observer, buf)
+
+    # (a) purity: serialization round-trip signs identically; a pool
+    # rename (same roles) signs identically too
+    back = ScenarioSpec.from_dict(_json.loads(_json.dumps(
+        spec.to_dict())))
+    assert back.ladder_signature(back.observer, buf) == sig
+    other_pool = "host" if obs_pool == "hbm" else "hbm"
+    renamed = ScenarioSpec(
+        "ren", ObserverSpec(ostrat, other_pool, (buf,), shape),
+        (StressorSpec(sstrat, stress_pool, buf),),
+        iters=iters, max_stressors=max_stressors)
+    assert renamed.ladder_signature(renamed.observer, buf) == sig
+
+    # (b) equal signature => identical role tables at every mesh size
+    coord = CoreCoordinator(backend="simulate")
+    for k in range(min(max_stressors + 1, n_eng)):
+        roles_a, _pa = coord._rung_roles(spec, spec.observer, buf, k,
+                                         n_eng)
+        roles_b, _pb = coord._rung_roles(back, back.observer, buf, k,
+                                         n_eng)
+        roles_c, _pc = coord._rung_roles(renamed, renamed.observer,
+                                         buf, k, n_eng)
+        assert roles_a == roles_b == roles_c
+
+    # role-relevant perturbations always split
+    assert ScenarioSpec(
+        "it", ObserverSpec(ostrat, obs_pool, (buf,), shape),
+        (StressorSpec(sstrat, stress_pool, buf),),
+        iters=iters + 1, max_stressors=max_stressors,
+    ).ladder_signature(spec.observer, buf) != sig
+    assert spec.ladder_signature(spec.observer, 2 * buf) != sig
+
+
+# ---------------------------------------------------------------------------
 # CurveDB v2: save -> load -> save is byte-idempotent (execution incl.)
 # ---------------------------------------------------------------------------
 

@@ -371,6 +371,92 @@ def test_batched_runner_fewer_dispatches_64():
         assert run.scenarios[0].main.elapsed_ns > 0
 
 
+def test_ladder_signature_grouping_never_merges_distinct_roles():
+    """Sweep-level grouping soundness (ISSUE-5 satellite), on a concrete
+    grid: any two (spec, observer, buffer) triples landing in one
+    `_spmd_group_key` group must expand to IDENTICAL per-rung role
+    tables at every mesh size, identical iteration budgets, and
+    identical effective memory kinds — and every role-relevant field
+    (strategy, shape, buffer, iters) must split groups.  Pools that
+    differ only in name but share one effective memory kind are the
+    ONLY legal merge."""
+    coord = CoreCoordinator(backend="simulate")
+    specs = []
+    for strat in ("r", "w"):
+        for pool in ("hbm", "host"):
+            for iters in (5, 9):
+                for shape in (TrafficShape.steady(),
+                              TrafficShape.burst(0.5)):
+                    for buf in (64 << 10, 128 << 10):
+                        specs.append(ScenarioSpec(
+                            f"g.{strat}.{pool}.{iters}."
+                            f"{shape.tag() or 'steady'}.{buf}",
+                            ObserverSpec(strat, pool, (buf,), shape),
+                            (StressorSpec("w", "hbm", 64 << 10),),
+                            iters=iters, max_stressors=2))
+    triples = [(s, o, b) for s in specs for o in s.observers
+               for b in o.buffers]
+    groups = {}
+    for t in triples:
+        groups.setdefault(coord._spmd_group_key(*t), []).append(t)
+
+    kinds_equal = (coord.pools.pool("hbm").effective_memory_kind()
+                   == coord.pools.pool("host").effective_memory_kind())
+    # 2 strategies x 2 iters x 2 shapes x 2 buffers always split; the
+    # pool axis merges exactly when the effective kinds agree
+    assert len(groups) == (16 if kinds_equal else 32)
+    for members in groups.values():
+        ref = members[0]
+        for m in members[1:]:
+            assert ref[0].iters == m[0].iters
+            for n_eng in (2, 4):
+                for k in range(min(3, n_eng)):
+                    roles_ref, pools_ref = coord._rung_roles(
+                        ref[0], ref[1], ref[2], k, n_eng)
+                    roles_m, pools_m = coord._rung_roles(
+                        m[0], m[1], m[2], k, n_eng)
+                    assert roles_ref == roles_m     # identical tables
+                    assert [coord.pools.pool(p).effective_memory_kind()
+                            for p in pools_ref] \
+                        == [coord.pools.pool(p).effective_memory_kind()
+                            for p in pools_m]
+
+
+def test_ladder_signature_covers_siblings_and_stressors():
+    """The signature must split on everything outside the observer too:
+    stressor ensembles, sibling observers, coupling, max_stressors."""
+    BUF2 = 64 << 10
+    obs = ObserverSpec("r", "hbm", (BUF2,))
+    base = ScenarioSpec("base", obs, (StressorSpec("w", "hbm", BUF2),),
+                        iters=5, max_stressors=2)
+    sig = base.ladder_signature(obs, BUF2)
+    # different stressor strategy / shape / buffer
+    for s in (StressorSpec("y", "hbm", BUF2),
+              StressorSpec("w", "hbm", BUF2, TrafficShape.burst(0.5)),
+              StressorSpec("w", "hbm", 2 * BUF2)):
+        other = ScenarioSpec("o", obs, (s,), iters=5, max_stressors=2)
+        assert other.ladder_signature(obs, BUF2) != sig
+    # a coupled sibling changes the signature; uncoupling removes it
+    sib = ObserverSpec("l", "hbm", (BUF2,))
+    multi = ScenarioSpec("m", (obs, sib),
+                         (StressorSpec("w", "hbm", BUF2),),
+                         iters=5, max_stressors=2)
+    assert multi.ladder_signature(obs, BUF2) != sig
+    unc = ScenarioSpec("u", (obs, sib), (StressorSpec("w", "hbm", BUF2),),
+                       iters=5, max_stressors=2, coupled=False)
+    assert unc.ladder_signature(obs, BUF2) == sig
+    # ladder depth is part of the identity
+    deeper = ScenarioSpec("d", obs, (StressorSpec("w", "hbm", BUF2),),
+                          iters=5, max_stressors=3)
+    assert deeper.ladder_signature(obs, BUF2) != sig
+    # ...and pool names are deliberately NOT (the kind refinement in
+    # _spmd_group_key handles placement)
+    hosted = ScenarioSpec("h", ObserverSpec("r", "host", (BUF2,)),
+                          (StressorSpec("w", "hbm", BUF2),),
+                          iters=5, max_stressors=2)
+    assert hosted.ladder_signature(hosted.observer, BUF2) == sig
+
+
 def test_multi_observer_spec_roundtrip_and_keys():
     """A tuple of observers normalizes into observer + co_observers,
     round-trips through dicts, and keys one curve per observer."""

@@ -141,6 +141,86 @@ def test_ladder_program_executes_with_monotone_clock():
     assert (start[1:] >= stop[:-1]).all()       # samples serialized
 
 
+def test_stacked_ladder_program_is_fenced_and_times_per_ladder():
+    """The sweep-batched STACKED program — the fused ladder's scan
+    table tiled with a leading scenario axis (G ladders x K rungs) —
+    still verifies structurally (one scanned body serves every rung of
+    every stacked ladder), and its stamp pairs decode per (ladder,
+    rung, sample) with every sample bracketed and the whole stack
+    serialized (ladder g+1 cannot open before ladder g retired:
+    invariant 4 across the group)."""
+    G, K, S = 3, 2, 2
+    # rung 0 is cheap, rung 1 deliberately orders of magnitude
+    # heavier: the (G, K, S) decode is only correct if the flat scan
+    # order really is ladder-major, which the cost asymmetry makes
+    # observable above clock/dispatch noise
+    fns = [_spmd_branch_fn("r", None, ROWS, 2),
+           _spmd_branch_fn("r", None, ROWS, 50_000)]
+    table = np.tile(np.asarray([[0], [1]], np.int32), (G, 1))
+    _mesh, f = build_ladder_program(1, fns, table, samples=S)
+    assert measured_region_is_fenced(f, *_operands(1))
+    if compat.device_clock_source() == "none":
+        return                       # structure verified; no stamps
+    xf, xi = _operands(1)
+    outs, t0s, t1s, xf2, xi2 = f(xf, xi)
+    assert np.isfinite(np.asarray(outs)).all()
+    t0 = np.asarray(t0s)[0].astype(np.int64)
+    t1 = np.asarray(t1s)[0].astype(np.int64)
+    assert t0.shape == (G * K * S, 2)
+    start = t0[:, 0] * 10**9 + t0[:, 1]
+    stop = t1[:, 0] * 10**9 + t1[:, 1]
+    assert (stop > start).all()                 # every sample bracketed
+    assert (start[1:] >= stop[:-1]).all()       # stack fully serialized
+    # ladder-major order, for real: decoded as (G, K, S) like the
+    # coordinator does, EVERY stacked ladder must show its heavy rung
+    # heavier than its cheap rung (a rung-major flat order — e.g.
+    # np.repeat instead of np.tile in the builder — interleaves the
+    # costs and breaks this for G != K)
+    d = (stop - start).reshape(G, K, S)
+    med = np.median(d, axis=2)                  # (G, K)
+    assert (med[:, 1] > med[:, 0]).all(), med
+
+
+def test_stacked_checker_rejects_unfenced_stacked_scan():
+    """Negative: a stacked multi-ladder scan whose steps carry no psum
+    sandwich (or only an advisory one) must NOT verify — batching
+    ladders must not dilute the fence requirement."""
+    mesh = compat.make_mesh_from_devices(jax.devices()[:1], ("engine",))
+    G, K = 3, 2
+
+    def advisory_stack(xf, xi):
+        xf, xi = xf[0], xi[0]
+
+        def step(carry, _):
+            ready = jax.lax.psum(xf[0, 0], "engine")   # nothing uses it
+            out = jnp.sum(xf) + carry
+            return carry + 1.0, (out, ready)
+
+        _c, (outs, _r) = jax.lax.scan(step, jnp.float32(0.0),
+                                      jnp.arange(G * K))
+        return outs[None]
+
+    f = compat.shard_map(advisory_stack, mesh=mesh,
+                         in_specs=(P("engine"), P("engine")),
+                         out_specs=P("engine", None))
+    assert not measured_region_is_fenced(f, *_operands(1))
+
+
+def test_fence_check_accepts_pretraced_jaxpr():
+    """The single-trace AOT pipeline hands the checker an existing
+    ClosedJaxpr (compat.aot_trace) instead of paying a second
+    make_jaxpr trace; both spellings must agree."""
+    fns = [_spmd_branch_fn("r", None, ROWS, 2)]
+    _mesh, f = build_rung_program(1, fns, [0])
+    xf, xi = _operands(1)
+    traced = compat.aot_trace(f, xf, xi)
+    if traced is None:
+        pytest.skip("no AOT Traced stage on this install")
+    assert measured_region_is_fenced(f, jaxpr=traced.jaxpr)
+    assert measured_region_is_fenced(f, xf, xi) \
+        == measured_region_is_fenced(f, jaxpr=traced.jaxpr)
+
+
 def test_ladder_checker_rejects_unfenced_scan():
     """A scanned ladder whose steps carry no psum sandwich (or only an
     advisory one nothing depends on) must NOT verify."""
