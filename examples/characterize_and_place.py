@@ -3,17 +3,20 @@
   1. characterize every (pool x strategy x contention) performance curve,
   2. hand the curve database to the PlacementAdvisor,
   3. place a serving workload's memory objects (params, KV cache) under
-     two contention assumptions and watch the decision flip.
+     two contention assumptions and watch the decision flip,
+  4. sweep a full bandwidth–latency surface (CurveDB v3) and query it
+     at the decode workload's actual traffic coordinates.
 
     PYTHONPATH=src python examples/characterize_and_place.py
 """
 from repro.configs.base import get_config
-from repro.core.characterize import CurveDB, characterize, mlp_table
+from repro.core.characterize import (CurveDB, characterize,
+                                     characterize_surface, mlp_table)
 from repro.core.coordinator import CoreCoordinator
 from repro.core.placement import (ContentionSpec, MemObject,
                                   PlacementAdvisor, kv_cache_object,
                                   params_object)
-from repro.serve.engine import cache_bytes
+from repro.serve.engine import cache_bytes, decode_rw_mix
 
 coord = CoreCoordinator(backend="simulate")
 
@@ -49,3 +52,23 @@ for label, contention in (
     print(plan.report())
     print(f"   predicted step total: "
           f"{plan.total_predicted_ns() / 1e6:.2f} ms")
+
+print("\n== 4. bandwidth-latency surface (CurveDB v3) ==")
+sdb = characterize_surface(coord, pools=["hbm", "host"],
+                           stress_pools=["hbm"], iters=100)
+key, surf = next(iter(sorted(sdb.surfaces.items())))
+print(f"surfaces: {len(sdb.surfaces)}; {key.to_string()!r} grid shape "
+      f"{surf.shape} (n_stressors x rw_ratio x inject_rate)")
+mix = decode_rw_mix(batch=32, max_len=32768)
+q = sdb.query("hbm", 3, stress_strat="b", rw_ratio=mix, inject_rate=0.8)
+print(f"decode mix rw={mix:.3f}, 3 stressors at 80% duty -> "
+      f"{q.bandwidth_gbps:.1f} GB/s "
+      f"(interpolated; extrapolated={q.extrapolated})")
+q_off = sdb.query("hbm", 99, stress_strat="b")
+print(f"off-grid (99 stressors) -> {q_off.bandwidth_gbps:.1f} GB/s, "
+      f"flagged extrapolated={q_off.extrapolated}")
+adv_s = PlacementAdvisor(sdb, coord.platform)
+plan = adv_s.advise([kv], ContentionSpec(3, "hbm", "b", rw_ratio=mix),
+                    capacities=dict(caps))
+print("placement at the decode surface coordinates:")
+print(plan.report())

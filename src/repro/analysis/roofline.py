@@ -99,18 +99,38 @@ def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
     return 2.0 * n_active * shape.global_batch
 
 
+# Read share of HBM line-touches per workload kind, for the surface's
+# rw_ratio axis.  Train streams parameters+activations forward and
+# writes gradients/optimizer state back (~2 reads per write); prefill
+# reads weights and writes the full KV prefix; decode reads the whole
+# cache + weights every token and writes a single KV slot.
+WORKLOAD_RW_MIX = {"train": 2.0 / 3.0, "prefill": 0.75, "decode": 0.9}
+
+
+def workload_rw_mix(shape) -> float:
+    """The ``rw_ratio`` surface coordinate of a workload
+    :class:`~repro.configs.base.ShapeSpec` (by its ``kind``)."""
+    return WORKLOAD_RW_MIX.get(getattr(shape, "kind", ""), 2.0 / 3.0)
+
+
 def effective_hbm_bw(curve_db, *, n_stressors: int = 0,
                      stress_pool: str = "hbm", stress_strategy: str = "w",
-                     shape_tag: str = "") -> float:
+                     shape_tag: str = "",
+                     rw_ratio: Optional[float] = None,
+                     inject_rate: Optional[float] = None) -> float:
     """HBM bandwidth under characterized contention, bytes/s.
 
-    Consumes a CurveDB (v1 or v2; v2 resolves shaped-stress curves by
-    tag): the roofline's memory term is only honest under load if it
-    uses the *effective* bandwidth the characterization measured, not
-    the datasheet peak."""
+    Consumes a CurveDB (v1/v2/v3): the roofline's memory term is only
+    honest under load if it uses the *effective* bandwidth the
+    characterization measured, not the datasheet peak.  On a v3
+    surface database pass ``rw_ratio`` — e.g.
+    ``workload_rw_mix(shape)`` for the workload's actual read/write
+    mix — and ``inject_rate`` to interpolate the surface at the
+    workload's real traffic coordinates."""
     bw_gbps = curve_db.effective_bw(
         "hbm", n_stressors, stress_pool=stress_pool,
-        stress_strat=stress_strategy, shape_tag=shape_tag)
+        stress_strat=stress_strategy, shape_tag=shape_tag,
+        rw_ratio=rw_ratio, inject_rate=inject_rate)
     return bw_gbps * 1e9
 
 

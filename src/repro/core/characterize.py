@@ -1,34 +1,63 @@
-"""Characterization driver — performance curves + Little's-law MLP.
+"""Characterization driver — bandwidth–latency surfaces + Little's-law MLP.
 
-v2: scenarios are declarative (:mod:`repro.core.scenarios`).  The
-default matrix reproduces the seed's ladder cross-product (obs pool x
-obs strategy x stress pool x stress strategy) and extends it with the
-new traffic shapes (mixed read/write ratios, bursty/duty-cycled stress,
-copy streams, strided chases).  Execution goes through the coordinator's
-batched matrix runner — same-signature observers collapse into one
-jit'd vmapped measured pass per group.
+v3: the paper's curves are 1-D slices of the object that actually
+predicts application behaviour — the **bandwidth–latency surface**
+swept over read/write ratio and injection rate ("A Mess of Memory
+System Benchmarking").  This module stores that object directly:
 
-Results persist as a **versioned CurveDB** (schema 2): besides the
-per-scenario curves it records each curve's full scenario provenance
-(strategy letters, shape parameters, buffer sizes), so a curve file is
-self-describing and replayable.  Schema-1 files (the seed format) still
-load.  The CurveDB is the contract consumed by
-:mod:`repro.core.placement`, :mod:`repro.analysis.roofline` and the
-``benchmarks/fig*`` scripts.
+* :class:`SurfaceAxis` / :class:`SurfaceCoord` — named, ordered
+  coordinates (``n_stressors``, ``rw_ratio`` from ``TrafficShape.mix``,
+  ``inject_rate`` from ``duty_cycle``).
+* :class:`Surface` — a dense point grid over those axes with
+  multilinear interpolation; queries beyond the characterized grid
+  clamp to the nearest edge and are *flagged* as extrapolated.
+* :class:`SurfaceKey` — the typed curve identity
+  ``(obs_pool, obs_strat, stress_pool, stress_strat)`` that replaces
+  the flat ``"pool:strat|pool:strat@tag"`` string-key scheme.  Legacy
+  spellings survive only as a serialisation detail inside this class;
+  consumers (placement, roofline, simulate, serve) query through the
+  coordinate API and never string-split keys (enforced by a grep lint
+  in the test suite).
+
+Results persist as a **versioned CurveDB** (schema 3): surfaces keyed
+by :class:`SurfaceKey` with per-surface provenance.  Schema-1 (seed)
+and schema-2 files still load — each old curve becomes a 1-axis
+surface — and a v3 database still *saves* as schema 2 for downgrade
+(multi-axis surfaces slice back into tagged per-shape curves).
+
+Execution goes through the coordinator's batched matrix runner;
+:func:`characterize_surface` emits the rf x dc x stressor-count grid
+and records the :class:`DispatchStats` proof that the sweep compiled
+to one stacked dispatch per distinct ladder signature.
 """
 from __future__ import annotations
 
 import json
+from bisect import bisect_right
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from itertools import product
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.coordinator import CoreCoordinator, MatrixResult
 from repro.core.devicetree import Platform
-from repro.core.scenarios import (SCHEMA_VERSION, ObserverSpec, ScenarioSpec,
-                                  StressorSpec, TrafficShape,
-                                  scenario_matrix)
+from repro.core.scenarios import (DEFAULT_INJECT_RATES, DEFAULT_RW_RATIOS,
+                                  ObserverSpec, ScenarioSpec, StressorSpec,
+                                  TrafficShape, surface_matrix)
 
-Key = Tuple[str, str, str, str]   # (obs_pool, obs_strat, stress_pool, stress_strat)
+#: CurveDB on-disk schema written by default (see CurveDB.save).
+CURVEDB_SCHEMA = 3
+
+#: Canonical axis names, in canonical grid order.
+AXIS_N = "n_stressors"
+AXIS_RW = "rw_ratio"
+AXIS_IR = "inject_rate"
+
+#: rw_ratio a pure-strategy stressor sits at on the surface's mix axis:
+#: read-side strategies are the rw=1 edge, write/writeback streams the
+#: rw=0 edge, copy/mixed streams the midpoint.  This is what lets ONE
+#: measured surface answer queries phrased in legacy stressor letters.
+STRATEGY_RW_RATIO = {"r": 1.0, "s": 1.0, "l": 1.0, "m": 1.0, "t": 1.0,
+                     "w": 0.0, "x": 0.0, "y": 0.0, "c": 0.5, "b": 0.5}
 
 
 @dataclass
@@ -38,86 +67,440 @@ class CurvePoint:
     latency_ns: float
 
 
+# ---------------------------------------------------------------------------
+# The coordinate system
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SurfaceAxis:
+    """One named, ordered surface axis (strictly ascending grid values)."""
+    name: str
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        vals = tuple(float(v) for v in self.values)
+        object.__setattr__(self, "values", vals)
+        if not vals:
+            raise ValueError(f"axis {self.name!r} needs at least one value")
+        if any(b <= a for a, b in zip(vals, vals[1:])):
+            raise ValueError(
+                f"axis {self.name!r} values must be strictly ascending: "
+                f"{vals}")
+
+    def locate(self, v: float) -> Tuple[int, int, float, bool]:
+        """Bracketing indices + interpolation fraction for ``v``:
+        ``(lo, hi, t, clamped)``.  Out-of-range coordinates clamp to
+        the nearest edge with ``clamped=True`` — the caller surfaces
+        that as an *extrapolated* query instead of silently returning
+        the edge point (the seed's ``min(n, len-1)`` bug)."""
+        vals = self.values
+        if v <= vals[0]:
+            return 0, 0, 0.0, v < vals[0]
+        if v >= vals[-1]:
+            last = len(vals) - 1
+            return last, last, 0.0, v > vals[-1]
+        hi = bisect_right(vals, v)
+        lo = hi - 1
+        t = (v - vals[lo]) / (vals[hi] - vals[lo])
+        return lo, hi, t, False
+
+
+@dataclass(frozen=True)
+class SurfaceCoord:
+    """A named point in surface coordinate space (ordered name/value
+    pairs).  Build with :meth:`of`; ``None`` values are dropped so
+    callers can pass optional coordinates straight through."""
+    coords: Tuple[Tuple[str, float], ...] = ()
+
+    @staticmethod
+    def of(**kw: Optional[float]) -> "SurfaceCoord":
+        return SurfaceCoord(tuple((k, float(v)) for k, v in kw.items()
+                                  if v is not None))
+
+    def get(self, name: str) -> Optional[float]:
+        for k, v in self.coords:
+            if k == name:
+                return v
+        return None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(k for k, _ in self.coords)
+
+    def to_dict(self) -> Dict[str, float]:
+        return dict(self.coords)
+
+
+@dataclass(frozen=True)
+class SurfaceQuery:
+    """One interpolated surface reading.  ``extrapolated`` is True when
+    any coordinate fell outside the characterized grid (nearest-edge
+    clamp), or when the query asked for an axis the resolved surface
+    does not carry (legacy fallback)."""
+    bandwidth_gbps: float
+    latency_ns: float
+    extrapolated: bool
+    coord: SurfaceCoord = SurfaceCoord()
+
+
+@dataclass(frozen=True, order=True)
+class SurfaceKey:
+    """Typed curve identity.  ``tag`` carries a stressor shape tag for
+    legacy per-shape curves ('' for steady / full surfaces);
+    ``qualifier`` preserves the exact legacy spelling of keys that
+    carry more than the canonical 4-tuple (observer shape tags,
+    stressor ensembles, ``buf=`` ladder suffixes), so v1/v2 files
+    round-trip byte-exactly through the typed store."""
+    obs_pool: str
+    obs_strat: str
+    stress_pool: str
+    stress_strat: str
+    tag: str = ""
+    qualifier: str = ""
+
+    def to_string(self) -> str:
+        if self.qualifier:
+            return self.qualifier
+        base = (f"{self.obs_pool}:{self.obs_strat}"
+                f"|{self.stress_pool}:{self.stress_strat}")
+        return f"{base}@{self.tag}" if self.tag else base
+
+    @staticmethod
+    def from_string(key: str) -> "SurfaceKey":
+        obs, _, stress = key.partition("|")
+        op, _, orest = obs.partition(":")
+        ostrat, _, otag = orest.partition("@")
+        parts = stress.split("|")         # ["sp:ss@tag+...", "buf=..."]
+        ensemble = parts[0].split("+")
+        sp, _, srest = ensemble[0].partition(":")
+        sstrat, _, stag = srest.partition("@")
+        canonical = not otag and len(parts) == 1 and len(ensemble) == 1
+        return SurfaceKey(op, ostrat, sp, sstrat, tag=stag,
+                          qualifier="" if canonical else key)
+
+    def with_tag(self, tag: str) -> "SurfaceKey":
+        return SurfaceKey(self.obs_pool, self.obs_strat, self.stress_pool,
+                          self.stress_strat, tag=tag)
+
+
+def _cell(grid: Any, idx: Sequence[int]) -> float:
+    for i in idx:
+        grid = grid[i]
+    return float(grid)
+
+
+@dataclass
+class Surface:
+    """A dense bandwidth/latency grid over named ordered axes.
+
+    ``bandwidth_gbps`` / ``latency_ns`` are nested lists indexed in
+    axis order (JSON-native, so a surface file is diffable).  Queries
+    interpolate multilinearly between bracketing grid cells; off-grid
+    coordinates clamp to the nearest edge and flag the result as
+    extrapolated.
+    """
+    axes: Tuple[SurfaceAxis, ...]
+    bandwidth_gbps: Any
+    latency_ns: Any
+    provenance: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.axes = tuple(self.axes)
+        if not self.axes:
+            raise ValueError("surface needs at least one axis")
+
+    # -- axis helpers -------------------------------------------------------
+    def axis(self, name: str) -> SurfaceAxis:
+        for ax in self.axes:
+            if ax.name == name:
+                return ax
+        raise KeyError(f"surface has no axis {name!r}; "
+                       f"have {[a.name for a in self.axes]}")
+
+    def has_axis(self, name: str) -> bool:
+        return any(ax.name == name for ax in self.axes)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(len(ax.values) for ax in self.axes)
+
+    # -- the query ----------------------------------------------------------
+    def query(self, coord: SurfaceCoord) -> SurfaceQuery:
+        """Multilinear interpolation at ``coord`` (every axis of this
+        surface must be present; extra coordinate names are the
+        caller's concern)."""
+        brackets: List[Tuple[int, int, float]] = []
+        clamped = False
+        for ax in self.axes:
+            v = coord.get(ax.name)
+            if v is None:
+                raise ValueError(
+                    f"query missing coordinate {ax.name!r} "
+                    f"(have {list(coord.names())})")
+            lo, hi, t, cl = ax.locate(v)
+            brackets.append((lo, hi, t))
+            clamped = clamped or cl
+        bw = self._interp(self.bandwidth_gbps, brackets)
+        lat = self._interp(self.latency_ns, brackets)
+        return SurfaceQuery(bw, lat, clamped, coord)
+
+    @staticmethod
+    def _interp(grid: Any, brackets: List[Tuple[int, int, float]]) -> float:
+        total = 0.0
+        for corner in product((0, 1), repeat=len(brackets)):
+            w = 1.0
+            idx = []
+            for bit, (lo, hi, t) in zip(corner, brackets):
+                w *= t if bit else (1.0 - t)
+                idx.append(hi if bit else lo)
+            if w == 0.0:
+                continue
+            total += w * _cell(grid, idx)
+        return total
+
+    # -- slicing back to legacy 1-axis curves --------------------------------
+    def n_axis_points(self, idx: Tuple[int, ...] = ()) -> List[CurvePoint]:
+        """The 1-axis (n_stressors) slice at fixed trailing indices."""
+        n_ax = self.axes[0]
+        if n_ax.name != AXIS_N:
+            raise ValueError(f"first axis is {n_ax.name!r}, not {AXIS_N!r}")
+        return [CurvePoint(int(n),
+                           _cell(self.bandwidth_gbps, (i,) + idx),
+                           _cell(self.latency_ns, (i,) + idx))
+                for i, n in enumerate(n_ax.values)]
+
+    # -- persistence --------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {"axes": [{"name": ax.name, "values": list(ax.values)}
+                         for ax in self.axes],
+                "bandwidth_gbps": self.bandwidth_gbps,
+                "latency_ns": self.latency_ns,
+                "provenance": self.provenance}
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Surface":
+        return Surface(axes=tuple(SurfaceAxis(a["name"], tuple(a["values"]))
+                                  for a in d["axes"]),
+                       bandwidth_gbps=d["bandwidth_gbps"],
+                       latency_ns=d["latency_ns"],
+                       provenance=d.get("provenance", {}))
+
+    @staticmethod
+    def from_points(points: List[CurvePoint],
+                    provenance: Optional[Dict[str, Any]] = None) -> "Surface":
+        """A legacy curve as a 1-axis surface (v1/v2 forward-load)."""
+        pts = sorted(points, key=lambda p: p.n_stressors)
+        return Surface(
+            axes=(SurfaceAxis(AXIS_N, tuple(float(p.n_stressors)
+                                            for p in pts)),),
+            bandwidth_gbps=[p.bandwidth_gbps for p in pts],
+            latency_ns=[p.latency_ns for p in pts],
+            provenance=provenance or {})
+
+
+# ---------------------------------------------------------------------------
+# The database
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class CurveDB:
     platform: str
-    curves: Dict[str, List[CurvePoint]] = field(default_factory=dict)
-    schema: int = SCHEMA_VERSION
-    # per-curve scenario provenance (v2): key -> ScenarioSpec.to_dict()
-    provenance: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    surfaces: Dict[SurfaceKey, Surface] = field(default_factory=dict)
+    schema: int = CURVEDB_SCHEMA
     meta: Dict[str, Any] = field(default_factory=dict)
 
     @staticmethod
     def key(obs_pool: str, obs_strat: str, stress_pool: str,
-            stress_strat: str, shape_tag: str = "") -> str:
-        base = f"{obs_pool}:{obs_strat}|{stress_pool}:{stress_strat}"
-        return f"{base}@{shape_tag}" if shape_tag else base
+            stress_strat: str, shape_tag: str = "") -> SurfaceKey:
+        return SurfaceKey(obs_pool, obs_strat, stress_pool, stress_strat,
+                          tag=shape_tag)
+
+    # -- legacy views --------------------------------------------------------
+    def _slices(self) -> Iterable[Tuple[str, List[CurvePoint],
+                                        Dict[str, Any]]]:
+        """Every surface as (legacy key string, points, provenance)
+        1-axis slices — multi-axis surfaces slice per (rw, ir) cell
+        under the cell shape's tag spelling."""
+        for key, surf in self.surfaces.items():
+            if len(surf.axes) == 1:
+                yield key.to_string(), surf.n_axis_points(), surf.provenance
+                continue
+            rw_ax = surf.axis(AXIS_RW)
+            ir_ax = surf.axis(AXIS_IR) if surf.has_axis(AXIS_IR) else None
+            cells = surf.provenance.get("cells", {})
+            for j, rw in enumerate(rw_ax.values):
+                irs = ir_ax.values if ir_ax is not None else (1.0,)
+                for k, ir in enumerate(irs):
+                    tag = TrafficShape.traffic(rw, ir).tag()
+                    idx = (j, k) if ir_ax is not None else (j,)
+                    yield (key.with_tag(tag).to_string(),
+                           surf.n_axis_points(idx),
+                           cells.get(tag, surf.provenance))
+
+    @property
+    def curves(self) -> Dict[str, List[CurvePoint]]:
+        """Read-only legacy view: ``{key string: [CurvePoint, ...]}``."""
+        return {k: pts for k, pts, _prov in self._slices()}
+
+    @property
+    def provenance(self) -> Dict[str, Dict[str, Any]]:
+        """Read-only legacy view of per-curve provenance."""
+        return {k: prov for k, _pts, prov in self._slices() if prov}
 
     def get(self, obs_pool: str, obs_strat: str, stress_pool: str,
             stress_strat: str, shape_tag: str = "") -> List[CurvePoint]:
-        return self.curves[self.key(obs_pool, obs_strat, stress_pool,
-                                    stress_strat, shape_tag)]
+        k = SurfaceKey(obs_pool, obs_strat, stress_pool, stress_strat,
+                       tag=shape_tag)
+        surf = self.surfaces.get(k)
+        if surf is not None and len(surf.axes) == 1:
+            return surf.n_axis_points()
+        return self.curves[k.to_string()]
 
-    # -- the numbers placement cares about --------------------------------
-    def effective_bw(self, pool: str, n_stressors: int,
+    def observer_pools(self) -> List[str]:
+        """Every pool with at least one characterized surface."""
+        return sorted({k.obs_pool for k in self.surfaces})
+
+    # -- the coordinate query (what placement/roofline/simulate consume) -----
+    def _resolve(self, obs_pool: str, obs_strat: str, stress_pool: str,
+                 stress_strat: str,
+                 shape_tag: str) -> Tuple[SurfaceKey, Surface, bool, bool]:
+        """Surface lookup with the v3 resolution ladder: exact shaped
+        key -> exact steady key -> the canonical mixed surface (pure
+        stressor strategies are edges of its rw_ratio axis).  Returns
+        (key, surface, tag_matched, fell_back)."""
+        if shape_tag:
+            k = SurfaceKey(obs_pool, obs_strat, stress_pool, stress_strat,
+                           tag=shape_tag)
+            s = self.surfaces.get(k)
+            if s is not None:
+                return k, s, True, False
+        for sstrat in (stress_strat, "b"):
+            k = SurfaceKey(obs_pool, obs_strat, stress_pool, sstrat)
+            s = self.surfaces.get(k)
+            if s is not None:
+                return k, s, False, bool(shape_tag)
+        raise KeyError(
+            f"no surface for ({obs_pool!r}, {obs_strat!r}, "
+            f"{stress_pool!r}, {stress_strat!r}); have "
+            f"{sorted(k.to_string() for k in self.surfaces)}")
+
+    def query(self, pool: str, n_stressors: float, *,
+              obs_strat: str = "r", stress_pool: Optional[str] = None,
+              stress_strat: str = "w", rw_ratio: Optional[float] = None,
+              inject_rate: Optional[float] = None,
+              shape_tag: str = "") -> SurfaceQuery:
+        """One interpolated reading of the characterized surface.
+
+        ``rw_ratio`` / ``inject_rate`` select the stressor traffic mix
+        and injection duty on a swept surface; when the surface lacks
+        the axis (a 1-axis legacy curve) an explicitly-requested
+        coordinate flags the result as extrapolated instead of being
+        silently dropped.  ``shape_tag`` keeps resolving legacy
+        per-shape curves exactly."""
+        sp = stress_pool or pool
+        key, surf, tag_hit, fell_back = self._resolve(
+            pool, obs_strat, sp, stress_strat, shape_tag)
+        coords: Dict[str, float] = {AXIS_N: float(n_stressors)}
+        flagged = fell_back
+        if surf.has_axis(AXIS_RW):
+            coords[AXIS_RW] = (rw_ratio if rw_ratio is not None
+                               else STRATEGY_RW_RATIO.get(stress_strat, 0.5))
+        elif rw_ratio is not None and not tag_hit:
+            flagged = True
+        if surf.has_axis(AXIS_IR):
+            coords[AXIS_IR] = (inject_rate if inject_rate is not None
+                               else 1.0)
+        elif inject_rate is not None and not tag_hit:
+            flagged = True
+        q = surf.query(SurfaceCoord.of(**coords))
+        return SurfaceQuery(q.bandwidth_gbps, q.latency_ns,
+                            q.extrapolated or flagged, q.coord)
+
+    # -- the numbers placement cares about (thin interpolating queries) ------
+    def effective_bw(self, pool: str, n_stressors: float,
                      stress_pool: Optional[str] = None,
                      strat: str = "r", stress_strat: str = "w",
-                     shape_tag: str = "") -> float:
-        pts = self._lookup(pool, strat, stress_pool or pool, stress_strat,
-                           shape_tag)
-        k = min(n_stressors, len(pts) - 1)
-        return pts[k].bandwidth_gbps
+                     shape_tag: str = "",
+                     rw_ratio: Optional[float] = None,
+                     inject_rate: Optional[float] = None) -> float:
+        return self.query(pool, n_stressors, obs_strat=strat,
+                          stress_pool=stress_pool, stress_strat=stress_strat,
+                          rw_ratio=rw_ratio, inject_rate=inject_rate,
+                          shape_tag=shape_tag).bandwidth_gbps
 
-    def effective_lat(self, pool: str, n_stressors: int,
+    def effective_lat(self, pool: str, n_stressors: float,
                       stress_pool: Optional[str] = None,
                       stress_strat: str = "w",
-                      shape_tag: str = "") -> float:
-        pts = self._lookup(pool, "l", stress_pool or pool, stress_strat,
-                           shape_tag)
-        k = min(n_stressors, len(pts) - 1)
-        return pts[k].latency_ns
-
-    def _lookup(self, pool, strat, stress_pool, stress_strat,
-                shape_tag) -> List[CurvePoint]:
-        """Shaped curve when characterized, steady fallback otherwise."""
-        if shape_tag:
-            k = self.key(pool, strat, stress_pool, stress_strat, shape_tag)
-            if k in self.curves:
-                return self.curves[k]
-        return self.get(pool, strat, stress_pool, stress_strat)
+                      shape_tag: str = "",
+                      rw_ratio: Optional[float] = None,
+                      inject_rate: Optional[float] = None) -> float:
+        return self.query(pool, n_stressors, obs_strat="l",
+                          stress_pool=stress_pool, stress_strat=stress_strat,
+                          rw_ratio=rw_ratio, inject_rate=inject_rate,
+                          shape_tag=shape_tag).latency_ns
 
     # -- Little's law -------------------------------------------------------
+    def _worst(self, pool: str, obs_strat: str,
+               stress_strat: str) -> SurfaceQuery:
+        surf = self._resolve(pool, obs_strat, pool, stress_strat, "")[1]
+        n_max = surf.axis(AXIS_N).values[-1]
+        return self.query(pool, n_max, obs_strat=obs_strat,
+                          stress_strat=stress_strat)
+
     def mlp(self, pool: str, line_bytes: int,
             stress_strat: str = "r") -> float:
         """Avg MLP = Avg latency [ns/Tx] x Avg bandwidth [Tx/ns], computed
         at the worst-case scenario like Tables II/III."""
-        lat = self.get(pool, "l", pool, stress_strat)[-1].latency_ns
-        bw = self.get(pool, "r", pool, stress_strat)[-1].bandwidth_gbps
+        lat = self._worst(pool, "l", stress_strat).latency_ns
+        bw = self._worst(pool, "r", stress_strat).bandwidth_gbps
         return lat * (bw / line_bytes)
 
     # -- persistence ----------------------------------------------------------
-    def save(self, path: str) -> None:
+    def save(self, path: str, schema: Optional[int] = None) -> None:
+        """Write the database.  Default: the schema it carries (so
+        legacy-loaded files re-save in their own format); pass
+        ``schema=2`` to downgrade a v3 database — multi-axis surfaces
+        slice back into tagged per-shape curves, losslessly for every
+        grid point."""
+        schema = self.schema if schema is None else schema
+        if schema >= CURVEDB_SCHEMA:
+            doc: Dict[str, Any] = {
+                "schema": CURVEDB_SCHEMA,
+                "platform": self.platform,
+                "surfaces": [dict(key=asdict(k), **s.to_dict())
+                             for k, s in self.surfaces.items()],
+                "meta": self.meta}
+        else:
+            doc = {"schema": schema,
+                   "platform": self.platform,
+                   "curves": {k: [asdict(p) for p in v]
+                              for k, v in self.curves.items()},
+                   "provenance": self.provenance,
+                   "meta": self.meta}
         with open(path, "w") as f:
-            json.dump({"schema": self.schema,
-                       "platform": self.platform,
-                       "curves": {k: [asdict(p) for p in v]
-                                  for k, v in self.curves.items()},
-                       "provenance": self.provenance,
-                       "meta": self.meta}, f, indent=1)
+            json.dump(doc, f, indent=1)
 
     @staticmethod
     def load(path: str) -> "CurveDB":
         with open(path) as f:
             d = json.load(f)
         # schema 1 (the seed format) has no "schema" key and no
-        # provenance — load it as-is so old curve files keep working
+        # provenance — old curve files keep working; v1/v2 curves each
+        # become a 1-axis surface under their typed key
         schema = int(d.get("schema", 1))
-        return CurveDB(platform=d["platform"],
-                       curves={k: [CurvePoint(**p) for p in v]
-                               for k, v in d["curves"].items()},
-                       schema=schema,
-                       provenance=d.get("provenance", {}),
-                       meta=d.get("meta", {}))
+        db = CurveDB(platform=d["platform"], schema=schema,
+                     meta=d.get("meta", {}))
+        if schema >= CURVEDB_SCHEMA:
+            for entry in d["surfaces"]:
+                db.surfaces[SurfaceKey(**entry["key"])] = \
+                    Surface.from_dict(entry)
+            return db
+        prov = d.get("provenance", {})
+        for k, pts in d["curves"].items():
+            db.surfaces[SurfaceKey.from_string(k)] = Surface.from_points(
+                [CurvePoint(**p) for p in pts], prov.get(k))
+        return db
 
 
 DEFAULT_BW_STRATS = ("r", "w")
@@ -181,7 +564,7 @@ def characterize(
 def characterize_matrix(coord: CoreCoordinator,
                         specs: List[ScenarioSpec], *,
                         batched: bool = True) -> CurveDB:
-    """Run an explicit scenario matrix and persist it as CurveDB v2.
+    """Run an explicit scenario matrix and persist it as a CurveDB.
 
     Each curve's provenance records the scenario spec AND an
     ``execution`` entry (which backend produced it, which ladder rungs
@@ -196,13 +579,8 @@ def characterize_matrix(coord: CoreCoordinator,
                                backend=coord.backend)
 
 
-def curvedb_from_result(result: MatrixResult, platform: str, *,
-                        backend: str = "") -> CurveDB:
-    """Persist an already-executed :class:`MatrixResult` as CurveDB v2
-    (no re-execution — callers that want both the runs and the DB pass
-    their ``run_matrix`` result here instead of characterizing twice)."""
-    db = CurveDB(platform=platform)
-    db.meta = {
+def _stats_meta(result: MatrixResult, backend: str) -> Dict[str, Any]:
+    return {
         "backend": backend,
         "n_scenarios": result.stats.n_scenarios,
         "n_ladders": result.stats.n_ladders,
@@ -218,41 +596,184 @@ def curvedb_from_result(result: MatrixResult, platform: str, *,
         "programs_built": result.stats.programs_built,
         "aot_compiles": result.stats.aot_compiles,
     }
+
+
+def _run_entry(run) -> Dict[str, Any]:
+    entry = run.spec.to_dict()
+    entry["curve"] = {"observer": (asdict(run.observer)
+                                   if run.observer is not None
+                                   else None),
+                      "buffer_bytes": run.buffer_bytes}
+    return entry
+
+
+def _run_points(run) -> List[CurvePoint]:
+    # the curve methods pick executed values where the backend ran
+    # the rung and modeled values elsewhere
+    return [CurvePoint(k, bw, lat)
+            for (k, bw), (_k, lat) in zip(run.bandwidth_curve(),
+                                          run.latency_curve())]
+
+
+def curvedb_from_result(result: MatrixResult, platform: str, *,
+                        backend: str = "") -> CurveDB:
+    """Persist an already-executed :class:`MatrixResult` as a CurveDB
+    of 1-axis surfaces (no re-execution — callers that want both the
+    runs and the DB pass their ``run_matrix`` result here instead of
+    characterizing twice)."""
+    db = CurveDB(platform=platform)
+    db.meta = _stats_meta(result, backend)
     for run in result.runs:
-        # the curve methods pick executed values where the backend ran
-        # the rung and modeled values elsewhere
-        pts = [CurvePoint(k, bw, lat)
-               for (k, bw), (_k, lat) in zip(run.bandwidth_curve(),
-                                             run.latency_curve())]
-        entry = run.spec.to_dict()
-        entry["curve"] = {"observer": (asdict(run.observer)
-                                       if run.observer is not None
-                                       else None),
-                          "buffer_bytes": run.buffer_bytes}
-        prev = db.provenance.get(run.key)
-        if prev is not None and {k: v for k, v in prev.items()
+        entry = _run_entry(run)
+        key = SurfaceKey.from_string(run.key)
+        prev = db.surfaces.get(key)
+        if prev is not None and {k: v for k, v in prev.provenance.items()
                                  if k != "execution"} != entry:
             # distinct scenarios/observers/buffers aliasing one key
             # (e.g. shape tags rounding to the same spelling) must not
             # silently overwrite curves
             raise ValueError(
                 f"curve key collision: {run.key!r} produced by both "
-                f"{prev['name']!r} and {run.spec.name!r}")
-        db.curves[run.key] = pts
+                f"{prev.provenance['name']!r} and {run.spec.name!r}")
         entry["execution"] = run.execution
-        db.provenance[run.key] = entry
+        db.surfaces[key] = Surface.from_points(_run_points(run), entry)
+    return db
+
+
+# ---------------------------------------------------------------------------
+# The surface sweep (the tentpole: rf x dc x stressor-count in one matrix)
+# ---------------------------------------------------------------------------
+
+
+def characterize_surface(
+    coord: CoreCoordinator,
+    *,
+    pools: Optional[Iterable[str]] = None,
+    stress_pools: Optional[Iterable[str]] = None,
+    buffer_bytes: int = 256 << 20,
+    obs_strategies: Tuple[str, ...] = ("r", "l"),
+    rw_ratios: Sequence[float] = DEFAULT_RW_RATIOS,
+    inject_rates: Sequence[float] = DEFAULT_INJECT_RATES,
+    iters: int = 500,
+    max_stressors: Optional[int] = None,
+    batched: bool = True,
+) -> CurveDB:
+    """Characterize full bandwidth–latency surfaces.
+
+    Emits the rf x dc x stressor-count scenario grid
+    (:func:`repro.core.scenarios.surface_matrix`) and runs it through
+    the coordinator's sweep-batched dispatch in ONE ``run_matrix``
+    call: the grid varies only ``TrafficShape``, so the spmd backend
+    stacks every same-signature ladder group into one dispatch and the
+    resulting ``meta`` records the :class:`DispatchStats` proof
+    (``host_sync_dispatches`` == distinct signatures).
+
+    Returns a CurveDB whose entries are dense 3-axis surfaces keyed
+    ``(obs_pool, obs_strat, stress_pool, "b")`` — one surface per
+    observer/stressor pool pairing, answering interpolated queries at
+    any (n_stressors, rw_ratio, inject_rate) coordinate.
+    """
+    rws = tuple(sorted(float(v) for v in rw_ratios))
+    irs = tuple(sorted(float(v) for v in inject_rates))
+    if len(set(rws)) != len(rws) or len(set(irs)) != len(irs):
+        raise ValueError("surface grid values must be unique")
+    pool_names = list(pools) if pools is not None else [
+        p.node.name for p in coord.pools.pools()
+        if p.node.kind != "vmem"]
+    s_pools = list(stress_pools) if stress_pools is not None else pool_names
+
+    specs: List[ScenarioSpec] = []
+    for op in pool_names:
+        cap = coord.pools.pool(op).node.size_bytes
+        nb_o = min(buffer_bytes, cap // 2)
+        for sp in s_pools:
+            s_cap = coord.pools.pool(sp).node.size_bytes
+            nb = min(nb_o, s_cap // 2)
+            specs.extend(surface_matrix(
+                pools=[op], stress_pools=[sp], buffer_bytes=nb,
+                obs_strategies=obs_strategies, rw_ratios=rws,
+                inject_rates=irs, iters=iters,
+                max_stressors=max_stressors))
+    result = coord.run_matrix(specs, batched=batched)
+    return surfacedb_from_result(result, coord.platform.name,
+                                 rw_ratios=rws, inject_rates=irs,
+                                 backend=coord.backend)
+
+
+def surfacedb_from_result(result: MatrixResult, platform: str, *,
+                          rw_ratios: Sequence[float],
+                          inject_rates: Sequence[float],
+                          backend: str = "") -> CurveDB:
+    """Assemble an executed surface-grid :class:`MatrixResult` into
+    dense 3-axis surfaces (axes: n_stressors, rw_ratio, inject_rate).
+    Per-surface provenance keeps every grid cell's scenario spec and
+    execution record under its shape tag."""
+    rws = tuple(sorted(float(v) for v in rw_ratios))
+    irs = tuple(sorted(float(v) for v in inject_rates))
+    db = CurveDB(platform=platform)
+    db.meta = _stats_meta(result, backend)
+    db.meta["surface"] = {"rw_ratios": list(rws), "inject_rates": list(irs)}
+
+    grouped: Dict[SurfaceKey, Dict[Tuple[float, float], Any]] = {}
+    for run in result.runs:
+        if len(run.spec.stressors) != 1 or run.observer is None:
+            raise ValueError(
+                f"{run.spec.name!r}: surface grids are single-stressor, "
+                f"single-observer scenarios")
+        s = run.spec.stressors[0]
+        key = SurfaceKey(run.observer.pool, run.observer.strategy,
+                         s.pool, s.strategy)
+        cell = (s.shape.read_fraction, s.shape.duty_cycle)
+        grouped.setdefault(key, {})[cell] = run
+
+    for key, cells in grouped.items():
+        missing = [(rf, dc) for rf in rws for dc in irs
+                   if (rf, dc) not in cells]
+        if missing:
+            raise ValueError(
+                f"surface {key.to_string()!r} missing grid cells "
+                f"{missing}")
+        first_pts = _run_points(cells[(rws[0], irs[0])])
+        n_values = tuple(float(p.n_stressors) for p in first_pts)
+        bw = []
+        lat = []
+        prov_cells: Dict[str, Any] = {}
+        for i in range(len(n_values)):
+            bw.append([[0.0] * len(irs) for _ in rws])
+            lat.append([[0.0] * len(irs) for _ in rws])
+        for j, rf in enumerate(rws):
+            for k, dc in enumerate(irs):
+                run = cells[(rf, dc)]
+                pts = _run_points(run)
+                if tuple(float(p.n_stressors) for p in pts) != n_values:
+                    raise ValueError(
+                        f"surface {key.to_string()!r}: ladder depth "
+                        f"differs across grid cells")
+                for i, p in enumerate(pts):
+                    bw[i][j][k] = p.bandwidth_gbps
+                    lat[i][j][k] = p.latency_ns
+                entry = _run_entry(run)
+                entry["execution"] = run.execution
+                prov_cells[TrafficShape.traffic(rf, dc).tag()] = entry
+        db.surfaces[key] = Surface(
+            axes=(SurfaceAxis(AXIS_N, n_values),
+                  SurfaceAxis(AXIS_RW, rws),
+                  SurfaceAxis(AXIS_IR, irs)),
+            bandwidth_gbps=bw, latency_ns=lat,
+            provenance={"grid": {"rw_ratios": list(rws),
+                                 "inject_rates": list(irs)},
+                        "cells": prov_cells})
     return db
 
 
 def mlp_table(db: CurveDB, platform: Platform) -> str:
     """Tables II/III, for every characterized module."""
     lines = ["pool      pairing        lat(ns/Tx)  BW(Tx/ns)   MLP"]
-    pools = sorted({k.split(":")[0] for k in db.curves})
-    for pool in pools:
+    for pool in db.observer_pools():
         for stress in ("r", "w"):
             try:
-                lat = db.get(pool, "l", pool, stress)[-1].latency_ns
-                bw = db.get(pool, "r", pool, stress)[-1].bandwidth_gbps
+                lat = db._worst(pool, "l", stress).latency_ns
+                bw = db._worst(pool, "r", stress).bandwidth_gbps
             except KeyError:
                 continue
             tx = bw / platform.line_bytes

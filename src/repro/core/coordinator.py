@@ -104,8 +104,12 @@ class ActivitySpec:
     def shape(self) -> Optional[TrafficShape]:
         """The TrafficShape these fields encode (None = steady)."""
         if self.read_fraction is not None:
+            # surface grid points carry BOTH a mix and a duty cycle —
+            # dropping the duty here would silently rebuild a hotter
+            # shape than the one that ran
             return TrafficShape(kind="mixed",
-                                read_fraction=self.read_fraction)
+                                read_fraction=self.read_fraction,
+                                duty_cycle=self.duty_cycle)
         if self.duty_cycle < 1.0:
             return TrafficShape(kind="burst", duty_cycle=self.duty_cycle)
         if self.stride > 1:

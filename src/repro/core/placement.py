@@ -24,11 +24,14 @@ loop asks where optimizer state lives (ZeRO-offload decision).
 """
 from __future__ import annotations
 
+import logging
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.characterize import CurveDB
 from repro.core.devicetree import Platform
+
+log = logging.getLogger(__name__)
 
 
 @dataclass(frozen=True)
@@ -45,22 +48,33 @@ class MemObject:
 class ContentionSpec:
     """Expected background load while this application runs.
 
-    ``stress_shape_tag`` selects a shaped curve from a CurveDB v2
-    (e.g. ``"rf0.50"`` for a 1:1 read/write mix, ``"dc0.50"`` for a
-    50%-duty burst — see ``TrafficShape.tag()``); the lookup falls
-    back to the steady curve when the shaped one was not characterized.
+    ``rw_ratio`` / ``inject_rate`` are surface coordinates (CurveDB
+    v3): the stressors' read share of line-touches and their injection
+    duty.  The cost model interpolates the characterized surface at
+    these coordinates instead of snapping to the nearest tagged curve.
+    ``stress_shape_tag`` still selects a legacy per-shape curve exactly
+    (e.g. ``"st8"`` for a strided chase — see ``TrafficShape.tag()``)
+    when one was characterized.
     """
     n_stressors: int = 0
     stress_pool: str = "hbm"
     stress_strategy: str = "w"
     stress_shape_tag: str = ""
+    rw_ratio: Optional[float] = None
+    inject_rate: Optional[float] = None
 
     @staticmethod
     def shaped(n_stressors: int, stress_pool: str, stress_strategy: str,
                shape) -> "ContentionSpec":
-        """Build from a :class:`repro.core.scenarios.TrafficShape`."""
+        """Build from a :class:`repro.core.scenarios.TrafficShape`:
+        mixed/burst shapes become surface coordinates (interpolated),
+        and every shape also carries its tag so legacy per-shape
+        curves keep resolving exactly."""
+        rw = shape.read_fraction if shape.kind == "mixed" else None
+        ir = shape.duty_cycle if shape.duty_cycle != 1.0 else None
         return ContentionSpec(n_stressors, stress_pool, stress_strategy,
-                              stress_shape_tag=shape.tag())
+                              stress_shape_tag=shape.tag(),
+                              rw_ratio=rw, inject_rate=ir)
 
 
 @dataclass
@@ -68,6 +82,11 @@ class PlacementDecision:
     pool: str
     predicted_step_ns: float
     alternatives: Dict[str, float] = field(default_factory=dict)
+    # True when the winning pool's cost came from an extrapolated
+    # surface query (coordinates beyond the characterized grid, or a
+    # fallback past a missing axis) — the prediction is a clamp, not a
+    # measurement
+    extrapolated: bool = False
 
 
 @dataclass
@@ -95,25 +114,30 @@ class PlacementAdvisor:
                  pools: Optional[Sequence[str]] = None):
         self.db = db
         self.platform = platform
-        self.pools = list(pools) if pools is not None else sorted(
-            {k.split(":")[0] for k in db.curves})
+        self.pools = list(pools) if pools is not None else \
+            db.observer_pools()
 
     # -- cost model ---------------------------------------------------------
+    def _predict(self, obj: MemObject, pool: str,
+                 contention: ContentionSpec) -> Tuple[float, bool]:
+        """(predicted ns, extrapolated?) — both surface queries
+        interpolated at the contention's coordinates."""
+        kw = dict(stress_pool=contention.stress_pool,
+                  stress_strat=contention.stress_strategy,
+                  shape_tag=contention.stress_shape_tag,
+                  rw_ratio=contention.rw_ratio,
+                  inject_rate=contention.inject_rate)
+        bw_q = self.db.query(pool, contention.n_stressors,
+                             obs_strat="r", **kw)
+        lat_q = self.db.query(pool, contention.n_stressors,
+                              obs_strat="l", **kw)
+        stream_ns = obj.bytes_per_step / max(bw_q.bandwidth_gbps, 1e-9)
+        lat_ns = obj.dependent_accesses * lat_q.latency_ns
+        return stream_ns + lat_ns, bw_q.extrapolated or lat_q.extrapolated
+
     def predict_ns(self, obj: MemObject, pool: str,
                    contention: ContentionSpec) -> float:
-        bw = self.db.effective_bw(
-            pool, contention.n_stressors,
-            stress_pool=contention.stress_pool,
-            stress_strat=contention.stress_strategy,
-            shape_tag=contention.stress_shape_tag)
-        lat = self.db.effective_lat(
-            pool, contention.n_stressors,
-            stress_pool=contention.stress_pool,
-            stress_strat=contention.stress_strategy,
-            shape_tag=contention.stress_shape_tag)
-        stream_ns = obj.bytes_per_step / max(bw, 1e-9)
-        lat_ns = obj.dependent_accesses * lat
-        return stream_ns + lat_ns
+        return self._predict(obj, pool, contention)[0]
 
     # -- solver ---------------------------------------------------------------
     def advise(self, objects: Sequence[MemObject],
@@ -124,10 +148,21 @@ class PlacementAdvisor:
             for p in self.pools if p in self.platform.memories}
 
         costs: Dict[str, Dict[str, float]] = {}
+        extrap: Dict[str, Dict[str, bool]] = {}
         for obj in objects:
-            costs[obj.name] = {
-                p: self.predict_ns(obj, p, contention)
-                for p in self.pools if p in caps}
+            costs[obj.name] = {}
+            extrap[obj.name] = {}
+            for p in self.pools:
+                if p not in caps:
+                    continue
+                t, ex = self._predict(obj, p, contention)
+                costs[obj.name][p] = t
+                extrap[obj.name][p] = ex
+            if not costs[obj.name] and obj.pinned_pool is None:
+                raise RuntimeError(
+                    f"no candidate pools for {obj.name!r}: advisor pools "
+                    f"{self.pools} and capacity pools {sorted(caps)} "
+                    f"have no common member")
 
         # pinned objects first
         plan = PlacementPlan()
@@ -137,7 +172,8 @@ class PlacementAdvisor:
                 p = obj.pinned_pool
                 caps[p] = caps.get(p, 0) - obj.size_bytes
                 plan.decisions[obj.name] = PlacementDecision(
-                    p, costs[obj.name].get(p, 0.0), costs[obj.name])
+                    p, costs[obj.name].get(p, 0.0), costs[obj.name],
+                    extrapolated=extrap[obj.name].get(p, False))
             else:
                 todo.append(obj)
 
@@ -153,8 +189,15 @@ class PlacementAdvisor:
             for pool, t in ranked:
                 if caps.get(pool, 0) >= obj.size_bytes:
                     caps[pool] -= obj.size_bytes
+                    ex = extrap[obj.name][pool]
+                    if ex:
+                        log.warning(
+                            "placement of %r in %r relies on an "
+                            "EXTRAPOLATED surface query (contention %r "
+                            "beyond the characterized grid)",
+                            obj.name, pool, contention)
                     plan.decisions[obj.name] = PlacementDecision(
-                        pool, t, costs[obj.name])
+                        pool, t, costs[obj.name], extrapolated=ex)
                     placed = True
                     break
             if not placed:

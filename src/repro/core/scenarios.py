@@ -103,6 +103,15 @@ class TrafficShape:
     def strided(stride: int) -> "TrafficShape":
         return TrafficShape(kind="strided", stride=stride)
 
+    @staticmethod
+    def traffic(rw_ratio: float, inject_rate: float = 1.0) -> "TrafficShape":
+        """One bandwidth–latency *surface* grid point: a mixed stream
+        issuing ``rw_ratio`` reads per line-touch at ``inject_rate``
+        duty (Mess-style surfaces sweep both axes at once, so the two
+        parameters combine in a single shape)."""
+        return TrafficShape(kind="mixed", read_fraction=rw_ratio,
+                            duty_cycle=inject_rate)
+
     # -- identity ----------------------------------------------------------
     @property
     def is_steady(self) -> bool:
@@ -121,7 +130,12 @@ class TrafficShape:
         if self.kind == "steady":
             return ""
         if self.kind == "mixed":
-            return f"rf{_exact(self.read_fraction)}"
+            tag = f"rf{_exact(self.read_fraction)}"
+            # surface grid points carry both axes; a duty-cycled mix
+            # must not alias the always-on mix of the same ratio
+            if self.duty_cycle != 1.0:
+                tag = f"{tag}dc{_exact(self.duty_cycle)}"
+            return tag
         if self.kind == "burst":
             tag = f"dc{_exact(self.duty_cycle)}"
             # non-default burst lengths are part of the identity too
@@ -383,6 +397,53 @@ def scenario_matrix(
                                                 shape),),
                         iters=iters,
                         max_stressors=max_stressors))
+    return specs
+
+
+#: Default surface grid (Mess-style): read/write mix from pure-write to
+#: pure-read, injection rate from a 25% duty trickle to full blast.
+DEFAULT_RW_RATIOS: Tuple[float, ...] = (0.0, 0.5, 1.0)
+DEFAULT_INJECT_RATES: Tuple[float, ...] = (0.25, 0.5, 1.0)
+
+
+def surface_matrix(
+    *,
+    pools: Sequence[str],
+    buffer_bytes: int,
+    obs_strategies: Sequence[str] = ("r", "l"),
+    stress_pools: Optional[Sequence[str]] = None,
+    rw_ratios: Sequence[float] = DEFAULT_RW_RATIOS,
+    inject_rates: Sequence[float] = DEFAULT_INJECT_RATES,
+    iters: int = 500,
+    max_stressors: Optional[int] = None,
+    name_prefix: str = "surface.",
+) -> List[ScenarioSpec]:
+    """The rf x dc x stressor-count grid behind ``characterize_surface``.
+
+    Every grid cell is one :class:`ScenarioSpec` whose single stressor
+    is the ``b`` mixed stream at ``TrafficShape.traffic(rf, dc)`` — the
+    cell's ladder supplies the ``n_stressors`` axis, the shape supplies
+    the other two.  Only the shape varies across cells, so the whole
+    grid runs through the coordinator's sweep-batched dispatch with one
+    stacked program per distinct (rf, dc) signature.
+    """
+    specs: List[ScenarioSpec] = []
+    s_pools = list(stress_pools) if stress_pools is not None else list(pools)
+    for op in pools:
+        for ostrat in obs_strategies:
+            for sp in s_pools:
+                for rf in rw_ratios:
+                    for dc in inject_rates:
+                        shape = TrafficShape.traffic(rf, dc)
+                        specs.append(ScenarioSpec(
+                            name=(f"{name_prefix}{op}.{ostrat}|{sp}.b"
+                                  f"@{shape.tag()}"),
+                            observer=ObserverSpec(ostrat, op,
+                                                  (buffer_bytes,)),
+                            stressors=(StressorSpec("b", sp, buffer_bytes,
+                                                    shape),),
+                            iters=iters,
+                            max_stressors=max_stressors))
     return specs
 
 

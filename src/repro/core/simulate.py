@@ -26,8 +26,9 @@ construction — that is their definition).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.devicetree import MemoryNode, Platform
@@ -323,6 +324,107 @@ def co_observer_class(name: str, node: MemoryNode, strategy: str, *,
     return ActivityClass(name, node, strategy, 1,
                          read_fraction=read_fraction,
                          duty_cycle=duty_cycle, stride=stride)
+
+
+# ---------------------------------------------------------------------------
+# Surface-calibrated mode (CurveDB v3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SurfaceCalibration:
+    """A platform re-fit to a measured bandwidth–latency surface.
+
+    ``platform`` carries the rescaled per-module service rates;
+    ``scale_bw`` / ``scale_lat`` record the fitted per-pool factors and
+    ``residual_bw`` / ``residual_lat`` the relative error still left at
+    the surface's uncontended edge after the fit (the fidelity number
+    the tests hold the mode to)."""
+    platform: Platform
+    scale_bw: Dict[str, float] = field(default_factory=dict)
+    scale_lat: Dict[str, float] = field(default_factory=dict)
+    residual_bw: Dict[str, float] = field(default_factory=dict)
+    residual_lat: Dict[str, float] = field(default_factory=dict)
+
+
+def _modeled_edge(platform: Platform, pool: str) -> Tuple[float, float]:
+    """The model's own uncontended edge for one pool: the bandwidth a
+    single streaming reader extracts, and the latency a single
+    serialized chaser sees (the two measurement methods the surface's
+    n_stressors=0 edge was characterized with)."""
+    node = platform.memories[pool]
+    bw = simulate_scenario(
+        platform, [ActivityClass("obs", node, "r", 1)])["obs"].bw_gbps
+    lat = simulate_scenario(
+        platform, [ActivityClass("obs", node, "l", 1)])["obs"].lat_ns
+    return bw, lat
+
+
+def calibrate_to_surface(platform: Platform, db, *,
+                         pools: Optional[List[str]] = None,
+                         rounds: int = 4) -> SurfaceCalibration:
+    """Fit per-class service rates to a measured surface edge.
+
+    For every characterized pool, rescales the memory node's
+    ``peak_bw_gbps`` (the FCFS station's service rate) and
+    ``base_latency_ns`` (the per-class delay term) until the model's
+    uncontended edge reproduces the surface's measured
+    ``n_stressors=0`` edge.  The two knobs interact (latency feeds the
+    bandwidth edge and queueing feeds the latency edge), so the fit
+    runs a short fixpoint iteration instead of a one-shot division.
+
+    ``db`` is any CurveDB (v1/v2/v3) — the v3 surface interpolates its
+    rw_ratio/inject_rate axes at the pure-read full-duty corner, which
+    is exactly the edge the model's single-reader class reproduces.
+    """
+    cal = SurfaceCalibration(platform=platform)
+    names = pools if pools is not None else db.observer_pools()
+    names = [p for p in names if p in platform.memories]
+
+    def edge(pool: str, obs_strat: str) -> float:
+        # the n_stressors=0 edge is uncontended, so ANY characterized
+        # stressor pairing for this observer carries it
+        pairings = sorted((k.stress_pool, k.stress_strat)
+                          for k in db.surfaces
+                          if k.obs_pool == pool and k.obs_strat == obs_strat)
+        for sp, ss in pairings:
+            q = db.query(pool, 0, obs_strat=obs_strat,
+                         stress_pool=sp, stress_strat=ss)
+            return q.bandwidth_gbps if obs_strat == "r" else q.latency_ns
+        raise KeyError(f"no {obs_strat!r} surface for pool {pool!r}")
+
+    measured: Dict[str, Tuple[float, float]] = {}
+    for pool in names:
+        try:
+            bw, lat = edge(pool, "r"), edge(pool, "l")
+        except KeyError:
+            continue        # pool not characterized with both probes
+        if bw > 0.0 and lat > 0.0:
+            measured[pool] = (bw, lat)
+
+    plat = platform
+    for _ in range(max(1, rounds)):
+        mems = dict(plat.memories)
+        for pool, (m_bw, m_lat) in measured.items():
+            mod_bw, mod_lat = _modeled_edge(plat, pool)
+            node = mems[pool]
+            mems[pool] = dataclasses.replace(
+                node,
+                peak_bw_gbps=node.peak_bw_gbps * m_bw / max(mod_bw, 1e-12),
+                base_latency_ns=(node.base_latency_ns
+                                 * m_lat / max(mod_lat, 1e-12)))
+        plat = dataclasses.replace(plat, memories=mems)
+
+    for pool, (m_bw, m_lat) in measured.items():
+        mod_bw, mod_lat = _modeled_edge(plat, pool)
+        cal.scale_bw[pool] = (plat.memories[pool].peak_bw_gbps
+                              / platform.memories[pool].peak_bw_gbps)
+        cal.scale_lat[pool] = (plat.memories[pool].base_latency_ns
+                               / platform.memories[pool].base_latency_ns)
+        cal.residual_bw[pool] = abs(mod_bw - m_bw) / m_bw
+        cal.residual_lat[pool] = abs(mod_lat - m_lat) / m_lat
+    cal.platform = plat
+    return cal
 
 
 def scenario_ladder(

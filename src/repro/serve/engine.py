@@ -39,9 +39,19 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_len: int,
                for s in jax.tree.leaves(struct))
 
 
+def decode_rw_mix(batch: int, max_len: int) -> float:
+    """Read share of the decode step's KV traffic (the ``rw_ratio``
+    surface coordinate).  Each generated token reads the whole cache
+    prefix — ``max_len`` positions per sequence — and writes exactly
+    one new slot, so the mix approaches pure-read as contexts grow."""
+    reads = float(max(1, max_len))
+    return reads / (reads + 1.0)
+
+
 def choose_kv_pool(cfg: ModelConfig, batch: int, max_len: int, *,
                    advisor=None, scfg: Optional[ServeConfig] = None,
-                   hbm_free_bytes: Optional[int] = None) -> str:
+                   hbm_free_bytes: Optional[int] = None,
+                   rw_mix: Optional[float] = None) -> str:
     scfg = scfg or ServeConfig()
     if scfg.kv_placement != "auto":
         return scfg.kv_placement
@@ -53,7 +63,13 @@ def choose_kv_pool(cfg: ModelConfig, batch: int, max_len: int, *,
     caps = None
     if hbm_free_bytes is not None:
         caps = {"hbm": hbm_free_bytes, "host": 256 << 30}
-    plan = advisor.advise([obj], ContentionSpec(0), capacities=caps)
+    # advise at the engine's observed decode traffic coordinates: the
+    # surface interpolates its rw_ratio axis at the cache's actual
+    # read/write mix instead of a letter-keyed worst case
+    if rw_mix is None:
+        rw_mix = decode_rw_mix(batch, max_len)
+    plan = advisor.advise([obj], ContentionSpec(0, rw_ratio=rw_mix),
+                          capacities=caps)
     return plan.pool_of("kv")
 
 
@@ -138,7 +154,8 @@ class ServeEngine:
         b, s = tokens.shape
         max_len = s + max_new_tokens
         kv_pool = choose_kv_pool(cfg, b, max_len, advisor=self.advisor,
-                                 scfg=self.scfg)
+                                 scfg=self.scfg,
+                                 rw_mix=decode_rw_mix(b, max_len))
 
         prefill = jax.jit(make_prefill_step(cfg, rules, max_len=max_len),
                           static_argnames=())

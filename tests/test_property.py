@@ -238,7 +238,7 @@ def test_ladder_signature_determines_role_tables(
 
 
 # ---------------------------------------------------------------------------
-# CurveDB v2: save -> load -> save is byte-idempotent (execution incl.)
+# CurveDB v3: save -> load -> save is byte-idempotent (execution incl.)
 # ---------------------------------------------------------------------------
 
 
@@ -251,13 +251,14 @@ def test_ladder_signature_determines_role_tables(
     n_co=st.integers(0, 2),
     max_stressors=st.integers(0, 3),
 )
-def test_curvedb_v2_save_load_save_idempotent(ostrat, sstrat, kind,
+def test_curvedb_v3_save_load_save_idempotent(ostrat, sstrat, kind,
                                               coupled, n_co,
                                               max_stressors):
     """A CurveDB written, loaded, and written again must produce the
-    identical file — including the v2 ``execution`` provenance fields
+    identical file — including the ``execution`` provenance fields
     (backend, activity, coupled, rung lists) introduced with the
-    coupled spmd backend."""
+    coupled spmd backend.  The v2 downgrade leg must also load and
+    preserve the curve values."""
     import json
     import tempfile
 
@@ -291,7 +292,16 @@ def test_curvedb_v2_save_load_save_idempotent(ostrat, sstrat, kind,
         with open(p1) as f1, open(p2) as f2:
             t1, t2 = f1.read(), f2.read()
         assert t1 == t2
-        assert json.loads(t1)["schema"] == 2
+        assert json.loads(t1)["schema"] == 3
+        # the downgrade leg: schema-2 save loads with identical curves
+        p3 = f"{d}/v2.json"
+        db.save(p3, schema=2)
+        assert json.load(open(p3))["schema"] == 2
+        old = type(db).load(p3)
+        assert old.curves.keys() == db.curves.keys()
+        for k, pts in db.curves.items():
+            assert [vars(p) for p in old.curves[k]] == \
+                [vars(p) for p in pts]
 
 
 # ---------------------------------------------------------------------------

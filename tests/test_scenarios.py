@@ -136,10 +136,11 @@ def test_matrix_file_roundtrip(tmp_path):
 def test_v1_compatible_keys():
     """Steady single-stressor scenarios must key exactly like the seed."""
     assert _spec().key() == "hbm:r|hbm:w"
-    assert CurveDB.key("hbm", "r", "hbm", "w") == "hbm:r|hbm:w"
+    assert CurveDB.key("hbm", "r", "hbm", "w").to_string() == "hbm:r|hbm:w"
     shaped = _spec(shape=TrafficShape.burst(0.5))
     assert shaped.key() == "hbm:r|hbm:w@dc0.50"
-    assert CurveDB.key("hbm", "r", "hbm", "w", "dc0.50") == shaped.key()
+    assert CurveDB.key("hbm", "r", "hbm", "w",
+                       "dc0.50").to_string() == shaped.key()
 
 
 def test_spec_validation():
@@ -154,20 +155,20 @@ def test_spec_validation():
 
 
 # ---------------------------------------------------------------------------
-# CurveDB v2 schema versioning
+# CurveDB schema versioning
 # ---------------------------------------------------------------------------
 
 
-def test_curvedb_v2_roundtrip_with_provenance(tmp_path):
+def test_curvedb_v3_roundtrip_with_provenance(tmp_path):
     c = CoreCoordinator(backend="simulate")
     specs = [_spec(), _spec("shaped", shape=TrafficShape.mixed(1, 1))]
     db = characterize_matrix(c, specs)
-    assert db.schema == 2
+    assert db.schema == 3
     assert set(db.provenance) == set(db.curves)
-    p = str(tmp_path / "v2.json")
+    p = str(tmp_path / "v3.json")
     db.save(p)
     db2 = CurveDB.load(p)
-    assert db2.schema == 2
+    assert db2.schema == 3
     assert db2.curves.keys() == db.curves.keys()
     k = "hbm:r|hbm:w@rf0.50"
     assert ScenarioSpec.from_dict(db2.provenance[k]).stressors[0].shape \
@@ -223,7 +224,7 @@ RF12 = TrafficShape.mixed(1, 2).tag()
 
 def test_shaped_sweep_produces_new_curves(shaped_db):
     db, _ = shaped_db
-    tags = {k.split("@")[1] for k in db.curves if "@" in k}
+    tags = {k.tag for k in db.surfaces if k.tag}
     assert {RF21, RF11, RF12, "dc0.50", "st8"} <= tags
     # copy stressor curves exist under the steady key format
     assert "hbm:r|hbm:c" in db.curves

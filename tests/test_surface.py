@@ -1,0 +1,451 @@
+"""CurveDB v3 surfaces: the typed coordinate system behind every
+consumer (ISSUE 6).
+
+Concrete-grid coverage for what tests/test_property.py checks
+statistically (hypothesis is optional in CI): byte-idempotent v3
+round-trips, v1/v2 forward-load to 1-axis surfaces, interpolation
+exactness at grid points and bracketing between cells, extrapolation
+flags, the placement/roofline/simulate/serve consumers, and the grep
+lint that keeps key string-splitting out of every consumer.
+"""
+import dataclasses
+import json
+import logging
+import os
+import re
+
+import pytest
+
+from repro.core.characterize import (AXIS_IR, AXIS_N, AXIS_RW, CurveDB,
+                                     CurvePoint, Surface, SurfaceAxis,
+                                     SurfaceCoord, SurfaceKey,
+                                     characterize, characterize_surface)
+from repro.core.coordinator import CoreCoordinator
+from repro.core.placement import (ContentionSpec, MemObject,
+                                  PlacementAdvisor)
+from repro.core.scenarios import TrafficShape
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+RWS = (0.0, 0.5, 1.0)
+IRS = (0.25, 0.5, 1.0)
+
+
+@pytest.fixture(scope="module")
+def coord():
+    return CoreCoordinator(backend="simulate")
+
+
+@pytest.fixture(scope="module")
+def surface_db(coord):
+    """A measured 3-axis surface grid (simulate backend physics)."""
+    return characterize_surface(coord, pools=["hbm", "host"],
+                                stress_pools=["hbm"], rw_ratios=RWS,
+                                inject_rates=IRS, iters=5)
+
+
+@pytest.fixture(scope="module")
+def legacy_db(coord):
+    """A steady letter-keyed characterization (1-axis surfaces)."""
+    return characterize(coord, pools=["hbm", "host"],
+                        obs_strategies=("r", "l"),
+                        stress_strategies=("r", "w"), iters=5)
+
+
+# ---------------------------------------------------------------------------
+# Axes, coordinates, keys
+# ---------------------------------------------------------------------------
+
+
+def test_surface_axis_locate_brackets_and_clamps():
+    ax = SurfaceAxis("n_stressors", (0.0, 1.0, 4.0))
+    lo, hi, t, cl = ax.locate(1.0)                  # exact grid point
+    assert (lo, t, cl) == (1, 0.0, False)
+    lo, hi, t, cl = ax.locate(2.5)
+    assert (lo, hi, cl) == (1, 2, False) and t == pytest.approx(0.5)
+    assert ax.locate(-1.0) == (0, 0, 0.0, True)     # clamped low
+    assert ax.locate(9.0) == (2, 2, 0.0, True)      # clamped high
+    assert ax.locate(0.0) == (0, 0, 0.0, False)     # edge is NOT a clamp
+    with pytest.raises(ValueError):
+        SurfaceAxis("bad", (1.0, 1.0))              # not strictly ascending
+
+
+def test_surface_coord_drops_none():
+    c = SurfaceCoord.of(n_stressors=2, rw_ratio=None, inject_rate=0.5)
+    assert c.names() == ("n_stressors", "inject_rate")
+    assert c.get("rw_ratio") is None
+    assert c.to_dict() == {"n_stressors": 2.0, "inject_rate": 0.5}
+
+
+@pytest.mark.parametrize("key", [
+    "hbm:r|hbm:w",
+    "hbm:l|host:y@rf0.50",
+    "hbm:r|hbm:w@dc0.50",
+    # non-canonical legacy spellings survive via the qualifier
+    "hbm:r@st8|hbm:w",
+    "hbm:r|hbm:w+host:r",
+    "hbm:r|hbm:w|buf=1048576",
+])
+def test_surface_key_string_roundtrip(key):
+    k = SurfaceKey.from_string(key)
+    assert k.to_string() == key
+    # the typed fields are populated even for qualified spellings
+    assert k.obs_pool == "hbm" and k.stress_strat in ("w", "y")
+
+
+def test_surface_key_is_typed_not_stringly():
+    k = CurveDB.key("hbm", "r", "host", "y", "rf0.50")
+    assert (k.obs_pool, k.obs_strat, k.stress_pool, k.stress_strat,
+            k.tag) == ("hbm", "r", "host", "y", "rf0.50")
+    assert k == SurfaceKey.from_string("hbm:r|host:y@rf0.50")
+
+
+# ---------------------------------------------------------------------------
+# Interpolation: exact at grid points, bracketed between cells
+# ---------------------------------------------------------------------------
+
+
+def _planar_surface():
+    """bw = 100 - 10n + 20rw + 5ir (linear => multilinear interp is
+    exact everywhere, not only at grid points)."""
+    ns, rws, irs = (0.0, 1.0, 2.0, 4.0), RWS, IRS
+
+    def bw(n, rw, ir):
+        return 100.0 - 10.0 * n + 20.0 * rw + 5.0 * ir
+
+    def lat(n, rw, ir):
+        return 50.0 + 25.0 * n - 5.0 * rw - 2.0 * ir
+
+    grid_bw = [[[bw(n, rw, ir) for ir in irs] for rw in rws] for n in ns]
+    grid_lat = [[[lat(n, rw, ir) for ir in irs] for rw in rws] for n in ns]
+    return Surface(axes=(SurfaceAxis(AXIS_N, ns), SurfaceAxis(AXIS_RW, rws),
+                         SurfaceAxis(AXIS_IR, irs)),
+                   bandwidth_gbps=grid_bw, latency_ns=grid_lat), bw, lat
+
+
+def test_interpolation_exact_at_grid_points():
+    surf, bw, lat = _planar_surface()
+    for n in (0.0, 1.0, 2.0, 4.0):
+        for rw in RWS:
+            for ir in IRS:
+                q = surf.query(SurfaceCoord.of(
+                    n_stressors=n, rw_ratio=rw, inject_rate=ir))
+                assert q.bandwidth_gbps == pytest.approx(bw(n, rw, ir))
+                assert q.latency_ns == pytest.approx(lat(n, rw, ir))
+                assert not q.extrapolated
+
+
+def test_interpolation_exact_off_grid_for_planar_data():
+    surf, bw, lat = _planar_surface()
+    for n, rw, ir in [(0.5, 0.25, 0.75), (3.0, 0.9, 0.3), (1.7, 0.1, 1.0)]:
+        q = surf.query(SurfaceCoord.of(
+            n_stressors=n, rw_ratio=rw, inject_rate=ir))
+        assert q.bandwidth_gbps == pytest.approx(bw(n, rw, ir))
+        assert q.latency_ns == pytest.approx(lat(n, rw, ir))
+        assert not q.extrapolated
+
+
+def test_interpolation_bracketed_and_monotone(surface_db):
+    """On measured (monotone-in-n) data, an off-grid query lies between
+    its bracketing grid values."""
+    surf = surface_db.surfaces[CurveDB.key("hbm", "r", "hbm", "b")]
+    n_vals = surf.axis(AXIS_N).values
+    for i in range(len(n_vals) - 1):
+        a = surf.query(SurfaceCoord.of(
+            n_stressors=n_vals[i], rw_ratio=1.0, inject_rate=1.0))
+        b = surf.query(SurfaceCoord.of(
+            n_stressors=n_vals[i + 1], rw_ratio=1.0, inject_rate=1.0))
+        mid = surf.query(SurfaceCoord.of(
+            n_stressors=(n_vals[i] + n_vals[i + 1]) / 2.0,
+            rw_ratio=1.0, inject_rate=1.0))
+        lo, hi = sorted((a.bandwidth_gbps, b.bandwidth_gbps))
+        assert lo <= mid.bandwidth_gbps <= hi
+        lo, hi = sorted((a.latency_ns, b.latency_ns))
+        assert lo <= mid.latency_ns <= hi
+
+
+def test_query_missing_axis_coordinate_raises():
+    surf, _, _ = _planar_surface()
+    with pytest.raises(ValueError, match="rw_ratio"):
+        surf.query(SurfaceCoord.of(n_stressors=1.0, inject_rate=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Extrapolation flags (the silent-clamp fix)
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_grid_query_flags_extrapolated(surface_db):
+    q_in = surface_db.query("hbm", 1, stress_strat="b")
+    assert not q_in.extrapolated
+    q_out = surface_db.query("hbm", 99, stress_strat="b")
+    assert q_out.extrapolated
+    # the clamp still answers with the edge value (monotone ladder:
+    # the worst characterized point), it just says so
+    n_max = surface_db.surfaces[
+        CurveDB.key("hbm", "r", "hbm", "b")].axis(AXIS_N).values[-1]
+    assert q_out.bandwidth_gbps == pytest.approx(
+        surface_db.query("hbm", n_max, stress_strat="b").bandwidth_gbps)
+
+
+def test_requested_axis_missing_on_legacy_surface_flags(legacy_db):
+    # no explicit coordinates: a legacy 1-axis lookup is NOT extrapolated
+    assert not legacy_db.query("hbm", 1).extrapolated
+    # an explicitly-requested mix coordinate cannot be honoured by a
+    # 1-axis curve: flagged instead of silently dropped
+    assert legacy_db.query("hbm", 1, rw_ratio=0.8).extrapolated
+    assert legacy_db.query("hbm", 1, inject_rate=0.5).extrapolated
+
+
+def test_letter_strategies_map_to_surface_edges(surface_db):
+    """One measured mixed surface answers legacy letter-keyed queries:
+    'w' stressors are the rw=0 edge, 'r' the rw=1 edge."""
+    bw_w = surface_db.effective_bw("hbm", 2, stress_strat="w")
+    bw_r = surface_db.effective_bw("hbm", 2, stress_strat="r")
+    edge_w = surface_db.query("hbm", 2, stress_strat="b",
+                              rw_ratio=0.0).bandwidth_gbps
+    edge_r = surface_db.query("hbm", 2, stress_strat="b",
+                              rw_ratio=1.0).bandwidth_gbps
+    assert bw_w == pytest.approx(edge_w)
+    assert bw_r == pytest.approx(edge_r)
+    # WAWB: write-heavy stressors cost more module traffic
+    assert bw_w < bw_r
+    # off-edge mixes interpolate strictly between the edges
+    mid = surface_db.effective_bw("hbm", 2, stress_strat="b",
+                                  rw_ratio=0.75)
+    assert min(edge_w, edge_r) < mid < max(edge_w, edge_r)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: v3 round-trips, v1/v2 forward-load, v2 downgrade
+# ---------------------------------------------------------------------------
+
+
+def test_v3_save_load_save_idempotent(surface_db, tmp_path):
+    p1, p2 = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+    surface_db.save(p1)
+    db2 = CurveDB.load(p1)
+    db2.save(p2)
+    t1, t2 = open(p1).read(), open(p2).read()
+    assert t1 == t2
+    assert json.loads(t1)["schema"] == 3
+    # and the loaded surfaces answer identically
+    assert db2.query("hbm", 1.5, stress_strat="b", rw_ratio=0.3,
+                     inject_rate=0.7).bandwidth_gbps == pytest.approx(
+        surface_db.query("hbm", 1.5, stress_strat="b", rw_ratio=0.3,
+                         inject_rate=0.7).bandwidth_gbps)
+
+
+def test_v2_downgrade_save_loads_with_same_answers(surface_db, tmp_path):
+    p = str(tmp_path / "v2.json")
+    surface_db.save(p, schema=2)
+    doc = json.load(open(p))
+    assert doc["schema"] == 2
+    old = CurveDB.load(p)
+    assert old.schema == 2
+    # every grid point survives the slicing losslessly
+    for rw in RWS:
+        for ir in IRS:
+            tag = TrafficShape.traffic(rw, ir).tag()
+            want = surface_db.query("hbm", 2, stress_strat="b",
+                                    rw_ratio=rw,
+                                    inject_rate=ir).bandwidth_gbps
+            got = old.effective_bw("hbm", 2, stress_strat="b",
+                                   shape_tag=tag)
+            assert got == pytest.approx(want)
+
+
+def test_v1_forward_loads_to_1axis_surfaces(tmp_path):
+    v1 = {"platform": "tpu-v5e",
+          "curves": {"hbm:r|hbm:w": [
+              {"n_stressors": 0, "bandwidth_gbps": 800.0,
+               "latency_ns": 100.0},
+              {"n_stressors": 2, "bandwidth_gbps": 400.0,
+               "latency_ns": 200.0}]}}
+    p = str(tmp_path / "v1.json")
+    json.dump(v1, open(p, "w"))
+    db = CurveDB.load(p)
+    assert db.schema == 1
+    surf = db.surfaces[SurfaceKey.from_string("hbm:r|hbm:w")]
+    assert [ax.name for ax in surf.axes] == [AXIS_N]
+    # interpolates BETWEEN ladder rungs now (the seed indexed/clamped)
+    assert db.effective_bw("hbm", 1) == pytest.approx(600.0)
+    # beyond the ladder: clamped AND flagged
+    q = db.query("hbm", 5)
+    assert q.bandwidth_gbps == 400.0 and q.extrapolated
+
+
+def test_v2_forward_loads_with_provenance(tmp_path):
+    v2 = {"schema": 2, "platform": "sim",
+          "curves": {"hbm:r|hbm:w@rf0.50": [
+              {"n_stressors": 0, "bandwidth_gbps": 100.0,
+               "latency_ns": 10.0}]},
+          "provenance": {"hbm:r|hbm:w@rf0.50": {"name": "x"}},
+          "meta": {}}
+    p = str(tmp_path / "v2.json")
+    json.dump(v2, open(p, "w"))
+    db = CurveDB.load(p)
+    assert db.schema == 2
+    k = CurveDB.key("hbm", "r", "hbm", "w", "rf0.50")
+    assert len(db.surfaces[k].axes) == 1
+    assert db.surfaces[k].provenance == {"name": "x"}
+    assert db.effective_bw("hbm", 0, stress_strat="w",
+                           shape_tag="rf0.50") == 100.0
+
+
+# ---------------------------------------------------------------------------
+# Consumers: placement, roofline, simulate, serve
+# ---------------------------------------------------------------------------
+
+
+def test_contention_spec_carries_surface_coords():
+    spec = ContentionSpec.shaped(
+        3, "hbm", "b", TrafficShape(kind="mixed", read_fraction=0.75,
+                                    duty_cycle=0.5))
+    assert spec.rw_ratio == 0.75 and spec.inject_rate == 0.5
+    assert spec.stress_shape_tag == "rf0.75dc0.50"
+    steady = ContentionSpec.shaped(3, "hbm", "w", TrafficShape.steady())
+    assert steady.rw_ratio is None and steady.inject_rate is None
+
+
+def test_placement_interpolates_surface_coords(surface_db, coord):
+    adv = PlacementAdvisor(surface_db, coord.platform)
+    obj = MemObject("buf", 1 << 20, bytes_per_step=1e9)
+    t_read = adv.predict_ns(obj, "hbm",
+                            ContentionSpec(2, "hbm", "b", rw_ratio=1.0))
+    t_write = adv.predict_ns(obj, "hbm",
+                             ContentionSpec(2, "hbm", "b", rw_ratio=0.0))
+    t_mid = adv.predict_ns(obj, "hbm",
+                           ContentionSpec(2, "hbm", "b", rw_ratio=0.4))
+    assert min(t_read, t_write) < t_mid < max(t_read, t_write)
+
+
+def test_placement_records_and_warns_on_extrapolation(
+        surface_db, coord, caplog):
+    adv = PlacementAdvisor(surface_db, coord.platform, pools=["hbm"])
+    obj = MemObject("buf", 1 << 20, bytes_per_step=1e9)
+    with caplog.at_level(logging.WARNING, "repro.core.placement"):
+        plan = adv.advise([obj], ContentionSpec(99, "hbm", "b"))
+    assert plan.decisions["buf"].extrapolated
+    assert any("EXTRAPOLATED" in r.message for r in caplog.records)
+    caplog.clear()
+    with caplog.at_level(logging.WARNING, "repro.core.placement"):
+        plan = adv.advise([obj], ContentionSpec(1, "hbm", "b"))
+    assert not plan.decisions["buf"].extrapolated
+    assert not caplog.records
+
+
+def test_advise_raises_clearly_when_no_candidate_pools(
+        surface_db, coord):
+    """Regression: disjoint advisor/capacity pools used to surface as an
+    opaque IndexError out of the regret sort."""
+    adv = PlacementAdvisor(surface_db, coord.platform, pools=["hbm"])
+    obj = MemObject("buf", 1 << 20, bytes_per_step=1e9)
+    with pytest.raises(RuntimeError, match="no candidate pools"):
+        adv.advise([obj], ContentionSpec(0, "hbm", "b"),
+                   capacities={"host": 1 << 30})
+    # pinned objects bypass the cost table and still place
+    pinned = MemObject("pin", 1 << 20, bytes_per_step=1e9,
+                       pinned_pool="host")
+    plan = adv.advise([pinned], ContentionSpec(0, "hbm", "b"),
+                      capacities={"host": 1 << 30})
+    assert plan.pool_of("pin") == "host"
+
+
+def test_roofline_memory_term_at_workload_mix(surface_db):
+    from repro.analysis.roofline import effective_hbm_bw, workload_rw_mix
+
+    class _Shape:
+        kind = "decode"
+    mix = workload_rw_mix(_Shape())
+    assert mix == pytest.approx(0.9)
+    bw_mix = effective_hbm_bw(surface_db, n_stressors=2,
+                              stress_strategy="b", rw_ratio=mix)
+    bw_w = effective_hbm_bw(surface_db, n_stressors=2,
+                            stress_strategy="b", rw_ratio=0.0)
+    bw_r = effective_hbm_bw(surface_db, n_stressors=2,
+                            stress_strategy="b", rw_ratio=1.0)
+    assert bw_w < bw_mix <= bw_r
+
+
+def test_simulate_calibrates_to_surface_edge(surface_db, coord):
+    """The surface-calibrated mode: a deliberately mis-specified
+    platform re-fit to the measured surface reproduces the executed
+    uncontended edge (fidelity against executed points)."""
+    from repro.core.simulate import calibrate_to_surface
+
+    plat = coord.platform
+    mems = dict(plat.memories)
+    for p in ("hbm", "host"):
+        n = mems[p]
+        mems[p] = dataclasses.replace(
+            n, peak_bw_gbps=n.peak_bw_gbps * 1.8,
+            base_latency_ns=n.base_latency_ns * 0.5)
+    wrong = dataclasses.replace(plat, memories=mems)
+    cal = calibrate_to_surface(wrong, surface_db)
+    for pool in ("hbm", "host"):
+        # the fit must land on the measured edge...
+        assert cal.residual_bw[pool] < 0.01
+        assert cal.residual_lat[pool] < 0.01
+        # ...by pulling both knobs back toward the truth (the exact
+        # factors are coupled through the queueing model: latency
+        # feeds the single-reader bandwidth edge)
+        assert 0.4 < cal.scale_bw[pool] < 0.7
+        assert 1.4 < cal.scale_lat[pool] < 2.5
+    # the true platform is (near) a fixed point
+    cal0 = calibrate_to_surface(plat, surface_db)
+    assert cal0.scale_bw["hbm"] == pytest.approx(1.0, rel=0.02)
+    assert cal0.scale_lat["hbm"] == pytest.approx(1.0, rel=0.02)
+
+
+def test_serve_decode_mix_is_read_dominated():
+    from repro.serve.engine import decode_rw_mix
+    assert decode_rw_mix(4, 64) == pytest.approx(64 / 65)
+    assert decode_rw_mix(1, 1) == pytest.approx(0.5)
+    # longer contexts -> more read-dominated
+    assert decode_rw_mix(4, 2048) > decode_rw_mix(4, 64) > 0.9
+
+
+# ---------------------------------------------------------------------------
+# The lint: consumers never string-split keys
+# ---------------------------------------------------------------------------
+
+# .split/.partition on the legacy key separators, spelled with []
+# concatenation so this file does not match itself
+_FORBIDDEN = [
+    r"\.spl" + r"it\(\s*['\"][|:@]['\"]",
+    r"\.rspl" + r"it\(\s*['\"][|:@]['\"]",
+    r"\.part" + r"ition\(\s*['\"][|:@]['\"]",
+    r"\.rpart" + r"ition\(\s*['\"][|:@]['\"]",
+]
+
+_SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+# SurfaceKey.from_string is the single allowed parsing boundary
+_EXEMPT = (os.path.join("src", "repro", "core", "characterize.py"),
+           os.path.join("tests", "test_surface.py"))
+
+
+def _py_files():
+    for d in _SCAN_DIRS:
+        for root, _dirs, files in os.walk(os.path.join(ROOT, d)):
+            for f in files:
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def test_no_consumer_string_splits_curve_keys():
+    pats = [re.compile(p) for p in _FORBIDDEN]
+    offenders = []
+    for path in _py_files():
+        rel = os.path.relpath(path, ROOT)
+        if rel in _EXEMPT:
+            continue
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for pat in pats:
+                    if pat.search(line):
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "curve-key string-splitting outside SurfaceKey.from_string "
+        "(query through the typed coordinate API):\n"
+        + "\n".join(offenders))
