@@ -1,14 +1,17 @@
-"""Perf harness: sweep-batched vs fused-per-ladder vs per-rung spmd.
+"""Perf harness: packed vs batched vs fused-per-ladder vs per-rung.
 
-Times ``CoreCoordinator(backend="spmd")`` in all three dispatch modes —
-``spmd_dispatch="batched"`` (sweep-level megabatching: same-signature
-ladders stacked into ONE dispatch per distinct role-program signature),
-``"ladder"`` (one fused dispatch per ladder, scanned psum sandwiches,
-in-dispatch ``compat.device_clock`` rung timing) and ``"rung"`` (the
+Times ``CoreCoordinator(backend="spmd")`` in four contender configs —
+``packed`` (sweep-level megabatching + engine-subset width-packing:
+narrow same-signature ladders run SIDE BY SIDE on disjoint engine
+subsets of each stacked dispatch, the default), ``batched``
+(megabatching with packing pinned off: one scan wave per stacked
+ladder), ``fused`` (one dispatch per ladder, scanned psum sandwiches,
+in-dispatch ``compat.device_clock`` rung timing) and ``per_rung`` (the
 legacy 4-host-round-trips-per-rung path) — over a 64-scenario sweep
-(16 with ``--smoke``) on 2- and 8-device meshes, and writes
-``BENCH_spmd.json`` (schema 2): the committed perf trajectory for the
-spmd hot path.
+(16 with ``--smoke``) on 2- and 8-device meshes, plus a dedicated
+WIDTH-PACKING section per leg (a sweep of 2-engine ladders, where
+packing is at its strongest), and writes ``BENCH_spmd.json``
+(schema 3): the committed perf trajectory for the spmd hot path.
 
     PYTHONPATH=src python -m benchmarks.perf_harness \
         [--smoke] [--out BENCH_spmd.json] [--fail-if-slower] \
@@ -52,7 +55,11 @@ SMOKE_ITERS = 120
 MAX_STRESSORS = 3
 CACHE_CAP = 128
 
-MODES = (("batched", "batched"), ("fused", "ladder"), ("per_rung", "rung"))
+# (name, spmd_dispatch, spmd_pack): packed is the shipped default
+# config; batched pins packing off so the pair isolates what width-
+# packing alone buys on the SAME grouped dispatch structure
+MODES = (("packed", "batched", "auto"), ("batched", "batched", "off"),
+         ("fused", "ladder", "off"), ("per_rung", "rung", "off"))
 # The gate (both CI legs): the batched sweep must beat the per-rung
 # path outright on the warm (steady-state) sweep, and must not lose to
 # the fused-per-ladder path beyond a 10% noise band.  Batched and
@@ -63,12 +70,16 @@ MODES = (("batched", "batched"), ("fused", "ladder"), ("per_rung", "rung"))
 # (host_sync_dispatches == distinct signatures, unconditionally), so a
 # broken grouping fails the leg regardless of wall clock.  The
 # committed full-sweep BENCH numbers show batched beating both paths
-# outright on both legs.
+# outright on both legs.  The width-packing section adds its own gate:
+# on a mesh wide enough to pack the 2-engine sweep (>= 2 subsets),
+# packed must beat packing-off on the warm pass outright — packing
+# strictly removes scan waves and idle-engine work from the dispatch.
 FUSED_NOISE_BAND = 1.10
 GATE_CRITERION = ("batched warm sweep < per_rung warm sweep AND "
                   "batched warm sweep <= fused warm sweep x "
                   f"{FUSED_NOISE_BAND} (noise band; dispatch advantage "
-                  "asserted structurally)")
+                  "asserted structurally) AND, where the mesh packs "
+                  "the 2-engine sweep, packed warm < packing-off warm")
 
 
 def _sweep_specs(smoke: bool):
@@ -109,11 +120,15 @@ def _count_signatures(specs) -> int:
                 for b in obs.buffers})
 
 
-WARM_ROUNDS = 3
+# 5 interleaved rounds, median per mode: on a shared 1-core runner
+# single-run drift is a few percent — comparable to the true batched
+# vs per-rung gap on the cheap 2-device full sweep — and a 3-sample
+# median still let one slow outlier decide the gate
+WARM_ROUNDS = 5
 
 
 def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
-    """Cold + warm timings for all three contenders.
+    """Cold + warm timings for all four contenders.
 
     The cold pass runs once per mode; the warm (steady-state) passes
     are INTERLEAVED round-robin across the modes and reported as the
@@ -136,8 +151,9 @@ def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
     # dies with it, so no contender inherits compiled sweep programs.
     CoreCoordinator(backend="spmd").run_matrix(specs[:1])
     coords, colds, cold_stats = {}, {}, {}
-    for name, dispatch in MODES:
+    for name, dispatch, pack in MODES:
         coord = CoreCoordinator(backend="spmd", spmd_dispatch=dispatch,
+                                spmd_pack=pack,
                                 spmd_cache_cap=CACHE_CAP,
                                 compile_cache_dir=cache_dir)
         t0 = time.perf_counter()
@@ -145,16 +161,16 @@ def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
         colds[name] = time.perf_counter() - t0
         cold_stats[name] = cold_res.stats
         coords[name] = coord
-    warm_samples = {name: [] for name, _d in MODES}
+    warm_samples = {name: [] for name, _d, _p in MODES}
     warm_res = {}
     for _ in range(WARM_ROUNDS):
-        for name, _dispatch in MODES:
+        for name, _dispatch, _pack in MODES:
             t0 = time.perf_counter()
             res = coords[name].run_matrix(specs)
             warm_samples[name].append(time.perf_counter() - t0)
             warm_res[name] = res
     modes = {}
-    for name, dispatch in MODES:
+    for name, dispatch, pack in MODES:
         st = warm_res[name].stats
         cst = cold_stats[name]
         warm = sorted(warm_samples[name])[WARM_ROUNDS // 2]
@@ -167,11 +183,14 @@ def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
                    for s in run.scenarios if s.source == "executed")
         if dispatch == "batched":
             # the sweep-level claim: host-synchronous dispatches
-            # collapse to the number of distinct program signatures
+            # collapse to the number of distinct program signatures —
+            # width-packing reshapes dispatches, it never adds any
             assert st.host_sync_dispatches == st.spmd_groups == n_sig, \
                 (st.host_sync_dispatches, st.spmd_groups, n_sig)
             assert all(run.execution["batched"]
                        for run in warm_res[name].runs)
+        if pack == "off":
+            assert st.packed_ladders == 0, (name, st.packed_ladders)
         modes[name] = {
             "wall_s_cold": round(colds[name], 3),
             "wall_s_warm": round(warm, 3),
@@ -194,8 +213,97 @@ def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
                 cst.programs_built / max(1, n_sig), 3),
             "timing_source":
                 warm_res[name].runs[0].execution["timing_source"],
+            # width-packing accounting (0 unless this contender packs
+            # and the mesh is wide enough for the sweep's ladders)
+            "packed_ladders": st.packed_ladders,
+            "subset_width": st.subset_width,
         }
     return modes
+
+
+def _packing_section(n_dev: int, cache_dir=None) -> dict:
+    """The width-packing showcase: a sweep of 2-engine ladders
+    (observer + ONE stressor), where a wide mesh packs
+    ``n_dev // 2`` ladders side by side per dispatch.  Times the
+    default (packed) against the same grouped dispatch with packing
+    pinned off; the structural claims (ladders per host sync, subset
+    accounting) are asserted unconditionally, the wall-clock gate only
+    where the mesh actually packs."""
+    from repro.core.scenarios import TrafficShape, scenario_matrix
+    from repro.core.coordinator import CoreCoordinator
+    shapes = [("w", TrafficShape.steady()),
+              ("r", TrafficShape.mixed(1, 1))]
+    # 2 pools x 2 observers x 2 stress pools x 2 shapes = 16 narrow
+    # ladders; the pool axes repeat each signature, so every group
+    # stacks >= 2 ladders and a >= 4-engine mesh packs them
+    specs = scenario_matrix(pools=("hbm", "host"), buffer_bytes=BUF,
+                            obs_strategies=("r", "w"),
+                            stress_shapes=shapes, iters=SMOKE_ITERS,
+                            max_stressors=1)
+    width = min(2, n_dev)
+    n_subsets = n_dev // width if n_dev >= 2 * width else 1
+    coords, section = {}, {}
+    for name, pack in (("packed", "auto"), ("packing_off", "off")):
+        coords[name] = CoreCoordinator(backend="spmd",
+                                       spmd_pack=pack,
+                                       spmd_cache_cap=CACHE_CAP,
+                                       compile_cache_dir=cache_dir)
+        t0 = time.perf_counter()
+        coords[name].run_matrix(specs)
+        section[name] = {"wall_s_cold":
+                         round(time.perf_counter() - t0, 3)}
+    warm_samples = {name: [] for name in coords}
+    warm_res = {}
+    for _ in range(WARM_ROUNDS):
+        for name, coord in coords.items():
+            t0 = time.perf_counter()
+            warm_res[name] = coord.run_matrix(specs)
+            warm_samples[name].append(time.perf_counter() - t0)
+    for name, res in warm_res.items():
+        st = res.stats
+        assert all(run.execution["fenced"] for run in res.runs)
+        section[name].update({
+            "wall_s_warm": sorted(warm_samples[name])[WARM_ROUNDS // 2],
+            "wall_s_warm_samples": [round(w, 3)
+                                    for w in warm_samples[name]],
+            "host_sync_dispatches": st.host_sync_dispatches,
+            "ladders_per_dispatch": round(
+                st.n_ladders / max(1, st.host_sync_dispatches), 2),
+            "packed_ladders": st.packed_ladders,
+            "subset_width": st.subset_width,
+        })
+    packed, off = section["packed"], section["packing_off"]
+    # packing reshapes the stacked dispatches, it never adds any: both
+    # configs sync once per signature, with every ladder on board
+    assert packed["host_sync_dispatches"] == off["host_sync_dispatches"]
+    assert off["packed_ladders"] == 0
+    if n_subsets > 1:
+        # every narrow ladder really ran in a width-`width` subset...
+        assert packed["packed_ladders"] == len(specs), packed
+        assert packed["subset_width"] == width, packed
+        # ...and a wide mesh runs >= 4 ladders per host sync (the
+        # stacked groups guarantee >= 2 even unpacked)
+        if n_dev >= 4 * width:
+            assert packed["ladders_per_dispatch"] >= 4, packed
+    else:
+        assert packed["packed_ladders"] == 0, packed
+    gate_pass = (n_subsets == 1
+                 or packed["wall_s_warm"] < off["wall_s_warm"])
+    section.update({
+        "n_scenarios": len(specs),
+        "iters": SMOKE_ITERS,
+        "ladder_width": width,
+        "n_subsets": n_subsets,
+        "speedup_packed_warm": round(
+            off["wall_s_warm"] / max(packed["wall_s_warm"], 1e-9), 3),
+        "gate": {"active": n_subsets > 1, "pass": gate_pass,
+                 "packed_warm_s": round(packed["wall_s_warm"], 3),
+                 "packing_off_warm_s": round(off["wall_s_warm"], 3)},
+    })
+    for name in coords:
+        section[name]["wall_s_warm"] = round(
+            section[name]["wall_s_warm"], 3)
+    return section
 
 
 def _run_leg(smoke: bool, cache_dir=None) -> dict:
@@ -207,8 +315,11 @@ def _run_leg(smoke: bool, cache_dir=None) -> dict:
     cache_prewarmed = bool(cache_dir and os.path.isdir(cache_dir)
                            and os.listdir(cache_dir))
     modes = _time_modes(specs, n_sig, cache_dir)
-    batched, fused, per_rung = (modes["batched"], modes["fused"],
-                                modes["per_rung"])
+    packed, batched, fused, per_rung = (modes["packed"],
+                                        modes["batched"],
+                                        modes["fused"],
+                                        modes["per_rung"])
+    assert packed["timing_source"] == "device", packed
     assert batched["timing_source"] == "device", batched
     assert fused["timing_source"] == "device", fused
     assert per_rung["timing_source"] == "host", per_rung
@@ -218,9 +329,11 @@ def _run_leg(smoke: bool, cache_dir=None) -> dict:
         return {kk: round(b[f"wall_s_{kk}"] / a[f"wall_s_{kk}"], 3)
                 for kk in ("cold", "warm", "total")}
 
+    packing = _packing_section(n_dev, cache_dir)
     gate_pass = (batched["wall_s_warm"] < per_rung["wall_s_warm"]
                  and batched["wall_s_warm"]
-                 <= fused["wall_s_warm"] * FUSED_NOISE_BAND)
+                 <= fused["wall_s_warm"] * FUSED_NOISE_BAND
+                 and packing["gate"]["pass"])
     leg = {
         "devices": n_dev,
         "n_scenarios": len(specs),
@@ -228,9 +341,13 @@ def _run_leg(smoke: bool, cache_dir=None) -> dict:
         "distinct_signatures": n_sig,
         "persistent_cache": bool(cache_dir),
         "cache_prewarmed": cache_prewarmed,
+        "packed": packed,
         "batched": batched,
         "fused": fused,
         "per_rung": per_rung,
+        # the dedicated 2-engine-ladder sweep: width-packing's best
+        # case, with its own warm-pass gate where the mesh packs it
+        "width_packing": packing,
         # the sweep cost a characterization run actually pays: tracing
         # + fence verification + AOT compile + dispatch (cold) and the
         # steady-state re-dispatch on cached programs (warm).  The
@@ -240,6 +357,7 @@ def _run_leg(smoke: bool, cache_dir=None) -> dict:
         "speedup_batched_vs_fused": _ratios(batched, fused),
         "speedup_batched_vs_per_rung": _ratios(batched, per_rung),
         "speedup_fused_vs_per_rung": _ratios(fused, per_rung),
+        "speedup_packed_vs_batched": _ratios(packed, batched),
         "dispatch_reduction_vs_fused": round(
             fused["host_sync_dispatches"]
             / batched["host_sync_dispatches"], 2),
@@ -254,17 +372,22 @@ def _run_leg(smoke: bool, cache_dir=None) -> dict:
             "batched_warm_s": batched["wall_s_warm"],
             "fused_warm_s": fused["wall_s_warm"],
             "per_rung_warm_s": per_rung["wall_s_warm"],
+            "packing_gate": packing["gate"],
         },
     }
     # the structural claims hold regardless of machine noise: the
-    # batched sweep syncs once per SIGNATURE, fused once per LADDER,
-    # per-rung 4 times per RUNG
+    # batched sweep syncs once per SIGNATURE (packed or not), fused
+    # once per LADDER, per-rung 4 times per RUNG
+    assert packed["host_sync_dispatches"] == n_sig, leg
     assert batched["host_sync_dispatches"] == n_sig, leg
     assert fused["host_sync_per_ladder"] <= 2, leg
     assert per_rung["host_sync_per_ladder"] == 4 * k, leg
     assert leg["dispatch_reduction_vs_per_rung"] >= 3, leg
     # and the batched path compiles exactly one program per signature
     assert batched["distinct_programs"] <= n_sig, leg
+    # the main sweep's ladders occupy k engines; the mesh packs them
+    # exactly when a second k-engine subset fits
+    assert (packed["packed_ladders"] > 0) == (n_dev >= 2 * k), leg
     return leg
 
 
@@ -325,8 +448,8 @@ def main(argv=None) -> int:
     else:
         legs = [2, 8]
     out = {
-        "schema": 2,
-        "bench": "spmd_batched_vs_fused_vs_per_rung",
+        "schema": 3,
+        "bench": "spmd_packed_vs_batched_vs_fused_vs_per_rung",
         "generated_by": "benchmarks/perf_harness.py"
                         + (" --smoke" if args.smoke else ""),
         "n_scenarios": 16 if args.smoke else 64,
@@ -347,7 +470,7 @@ def main(argv=None) -> int:
               f"({out['n_scenarios']} scenarios) ==")
         leg = _spawn_leg(n_dev, args.smoke, args.compile_cache_dir)
         out["legs"][str(n_dev)] = leg
-        for mode, _dispatch in MODES:
+        for mode, _dispatch, _pack in MODES:
             m = leg[mode]
             print(f"   {mode:8s} cold {m['wall_s_cold']:7.3f}s  warm "
                   f"{m['wall_s_warm']:7.3f}s  "
@@ -360,6 +483,14 @@ def main(argv=None) -> int:
               f"{leg['speedup_batched_vs_per_rung']['warm']}x vs "
               f"per-rung; gate "
               f"{'PASS' if leg['gate']['pass'] else 'FAIL'}")
+        wp = leg["width_packing"]
+        print(f"   width-packing ({wp['n_scenarios']} x "
+              f"{wp['ladder_width']}-engine ladders, "
+              f"{wp['n_subsets']} subsets): packed warm "
+              f"{wp['packed']['wall_s_warm']:.3f}s vs off "
+              f"{wp['packing_off']['wall_s_warm']:.3f}s "
+              f"({wp['speedup_packed_warm']}x), "
+              f"{wp['packed']['ladders_per_dispatch']} ladders/sync")
     _write()
     print(f"wrote {args.out}")
 

@@ -595,6 +595,10 @@ def _stats_meta(result: MatrixResult, backend: str) -> Dict[str, Any]:
         "spmd_groups": result.stats.spmd_groups,
         "programs_built": result.stats.programs_built,
         "aot_compiles": result.stats.aot_compiles,
+        # engine-subset width-packing (PR 7): ladders run side by side
+        # on disjoint subsets, and the subset width they occupied
+        "packed_ladders": result.stats.packed_ladders,
+        "subset_width": result.stats.subset_width,
     }
 
 

@@ -10,81 +10,78 @@ paper's spin-lock sandwich:
 
   (1) measurement starts only after every engine passed the start
       barrier (psum #1);
-  (2) the scenario is stable: one fused SPMD program, engines run
-      lockstep until their activity completes;
+  (2) the scenario is stable: one fused SPMD program, lockstep engines;
   (3) the stop barrier (psum #2) completes only after every engine's
-      activity finished — measurement closes before anything is torn
-      down;
+      activity finished — measurement closes before teardown;
   (4) the next scenario is a new program dispatch, which cannot begin
       until the previous one fully retired (host blocks on the result).
 
-Backends:
-  * ``simulate``  — closed queueing network (repro.core.simulate); full
-                    contention ladders at modeled v5e scale.
-  * ``interpret`` — really executes the observed activity's Pallas
-                    kernels (interpret mode, this container's CPU);
-                    contention scenarios beyond 0 stressors fall back to
-                    the model (single real device).
-  * ``tpu``       — same SPMD program, real hardware (not available in
-                    this container; code path kept identical).
-  * ``spmd``      — *executes* contention ladders on an ("engine",)
-                    mesh: observer + coupled sibling observers + live
-                    stressor engines, rung activities built from the
-                    real Pallas kernel library (pure-jnp fallback via
-                    ``compat.pallas_supported``), measured region
-                    dataflow-fenced between two psum barriers.  The
-                    default dispatch mode (``spmd_dispatch="batched"``)
-                    applies SWEEP-LEVEL megabatching: ``run_matrix``
-                    groups ladders by role-program signature and runs
-                    each group as ONE stacked dispatch — the fused
-                    ladder's ``lax.scan`` over per-rung role tables
-                    gains a leading scenario axis, every scanned rung
-                    of every stacked ladder keeps its own psum
-                    sandwich and in-dispatch ``compat.device_clock``
-                    stamp pair, so a whole sweep costs ~one
-                    host-synchronous dispatch per distinct signature.
-                    ``spmd_dispatch="ladder"`` keeps the one-fused-
-                    dispatch-per-ladder mode, ``"rung"`` the legacy
-                    one-dispatch-per-rung path with host wall-clock
-                    timing.  Programs are AOT-compiled once per
-                    signature (``compat.aot_compile``) and an opt-in
-                    persistent compile cache
-                    (``compile_cache_dir=``) reuses cacheable
-                    executables across processes.
+Backends: ``simulate`` (closed queueing network, repro.core.simulate),
+``interpret`` (executes the observed activity's Pallas kernels in
+interpret mode; contended rungs fall back to the model), ``tpu`` (same
+code path on real hardware), and ``spmd`` — which *executes*
+contention ladders on an ("engine",) mesh: observer + coupled sibling
+observers + live stressor engines, rung activities from the real
+Pallas kernel library (jnp fallback via ``compat.pallas_supported``),
+measured region dataflow-fenced between two psum barriers.
+
+The spmd machinery itself lives in :mod:`repro.core.exec` as an
+explicit plan -> build -> dispatch -> assemble pipeline (see that
+package's docstring for the module map); this class is the thin facade
+tying the stages together and the home of the queueing-network model.
+The default dispatch mode (``spmd_dispatch="batched"``) applies
+SWEEP-LEVEL megabatching — the planner groups ladders by role-program
+signature and every group executes as ONE stacked dispatch — and, when
+the mesh is wide enough (``spmd_pack="auto"``), the planner's
+engine-subset width-packing transform additionally runs several
+same-signature shallow ladders SIDE BY SIDE on disjoint engine subsets
+of that one dispatch, each subset with its own grouped-psum sandwich.
+Programs are AOT-compiled once per signature and an opt-in persistent
+compile cache (``compile_cache_dir=``) spans processes.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import simulate as sim
 from repro.core.devicetree import Platform, detect_platform
+from repro.core.exec import plan as exec_plan
+from repro.core.exec.assemble import (MatrixResult, ScenarioResult,
+                                      ScenarioRun, assemble_runs,
+                                      observer_result)
+from repro.core.exec.dispatch import Dispatcher, DispatchStats
+from repro.core.exec.fence import (_shard_map_bodies,
+                                   measured_region_is_fenced)
+from repro.core.exec.plan import effective_duty as _effective_duty
+from repro.core.exec.program import (_SPMD_CHASES, _SPMD_STREAM_2X,
+                                     build_ladder_program,
+                                     build_rung_operands,
+                                     build_rung_program,
+                                     build_scenario_program,
+                                     spmd_branch_fn)
 from repro.core.pools import MemoryPool, PoolManager
 from repro.core.scenarios import (ObserverSpec, ScenarioSpec, StressorSpec,
                                   TrafficShape)
-from repro.core.workloads import (LINE_BYTES, Workload, WorkloadResult,
-                                  make_shaped_workload, make_workload,
-                                  measure_group, resolve_strategy,
-                                  rows_for as _wl_rows)
+from repro.core.workloads import (WorkloadResult, make_shaped_workload,
+                                  measure_group)
+
+# long-standing import surface: tests and benchmarks reach these via
+# the coordinator module (the implementations moved to repro.core.exec)
+_spmd_branch_fn = spmd_branch_fn
+_build_rung_operands = build_rung_operands
+
+__all__ = [
+    "ActivitySpec", "CoreCoordinator", "DispatchStats",
+    "ExperimentConfig", "ExperimentResult", "MatrixResult",
+    "ScenarioResult", "ScenarioRun", "ValidationError",
+    "build_ladder_program", "build_rung_program",
+    "build_scenario_program", "measured_region_is_fenced",
+]
 
 # ---------------------------------------------------------------------------
-
-
-def _effective_duty(shape) -> float:
-    """Duty cycle of a role's traffic shape, with the degenerate-value
-    guard every call site must share: absent shapes and 0/None duties
-    count as always-on.  Work balancing *divides* by this (a 0-duty
-    role would otherwise get an infinite iteration budget) and the
-    observer's ``n_active`` stamping multiplies by it — both sides of
-    the accounting must use the same number."""
-    if shape is None:
-        return 1.0
-    return getattr(shape, "duty_cycle", 1.0) or 1.0
 
 
 @dataclass(frozen=True)
@@ -137,20 +134,6 @@ class ExperimentConfig:
 
 
 @dataclass
-class ScenarioResult:
-    n_stressors: int
-    main: WorkloadResult
-    modeled_bw_gbps: float = 0.0
-    modeled_lat_ns: float = 0.0
-    stress_bw_gbps: float = 0.0
-    # where this rung's curve value comes from: "modeled" (queueing
-    # network; `main` is at most an uncontended measurement) or
-    # "executed" (`main` IS the observer measured under n_stressors
-    # live stress engines — the spmd backend)
-    source: str = "modeled"
-
-
-@dataclass
 class ExperimentResult:
     config: ExperimentConfig
     scenarios: List[ScenarioResult] = field(default_factory=list)
@@ -176,11 +159,10 @@ class CoreCoordinator:
     # compiled spmd programs kept per coordinator (LRU): fused ladder
     # programs are expensive to trace, and back-to-back run_matrix
     # calls must not re-trace/re-transfer what they just built.  Each
-    # entry also holds its placed operand arrays, so the bound is a
-    # MEMORY bound; the fused path needs one entry per ladder
-    # signature where the legacy per-rung path needs K — big sweeps
-    # can overflow the default on the legacy path (raise
-    # ``spmd_cache_cap`` to trade memory for re-compiles).
+    # entry also holds its placed operands, so the cap is a MEMORY
+    # bound; the legacy per-rung path needs K entries per ladder where
+    # the fused paths need one (raise ``spmd_cache_cap`` to trade
+    # memory for re-compiles).
     _SPMD_CACHE_CAP = 32
 
     def __init__(self, pool_mgr: Optional[PoolManager] = None,
@@ -190,64 +172,51 @@ class CoreCoordinator:
                  spmd_dispatch: str = "batched",
                  spmd_samples: int = 3,
                  spmd_cache_cap: Optional[int] = None,
+                 spmd_pack: str = "auto",
                  compile_cache_dir: Optional[str] = None):
         self.platform = platform or detect_platform()
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
             backend = "tpu" if jax.default_backend() == "tpu" else "simulate"
         assert backend in ("simulate", "interpret", "tpu", "spmd"), backend
-        self.backend = backend
         # what fills the spmd backend's rung measured regions: real
-        # Pallas kernels ("pallas": stream/chase/copy, compiled on TPU
-        # and interpret-mode elsewhere) or the pure-jnp traffic loops
-        # ("jnp", the PR-2 stand-ins).  "auto" probes the host backend
-        # via compat.pallas_supported() and falls back honestly; the
-        # resolved choice is stamped into every executed curve's
-        # ``execution["activity"]`` provenance.
+        # Pallas kernels ("pallas") or pure-jnp traffic loops ("jnp");
+        # "auto" probes compat.pallas_supported() and falls back
+        # honestly, stamped into ``execution["activity"]`` provenance
         assert spmd_activity in ("auto", "pallas", "jnp"), spmd_activity
-        self.spmd_activity = spmd_activity
-        # how the spmd backend dispatches a sweep: "batched" (default)
-        # groups same-signature ladders ACROSS the whole matrix and
-        # executes each group as ONE stacked dispatch (the fused
-        # ladder's lax.scan gains a leading scenario axis — ~1 dispatch
-        # per distinct role-program signature per sweep); "ladder"
-        # fuses the K rungs of ONE ladder into one dispatch (scanned
-        # psum sandwiches, per-rung in-dispatch device_clock timing);
-        # "rung" is the legacy one-dispatch-per-rung path (host
-        # wall-clock, median-of-3).  "batched"/"ladder" need an
-        # in-dispatch timestamp source and fall back to "rung"
-        # honestly when compat.device_clock_source() reports none; the
-        # resolved choice lands in every curve's
-        # ``execution["timing_source"]`` ("device" vs "host"), and the
-        # batched path additionally stamps ``execution["batched"]`` /
-        # ``["group_size"]``.
+        # sweep dispatch granularity: "batched" (default) stacks
+        # same-signature ladders into ONE dispatch per group, "ladder"
+        # fuses one ladder per dispatch, "rung" is the legacy
+        # one-dispatch-per-rung path.  "batched"/"ladder" need an
+        # in-dispatch timestamp source and fall back to "rung" when
+        # compat.device_clock_source() reports none; the resolved
+        # choice lands in ``execution["timing_source"]``.
         assert spmd_dispatch in ("batched", "ladder", "rung"), spmd_dispatch
         assert spmd_samples >= 1, spmd_samples
+        # engine-subset width-packing (the planner transform): "auto"
+        # packs same-signature shallow ladders side by side whenever
+        # the mesh is at least twice a ladder's width ("off" disables;
+        # bools accepted).  Packing changes no dispatch-count
+        # accounting — a packed dispatch still counts ONE host sync
+        # for its whole group — it trades scan waves for mesh width.
+        if isinstance(spmd_pack, bool):
+            spmd_pack = "auto" if spmd_pack else "off"
+        assert spmd_pack in ("auto", "off"), spmd_pack
+        self.backend = backend
+        self.spmd_activity = spmd_activity
         self.spmd_dispatch = spmd_dispatch
         self.spmd_samples = spmd_samples
+        self.spmd_pack = spmd_pack
         self.spmd_cache_cap = (spmd_cache_cap if spmd_cache_cap
                                is not None else self._SPMD_CACHE_CAP)
         assert self.spmd_cache_cap >= 1, self.spmd_cache_cap
-        # (program key) -> [mesh, fn, fenced, xf, xi, aot]; mutable
-        # entries because donated dispatches rebind the operand arrays
-        from collections import OrderedDict
-        self._spmd_programs: "OrderedDict[Tuple, list]" = OrderedDict()
-        # opt-in persistent compile cache: repeated harness/CI/process
-        # runs reuse on-disk XLA executables for cacheable programs.
-        # NOTE: the underlying JAX config is PROCESS-GLOBAL — enabling
-        # it here serves every compile in the process (other
-        # coordinators included), and a second coordinator with a
-        # different dir re-points the whole process; the attribute
-        # below records only what THIS coordinator requested
-        # (compat.persistent_cache documents scope + the host-callback
-        # caveat)
+        # stage 3 of the exec pipeline: program/operand LRU, AOT
+        # compile, opt-in persistent compile cache, dispatch + decode
+        self._dispatcher = Dispatcher(self.spmd_cache_cap, spmd_samples,
+                                      compile_cache_dir)
         self.compile_cache_dir = compile_cache_dir
-        if compile_cache_dir:
-            from repro import compat
-            self.persistent_cache_enabled = compat.persistent_cache(
-                compile_cache_dir)
-        else:
-            self.persistent_cache_enabled = False
+        self.persistent_cache_enabled = \
+            self._dispatcher.persistent_cache_enabled
 
     def _resolved_activity(self) -> str:
         """The rung-activity implementation the spmd backend will use."""
@@ -258,10 +227,8 @@ class CoreCoordinator:
 
     def _resolved_dispatch(self) -> str:
         """The spmd dispatch mode that will actually run: the fused
-        ladder and the sweep-batched stacking both need an in-dispatch
-        timestamp source (per-rung elapsed comes from device_clock
-        deltas; without one, only the host-timed per-rung path is
-        honest)."""
+        paths need an in-dispatch timestamp source (without one, only
+        the host-timed per-rung path is honest)."""
         from repro import compat
         if self.spmd_dispatch == "rung":
             return "rung"
@@ -269,34 +236,18 @@ class CoreCoordinator:
             return "rung"
         return self.spmd_dispatch
 
-    # -- spmd program cache (LRU, coordinator lifetime) -----------------
-    def _program_cache_get(self, key: Tuple,
-                           stats: Optional["DispatchStats"] = None):
-        entry = self._spmd_programs.get(key)
-        if entry is not None:
-            self._spmd_programs.move_to_end(key)
-            if stats is not None:
-                stats.program_cache_hits += 1
-        return entry
+    # -- spmd program cache (LRU, coordinator lifetime; the storage
+    # -- lives on the Dispatcher, these delegates are the stable API) --
+    @property
+    def _spmd_programs(self):
+        return self._dispatcher.cache.entries
 
-    def _program_cache_put(self, key: Tuple, entry: list) -> None:
-        self._spmd_programs[key] = entry
-        self._spmd_programs.move_to_end(key)
-        while len(self._spmd_programs) > self.spmd_cache_cap:
-            _k, evicted = self._spmd_programs.popitem(last=False)
-            # the cap is a MEMORY bound: dropping only the dict entry
-            # would leave the evicted program's placed (and possibly
-            # donation-aliased) operand buffers alive on the devices
-            # until Python GC got around to them — delete the device
-            # buffers eagerly so a capped cache cannot pin memory for
-            # programs it no longer holds
-            for arr in evicted[3:5]:
-                delete = getattr(arr, "delete", None)
-                if delete is not None:
-                    try:
-                        delete()
-                    except Exception:
-                        pass        # already consumed by donation
+    def _program_cache_get(self, key: Tuple,
+                           stats: Optional[DispatchStats] = None):
+        return self._dispatcher.cache.get(key, stats)
+
+    def _program_cache_put(self, key: Tuple, entry) -> None:
+        self._dispatcher.cache.put(key, entry)
 
     # -- Experiment Instantiator ----------------------------------------
     def validate(self, cfg: ExperimentConfig) -> None:
@@ -428,11 +379,10 @@ class CoreCoordinator:
 
     def validate_spec(self, spec: ScenarioSpec) -> None:
         from repro.core.workloads import _REGISTRY
-        # exact-duplicate observers (same pool/strategy/shape/buffers)
-        # would alias one curve key per buffer and silently overwrite
-        # each other's ladders in CurveDB — reject them up front
-        # (observers differing in ANY field, e.g. buffer ladders, are
-        # legitimate twins and key distinctly via the buf= suffix)
+        # exact-duplicate observers would alias one curve key per
+        # buffer and silently overwrite each other's ladders in
+        # CurveDB — reject up front (observers differing in ANY field
+        # are legitimate twins and key distinctly via the buf= suffix)
         seen = set()
         for obs in spec.observers:
             if obs in seen:
@@ -480,14 +430,12 @@ class CoreCoordinator:
     def _model_spec_scenario(self, spec: ScenarioSpec,
                              observer: ObserverSpec, buffer_bytes: int,
                              k: int) -> Tuple[float, float, float]:
-        """Model one rung of the ladder: one observer + k stress engines
-        distributed round-robin over the stressor ensemble — plus, for a
-        *coupled* multi-observer scenario, one always-on single-engine
-        class per sibling observer (:func:`sim.co_observer_class`): the
-        siblings are part of this observer's measured region at every
-        rung, exactly like the spmd backend's executed rungs.  With
-        ``spec.coupled=False`` each observer sees only the stressor
-        ensemble (the historical semantics)."""
+        """Model one rung: one observer + k stress engines distributed
+        round-robin over the stressor ensemble — plus, for a *coupled*
+        multi-observer scenario, one always-on single-engine class per
+        sibling observer (:func:`sim.co_observer_class`), exactly like
+        the spmd backend's executed rungs.  ``spec.coupled=False``
+        keeps the historical stressor-only semantics."""
         obs_act = self._obs_activity(observer, buffer_bytes)
         obs_pool = self.pools.pool(observer.pool)
         first = spec.stressors[0] if spec.stressors else None
@@ -539,19 +487,12 @@ class CoreCoordinator:
         return spec.coupled_siblings(observer)
 
     def _ladder_depth(self, spec: ScenarioSpec) -> int:
-        n = (spec.max_stressors + 1 if spec.max_stressors is not None
-             else self.platform.n_engines)
-        n = min(n, self.platform.n_engines)
-        if self.backend == "spmd":
-            # rung k needs k stress engines + 1 observer on the mesh —
-            # plus one engine per coupled sibling observer, which runs
-            # live inside every rung (same count for every observer)
-            n_sib = len(spec.observers) - 1 if spec.coupled else 0
-            n = min(n, self._spmd_engines() - n_sib)
-        return max(1, n)
+        mesh = self._spmd_engines() if self.backend == "spmd" else None
+        return exec_plan.ladder_depth(spec, self.platform.n_engines,
+                                      mesh)
 
     def run_matrix(self, specs: List[ScenarioSpec], *,
-                   batched: bool = True) -> "MatrixResult":
+                   batched: bool = True) -> MatrixResult:
         """Execute a scenario matrix.
 
         The measured observer pass is where executable backends spend
@@ -565,21 +506,20 @@ class CoreCoordinator:
 
         Backends: ``simulate``/``interpret``/``tpu`` model the
         contention ladder per rung (interpret/tpu additionally measure
-        the uncontended observer); ``spmd`` *executes* every rung —
-        observer + coupled sibling observers + k live stressor engines
-        between two psum barriers — and the resulting curves carry
-        ``source == "executed"``.  On the spmd backend ``batched=True``
-        additionally applies SWEEP-LEVEL megabatching (the default
-        ``spmd_dispatch="batched"``): ladders are grouped by
-        role-program signature across the whole matrix and every group
-        executes as ONE stacked dispatch, so a sweep costs ~one
-        host-synchronous dispatch per distinct signature instead of
-        one per ladder; ``batched=False`` degrades the batched mode to
+        the uncontended observer); ``spmd`` *executes* every rung and
+        its curves carry ``source == "executed"``.  On the spmd
+        backend ``batched=True`` (with ``spmd_dispatch="batched"``)
+        applies SWEEP-LEVEL megabatching: the planner stacks
+        same-signature ladders into ONE dispatch per group — and
+        width-packs shallow groups onto disjoint engine subsets
+        (``spmd_pack``) — so a sweep costs ~one host-synchronous
+        dispatch per distinct signature; ``batched=False`` degrades to
         one fused dispatch per ladder.  Every curve's ``execution``
         provenance records the backend, executed-vs-modeled rungs,
-        effective ``coupled`` state, the rung ``activity`` ("pallas"
-        kernels, "jnp" fallback loops, or "none"), and — for spmd —
-        ``batched``/``group_size``/``aot``."""
+        effective ``coupled`` state, the rung ``activity``, and — for
+        spmd — ``batched``/``group_size``/``aot`` plus the
+        width-packing slot ``packed``/``subset_width``/
+        ``subset_index``."""
         for spec in specs:
             self.validate_spec(spec)
         triples = [(spec, obs, b) for spec in specs
@@ -603,68 +543,33 @@ class CoreCoordinator:
         else:
             activity = "none"       # nothing executes on this backend
 
-        runs: List[ScenarioRun] = []
-        for i, (spec, obs, buf) in enumerate(triples):
-            n_scen = self._ladder_depth(spec)
-            scenarios = []
-            exec_rungs = []
-            for k in range(n_scen):
-                bw, lat, sbw = self._model_spec_scenario(spec, obs, buf, k)
-                stats.model_evals += 1
-                ex = executed.get((i, k))
-                main_res = ex if ex is not None else (
-                    measured.get(i) or WorkloadResult(
-                        obs.strategy, obs.pool, buf, spec.iters, 0, 0.0,
-                        0))
-                if ex is not None:
-                    exec_rungs.append(k)
-                scenarios.append(ScenarioResult(
-                    n_stressors=k, main=main_res, modeled_bw_gbps=bw,
-                    modeled_lat_ns=lat, stress_bw_gbps=sbw,
-                    source="executed" if ex is not None else "modeled"))
-            execution = {
-                "backend": self.backend,
-                "executed_rungs": exec_rungs,
-                "modeled_rungs": [k for k in range(n_scen)
-                                  if k not in exec_rungs],
-                "measured_uncontended": i in measured,
-                # whether this curve's siblings were part of its
-                # measured region / queueing network (effective
-                # coupling: a single-observer spec couples nothing)
-                "coupled": bool(spec.coupled and len(spec.observers) > 1),
-                # what fills the measured region: "pallas" (real
-                # kernels), "jnp" (traffic loops), "none" (modeled)
-                "activity": activity,
-            }
-            if self.backend == "spmd":
-                execution["n_engines"] = self._spmd_engines()
-                # the structurally VERIFIED fence state of this
-                # ladder's executed programs (jaxpr dataflow check)
-                execution["fenced"] = fenced_by_triple.get(i, False)
-                # how the executed rungs were timed: "device" (fused
-                # ladder, in-dispatch device_clock deltas) or "host"
-                # (legacy per-rung wall clock), plus the per-rung
-                # sample spreads and the host-synchronous dispatch
-                # count this ladder cost
-                execution.update(timing_by_triple.get(i, {}))
-                execution["operand_memory_kinds"] = sorted(
-                    {self.pools.pool(p).effective_memory_kind()
-                     or "default"
-                     for p in ([obs.pool]
-                               + [o.pool for o in
-                                  self._coupled_siblings(spec, obs)]
-                               + [s.pool for s in spec.stressors])})
-            runs.append(ScenarioRun(spec=spec, buffer_bytes=buf,
-                                    key=spec.key_for(obs, buf),
-                                    observer=obs,
-                                    scenarios=scenarios,
-                                    execution=execution))
+        runs = assemble_runs(
+            triples, backend=self.backend, activity=activity,
+            stats=stats, depth_fn=self._ladder_depth,
+            model_fn=self._model_spec_scenario, measured=measured,
+            executed=executed, fenced_by_triple=fenced_by_triple,
+            timing_by_triple=timing_by_triple,
+            n_engines=(self._spmd_engines()
+                       if self.backend == "spmd" else None),
+            operand_kinds_fn=(self._operand_memory_kinds
+                              if self.backend == "spmd" else None))
         return MatrixResult(runs=runs, stats=stats)
 
+    def _operand_memory_kinds(self, spec: ScenarioSpec,
+                              obs: ObserverSpec) -> List[str]:
+        return sorted(
+            {self.pools.pool(p).effective_memory_kind() or "default"
+             for p in ([obs.pool]
+                       + [o.pool for o in
+                          self._coupled_siblings(spec, obs)]
+                       + [s.pool for s in spec.stressors])})
+
     def _measure_triples(self, triples, batched: bool,
-                         stats: "DispatchStats") -> Dict[int, WorkloadResult]:
+                         stats: DispatchStats) -> Dict[int, WorkloadResult]:
         """The measured observer pass over all (spec, observer, buffer)
-        triples (uncontended: single real device)."""
+        triples (uncontended: single real device).  Grouping comes from
+        the SAME planner as the spmd backend
+        (:func:`repro.core.exec.plan.observer_groups`)."""
         measured: Dict[int, WorkloadResult] = {}
         if not batched:
             for i, (spec, obs, buf) in enumerate(triples):
@@ -678,21 +583,7 @@ class CoreCoordinator:
                 stats.measure_dispatches += 1
             return measured
 
-        # Group signature: everything that changes the compiled measured
-        # pass or the numbers stamped on its results.  ``iters`` is part
-        # of the signature — members must be measured at THEIR OWN
-        # budget, not silently at the group max.  The pool appears only
-        # through its *effective* placement: observers from different
-        # pools whose arrays land in the same physical memory (e.g. hbm
-        # + emulated host on this container) legally share one stacked
-        # vmapped batch; pools that really differ split.
-        groups: Dict[Tuple, List[int]] = {}
-        for i, (spec, obs, buf) in enumerate(triples):
-            pool = self.pools.pool(obs.pool)
-            sig = (obs.strategy, obs.shape, buf, spec.iters,
-                   pool.effective_memory_kind(),
-                   pool.node.kind == "vmem")
-            groups.setdefault(sig, []).append(i)
+        groups = exec_plan.observer_groups(triples, self.pools)
         for (strategy, shape, buf, iters, _kind, _vm), idxs in \
                 groups.items():
             member_pools = [self.pools.pool(triples[i][1].pool)
@@ -710,20 +601,30 @@ class CoreCoordinator:
     def _spmd_engines(self) -> int:
         return max(1, min(self.platform.n_engines, len(jax.devices())))
 
+    def _spmd_group_key(self, spec: ScenarioSpec, obs: ObserverSpec,
+                        buf: int) -> Tuple:
+        """Sweep-level grouping key (see
+        :func:`repro.core.exec.plan.group_key`)."""
+        return exec_plan.group_key(spec, obs, buf, self.pools)
+
+    # rung role expansion (see exec.plan.rung_roles)
+    _rung_roles = staticmethod(exec_plan.rung_roles)
+
     def _execute_spmd(
-        self, triples, stats: "DispatchStats", activity: str = "jnp",
+        self, triples, stats: DispatchStats, activity: str = "jnp",
         batched: bool = True,
     ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool],
                Dict[int, Dict[str, Any]]]:
         """Execute every (spec, observer, buffer) triple's contention
-        ladder on the engine mesh — same-signature ladders stacked into
-        ONE dispatch per group (``spmd_dispatch="batched"``, the
-        default), the whole ladder as one fused dispatch per triple
-        (``"ladder"``), or one dispatch per rung (``"rung"``, the
-        legacy path).  Returns the per-(triple, rung) observer results,
-        the verified fence state per triple, and per-triple timing
-        provenance (source, sample spreads, host-synchronous dispatch
-        counts, batching/AOT state)."""
+        ladder on the engine mesh through the exec pipeline: the
+        planner builds a DispatchPlan (one dispatch per same-signature
+        group when ``spmd_dispatch="batched"``, per triple under
+        ``"ladder"``), width-packing re-plans shallow groups onto
+        disjoint engine subsets, and the Dispatcher builds,
+        fence-verifies and runs each planned dispatch (``"rung"`` is
+        the legacy host-clocked one-dispatch-per-rung path).  Returns
+        per-(triple, rung) observer results, per-triple verified fence
+        state, and per-triple timing provenance."""
         n_eng = self._spmd_engines()
         if n_eng < 2:
             raise ValidationError(
@@ -736,1069 +637,62 @@ class CoreCoordinator:
         dispatch = self._resolved_dispatch()
         if dispatch == "batched" and not batched:
             dispatch = "ladder"       # megabatching explicitly disabled
-        if dispatch == "batched":
-            from collections import OrderedDict
-            groups: "OrderedDict[Tuple, List[int]]" = OrderedDict()
-            for i, (spec, obs, buf) in enumerate(triples):
-                key = self._spmd_group_key(spec, obs, buf)
-                groups.setdefault(key, []).append(i)
-            stats.spmd_groups += len(groups)
-            for idxs in groups.values():
-                members = [triples[i] for i in idxs]
-                results, fenced, timings = self._run_spmd_group(
-                    members, n_eng, stats, activity)
-                for g, i in enumerate(idxs):
-                    for k, res in enumerate(results[g]):
-                        executed[(i, k)] = res
+        if dispatch in ("batched", "ladder"):
+            plan = exec_plan.build_plan(
+                triples, n_eng, self.pools, self.platform.n_engines,
+                grouped=(dispatch == "batched"))
+            if dispatch == "batched":
+                stats.spmd_groups += len(plan.dispatches)
+                if self.spmd_pack == "auto":
+                    plan = exec_plan.pack_engine_subsets(plan)
+            for planned in plan.dispatches:
+                med, spread, fenced, aot = self._dispatcher.run_planned(
+                    planned, n_eng, activity, dispatch, stats)
+                for g, entry in enumerate(planned.entries):
+                    i = entry.index
+                    obs, buf = entry.observer, entry.buffer_bytes
+                    for k in range(planned.n_scen):
+                        executed[(i, k)] = observer_result(
+                            obs, buf, entry.spec.iters,
+                            float(max(med[g, k], 1.0)))
                     fenced_by_triple[i] = fenced
-                    timing_by_triple[i] = timings[g]
+                    _wave, subset = planned.member_slot(g)
+                    timing_by_triple[i] = {
+                        "timing_source": "device",
+                        "samples": self.spmd_samples,
+                        "rung_time_spread_ns": [int(s)
+                                                for s in spread[g]],
+                        "dispatches": 1,
+                        "batched": dispatch == "batched",
+                        "group_size": planned.group,
+                        "aot": aot,
+                        "packed": planned.packed,
+                        "subset_width": planned.subset_width,
+                        "subset_index": subset,
+                    }
             return executed, fenced_by_triple, timing_by_triple
         for i, (spec, obs, buf) in enumerate(triples):
-            if dispatch == "ladder":
-                results, fenced, timing = self._run_spmd_ladder(
-                    spec, obs, buf, n_eng, stats, activity)
-                for k, res in enumerate(results):
-                    executed[(i, k)] = res
-            else:
-                fenced, timing = True, {
-                    "timing_source": "host",
-                    "samples": self.spmd_samples,
-                    "rung_time_spread_ns": [], "dispatches": 0,
-                    "batched": False, "group_size": 1, "aot": True}
-                for k in range(self._ladder_depth(spec)):
-                    res, rung_fenced, spread, rung_aot = \
-                        self._run_spmd_rung(spec, obs, buf, k, n_eng,
-                                            stats, activity=activity)
-                    executed[(i, k)] = res
-                    fenced = fenced and rung_fenced
-                    timing["aot"] = timing["aot"] and rung_aot
-                    timing["rung_time_spread_ns"].append(spread)
-                    # 1 warm + the timed samples
-                    timing["dispatches"] += 1 + self.spmd_samples
+            fenced, timing = True, {
+                "timing_source": "host",
+                "samples": self.spmd_samples,
+                "rung_time_spread_ns": [], "dispatches": 0,
+                "batched": False, "group_size": 1, "aot": True,
+                "packed": False, "subset_width": n_eng,
+                "subset_index": 0}
+            for k in range(self._ladder_depth(spec)):
+                roles, role_pools = exec_plan.rung_roles(
+                    spec, obs, buf, k, n_eng)
+                kind = exec_plan.operand_kind(role_pools, self.pools)
+                elapsed, rung_fenced, spread, rung_aot = \
+                    self._dispatcher.run_rung(roles, n_eng, activity,
+                                              kind, stats)
+                executed[(i, k)] = observer_result(obs, buf, spec.iters,
+                                                   elapsed)
+                fenced = fenced and rung_fenced
+                timing["aot"] = timing["aot"] and rung_aot
+                timing["rung_time_spread_ns"].append(spread)
+                # 1 warm + the timed samples
+                timing["dispatches"] += 1 + self.spmd_samples
             fenced_by_triple[i] = fenced
             timing_by_triple[i] = timing
         return executed, fenced_by_triple, timing_by_triple
-
-    def _spmd_group_key(self, spec: ScenarioSpec, obs: ObserverSpec,
-                        buf: int) -> Tuple:
-        """Sweep-level grouping key: triples with equal keys expand to
-        the SAME per-rung role tables and operand placement, so their
-        ladders legally stack into one batched dispatch.  The
-        spec-level role signature (pool-free — see
-        :meth:`ScenarioSpec.ladder_signature`) is refined by each role
-        pool's *effective* memory kind: pools that differ only in name
-        but land in one physical memory merge (like the interpret
-        path's signature groups); pools that really differ split."""
-        kinds = tuple(self.pools.pool(p).effective_memory_kind()
-                      for p in spec.role_pools(obs))
-        return (spec.ladder_signature(obs, buf), kinds)
-
-    def _build_ladder_entry(self, per_rung, n_eng: int, activity: str,
-                            samples: int, kind: Optional[str],
-                            group: int, stats: "DispatchStats") -> list:
-        """Build, fence-verify, place and (where the installed JAX
-        allows) AOT-compile one fused ladder program — ``group > 1``
-        stacks the scan table for a whole same-signature group, the
-        scanned edition of a leading scenario axis.  The program is
-        traced exactly ONCE (``compat.aot_trace``): the same trace
-        feeds the structural fence walk and ``lower().compile()``."""
-        from repro import compat
-
-        deep_roles = per_rung[-1][0]
-        rows_max = max(r[2] for r in deep_roles)
-        xf, xi = _build_rung_operands(deep_roles, n_eng, rows_max)
-        branch_fns: List = []
-        branch_of: Dict[Tuple, int] = {}
-        table = np.zeros((len(per_rung), n_eng), np.int32)
-        for k, (roles, _pools) in enumerate(per_rung):
-            for e, sig in enumerate(roles):
-                if sig not in branch_of:
-                    branch_of[sig] = len(branch_fns)
-                    branch_fns.append(_spmd_branch_fn(
-                        *sig, activity=activity))
-                table[k, e] = branch_of[sig]
-        if group > 1:
-            # the leading scenario axis: ladder g's rungs are scan
-            # steps [g*K, (g+1)*K) — every stacked rung keeps its own
-            # psum sandwich and stamp pair, and the scan carry
-            # serializes ladder g+1 behind ladder g exactly like rung
-            # k+1 behind rung k (invariant 4, across the whole group)
-            table = np.tile(table, (group, 1))
-        mesh, fn = build_ladder_program(
-            n_eng, branch_fns, table, samples=samples,
-            donate=compat.donation_supported())
-        # commit the operands onto the mesh BEFORE tracing: the AOT
-        # executable is specialized to the placed shardings, and the
-        # fence walk sees the same program the dispatch runs
-        from jax.sharding import PartitionSpec as P
-        sharding = compat.named_sharding(mesh, P("engine"), kind)
-        xf = jax.device_put(xf, sharding)
-        xi = jax.device_put(xi, sharding)
-        jax.block_until_ready((xf, xi))
-        traced = compat.aot_trace(fn, xf, xi)
-        # provenance records the VERIFIED fence state of every scanned
-        # rung of every stacked ladder, not an assertion (compat
-        # degradation is honestly reported as unfenced)
-        fenced = measured_region_is_fenced(
-            fn, xf, xi, jaxpr=getattr(traced, "jaxpr", None))
-        compiled = compat.aot_compile(fn, xf, xi, traced=traced)
-        stats.programs_built += 1
-        if compiled is not None:
-            stats.aot_compiles += 1
-        return [mesh, compiled if compiled is not None else fn, fenced,
-                xf, xi, compiled is not None]
-
-    def _dispatch_ladder_entry(self, entry: list, group: int,
-                               n_scen: int, samples: int,
-                               stats: "DispatchStats"):
-        """ONE host-synchronous dispatch executes ``group`` stacked
-        ladders of ``n_scen`` rungs each; returns the per-(ladder,
-        rung) elapsed medians and sample spreads decoded from engine
-        0's in-dispatch stamp pairs."""
-        _mesh, call, fenced, xf, xi = entry[:5]
-        out = jax.block_until_ready(call(xf, xi))
-        stats.host_sync_dispatches += 1
-        stats.measure_dispatches += 1
-        stats.spmd_rungs += group * n_scen
-        # donated dispatch consumed the cached operands; rebind the
-        # returned (aliased in place where donation is real) arrays
-        entry[3], entry[4] = out[3], out[4]
-        # engine 0 is the observer: its [s, ns] stamp pairs bracket
-        # each scanned sandwich, stop stamp taken after the stop psum
-        # (i.e. when the SLOWEST engine finished — paper invariant 3)
-        t0 = np.asarray(out[1])[0].reshape(group, n_scen, samples, 2)
-        t1 = np.asarray(out[2])[0].reshape(group, n_scen, samples, 2)
-        d = ((t1[..., 0].astype(np.int64) - t0[..., 0]) * 1_000_000_000
-             + (t1[..., 1] - t0[..., 1]))
-        med = np.median(d, axis=2)                      # (group, n_scen)
-        spread = d.max(axis=2) - d.min(axis=2)
-        return med, spread, fenced
-
-    def _run_spmd_group(self, members, n_eng: int,
-                        stats: "DispatchStats", activity: str = "jnp",
-                        ) -> Tuple[List[List[WorkloadResult]], bool,
-                                   List[Dict[str, Any]]]:
-        """A whole same-signature ladder GROUP as one stacked dispatch:
-        the fused ladder program's scan gains a leading scenario axis
-        (ladder-major step order), every stacked rung keeps its own
-        psum sandwich + device_clock stamp pair, and the host blocks
-        ONCE for the entire group.  A 64-ladder sweep with S distinct
-        signatures costs S host-synchronous dispatches and S cache
-        entries instead of 64 — the sweep-level extension of the
-        per-ladder fusion, attacking the warm-path dispatch tax."""
-        spec0, obs0, buf0 = members[0]
-        group = len(members)
-        n_scen = self._ladder_depth(spec0)
-        samples = self.spmd_samples
-        per_rung = [self._rung_roles(spec0, obs0, buf0, k, n_eng)
-                    for k in range(n_scen)]
-        kind = self._operand_kind(
-            [p for _r, pools in per_rung for p in pools])
-        key = ("batched", n_eng, activity, kind, samples, group,
-               tuple(tuple(r) for r, _p in per_rung))
-        entry = self._program_cache_get(key, stats)
-        if entry is None:
-            entry = self._build_ladder_entry(per_rung, n_eng, activity,
-                                             samples, kind, group, stats)
-            self._program_cache_put(key, entry)
-        aot = entry[5]
-        med, spread, fenced = self._dispatch_ladder_entry(
-            entry, group, n_scen, samples, stats)
-        results: List[List[WorkloadResult]] = []
-        timings: List[Dict[str, Any]] = []
-        for g, (spec, obs, buf) in enumerate(members):
-            results.append([
-                self._observer_result(obs, buf, spec.iters,
-                                      float(max(med[g, k], 1.0)))
-                for k in range(n_scen)])
-            timings.append({
-                "timing_source": "device",
-                "samples": samples,
-                "rung_time_spread_ns": [int(s) for s in spread[g]],
-                "dispatches": 1,
-                "batched": True,
-                "group_size": group,
-                "aot": aot,
-            })
-        return results, fenced, timings
-
-    def _rung_roles(self, spec: ScenarioSpec, obs: ObserverSpec,
-                    buf: int, k: int, n_eng: int,
-                    ) -> Tuple[List[Tuple], List[str]]:
-        """The per-engine role layout of rung k: engine 0 runs the
-        observer, the next engines its coupled sibling observers (every
-        observer of a coupled multi-observer spec is live inside every
-        sibling's measured region), then k stressor engines (ensemble
-        round-robin), the rest idle.  Returns ``(roles, role_pools)``
-        with one ``(strategy, shape, rows, iters)`` tuple per engine.
-
-        Sibling and stressor iteration budgets are work-balanced
-        against the passes the observer branch will actually execute
-        (its duty cycle included, via :func:`_effective_duty` on BOTH
-        sides of the division) so role imbalance does not masquerade
-        as contention; residual per-kind speed differences (a chase
-        row costs more than a stream row) remain and are what the
-        in-dispatch rung clocks measure."""
-        iters = spec.iters
-        obs_rows = _wl_rows(buf)
-        roles: List[Tuple] = [(obs.strategy, obs.shape, obs_rows, iters)]
-        role_pools = [obs.pool]
-        m = len(spec.stressors)
-        obs_work = obs_rows * max(
-            1, round(iters * _effective_duty(obs.shape)))
-        for sib in self._coupled_siblings(spec, obs)[:n_eng - 1]:
-            sib_rows = _wl_rows(sib.buffers[0])
-            sib_iters = max(1, round(
-                obs_work / (sib_rows * _effective_duty(sib.shape))))
-            roles.append((sib.strategy, sib.shape, sib_rows, sib_iters))
-            role_pools.append(sib.pool)
-        for e in range(min(k, n_eng - len(roles))):
-            if m:
-                s = spec.stressors[e % m]
-                s_rows = _wl_rows(s.buffer_bytes)
-                s_iters = max(1, round(
-                    obs_work / (s_rows * _effective_duty(s.shape))))
-                roles.append((s.strategy, s.shape, s_rows, s_iters))
-                role_pools.append(s.pool)
-            else:
-                roles.append(("i", None, 1, iters))
-                role_pools.append(obs.pool)
-        while len(roles) < n_eng:
-            roles.append(("i", None, 1, iters))
-            role_pools.append(obs.pool)
-        return roles, role_pools
-
-    def _operand_kind(self, role_pools) -> Optional[str]:
-        """Per-pool operand placement: when every engine's pool lands
-        in one effective memory kind, the stacked operands carry that
-        kind's sharding into the fused dispatch; mixed-pool programs
-        fall back to the default memory (one stacked array has one
-        memory kind — per-engine kinds need a real multi-chip slice
-        and per-pool operand splitting, the remaining ROADMAP item)."""
-        kinds = {self.pools.pool(p).effective_memory_kind()
-                 for p in role_pools}
-        return kinds.pop() if len(kinds) == 1 else None
-
-    def _observer_result(self, obs: ObserverSpec, buf: int, iters: int,
-                         elapsed: float) -> WorkloadResult:
-        """Stamp one executed rung's observer measurement.  Uses the
-        RESOLVED strategy letter, like the interpret-path group
-        measurement does: the executed branch for a mixed 'r' observer
-        is the 'b' loop, and provenance must say so."""
-        obs_rows = _wl_rows(buf)
-        strat = resolve_strategy(obs.strategy, obs.shape)
-        n_active = max(1, int(round(iters * _effective_duty(obs.shape))))
-        if strat in _SPMD_CHASES:
-            # elapsed spans n_active full traversals: bytes and
-            # transactions both scale with it (latency = elapsed/tx)
-            return WorkloadResult(strat, obs.pool, buf, iters,
-                                  obs_rows * LINE_BYTES * n_active,
-                                  elapsed,
-                                  transactions=obs_rows * n_active)
-        mult = 2 if strat in _SPMD_STREAM_2X else 1
-        return WorkloadResult(strat, obs.pool, buf, iters,
-                              mult * obs_rows * LINE_BYTES * n_active,
-                              elapsed, 0)
-
-    def _run_spmd_ladder(self, spec: ScenarioSpec, obs: ObserverSpec,
-                         buf: int, n_eng: int, stats: "DispatchStats",
-                         activity: str = "jnp",
-                         ) -> Tuple[List[WorkloadResult], bool,
-                                    Dict[str, Any]]:
-        """The ENTIRE ladder (rungs k=0..K-1) as ONE fused dispatch.
-
-        :func:`build_ladder_program` scans over the K per-rung role
-        tables inside a single ``shard_map``; every scan step keeps its
-        own psum sandwich, and per-rung elapsed time is captured
-        IN-dispatch by ``compat.device_clock`` deltas — ``spmd_samples``
-        sandwiched repetitions per rung, median taken on the host.
-        Versus the legacy per-rung path this turns 4·K host-synchronous
-        round-trips per ladder into one, and removes Python dispatch
-        jitter from the measured region entirely (the fidelity gap the
-        kernel-level framework exists to close).
-
-        The compiled program and its placed (donated, where the backend
-        supports donation) operands live in the coordinator-level LRU
-        cache, so repeated ``run_matrix`` calls re-dispatch without
-        re-tracing or re-transferring."""
-        n_scen = self._ladder_depth(spec)
-        samples = self.spmd_samples
-        per_rung = [self._rung_roles(spec, obs, buf, k, n_eng)
-                    for k in range(n_scen)]
-        # ONE operand set serves every scanned rung: placement must
-        # agree across the whole ladder, not per rung.  (The DEEPEST
-        # rung holds every engine's non-idle role — shallower rungs
-        # only flip engines back to idle — so its layout decides
-        # operand shapes and chase chains inside the builder.)
-        kind = self._operand_kind(
-            [p for _r, pools in per_rung for p in pools])
-        key = ("ladder", n_eng, activity, kind, samples,
-               tuple(tuple(r) for r, _p in per_rung))
-        entry = self._program_cache_get(key, stats)
-        if entry is None:
-            entry = self._build_ladder_entry(per_rung, n_eng, activity,
-                                             samples, kind, 1, stats)
-            self._program_cache_put(key, entry)
-        aot = entry[5]
-        # ONE host-synchronous dispatch measures the whole ladder (no
-        # warm-up run: compilation happens before execution, and the
-        # per-rung median over `samples` in-dispatch repetitions
-        # absorbs first-touch effects)
-        med, spread, fenced = self._dispatch_ladder_entry(
-            entry, 1, n_scen, samples, stats)
-        results = [self._observer_result(obs, buf, spec.iters,
-                                         float(max(med[0, k], 1.0)))
-                   for k in range(n_scen)]
-        timing = {
-            "timing_source": "device",
-            "samples": samples,
-            "rung_time_spread_ns": [int(s) for s in spread[0]],
-            "dispatches": 1,
-            "batched": False,
-            "group_size": 1,
-            "aot": aot,
-        }
-        return results, fenced, timing
-
-    def _run_spmd_rung(self, spec: ScenarioSpec, obs: ObserverSpec,
-                       buf: int, k: int, n_eng: int,
-                       stats: "DispatchStats",
-                       activity: str = "jnp",
-                       ) -> Tuple[WorkloadResult, bool, int, bool]:
-        """The legacy per-rung path: one rung, one fused program —
-        all branches of a single ``shard_map`` dispatch whose measured
-        region sits between the two psum barriers of
-        :func:`build_rung_program` (the returned bool is the
-        structurally *verified* fence state of this rung's program,
-        the final int the spread of the host wall-time samples).
-
-        The wall time of the dispatch is the measured region: host
-        ``perf_counter_ns`` around ``block_until_ready``, median of
-        ``spmd_samples`` — which costs 1 + ``spmd_samples`` host
-        round-trips per rung (4 at the default) and includes Python
-        dispatch jitter.  The fused ladder path
-        (:meth:`_run_spmd_ladder`) replaces both; this path is kept
-        for comparison (``benchmarks/perf_harness.py``) and as the
-        fallback where no in-dispatch timestamp source exists."""
-        import time as _time
-
-        from repro import compat
-
-        roles, role_pools = self._rung_roles(spec, obs, buf, k, n_eng)
-        rows_max = max(r[2] for r in roles)
-        # the kind joins the cache key: identical role programs from
-        # differently-placed pools must not share operands
-        kind = self._operand_kind(role_pools)
-        program_key = ("rung", n_eng, activity, kind, tuple(roles))
-        entry = self._program_cache_get(program_key, stats)
-
-        if entry is not None:
-            # operands are fully determined by the cache key (chain
-            # seeds are engine indices): reuse the placed arrays too —
-            # no host-side rebuild, no repeated host->device transfer
-            _mesh, fn, fenced, xf, xi, aot = entry
-        else:
-            xf, xi = _build_rung_operands(roles, n_eng, rows_max)
-            branch_fns: List = []
-            engine_branch: List[int] = []
-            branch_of: Dict[Tuple, int] = {}
-            for sig in roles:
-                if sig not in branch_of:
-                    branch_of[sig] = len(branch_fns)
-                    branch_fns.append(_spmd_branch_fn(
-                        *sig, activity=activity))
-                engine_branch.append(branch_of[sig])
-            mesh, fn = build_rung_program(n_eng, branch_fns,
-                                          engine_branch)
-            # commit the operands onto the mesh BEFORE the measured
-            # region: a host array would be re-transferred inside
-            # every timed call, and the transfer (which scales with
-            # the widest role, not the observer) would dominate the
-            # measurement
-            from jax.sharding import PartitionSpec as P
-            sharding = compat.named_sharding(mesh, P("engine"), kind)
-            xf = jax.device_put(xf, sharding)
-            xi = jax.device_put(xi, sharding)
-            jax.block_until_ready((xf, xi))
-            # one trace serves the fence walk AND the AOT compile; the
-            # rung programs carry no host callbacks, so with a
-            # persistent cache enabled the compile is also reused
-            # across processes.  provenance records the VERIFIED fence
-            # state, not an assertion (compat.optimization_barrier
-            # degrades to identity on JAX releases without the op —
-            # there the psum folds away and this honestly reports
-            # unfenced)
-            traced = compat.aot_trace(fn, xf, xi)
-            fenced = measured_region_is_fenced(
-                fn, xf, xi, jaxpr=getattr(traced, "jaxpr", None))
-            compiled = compat.aot_compile(fn, xf, xi, traced=traced)
-            stats.programs_built += 1
-            if compiled is not None:
-                stats.aot_compiles += 1
-            aot = compiled is not None
-            fn = compiled if compiled is not None else fn
-            self._program_cache_put(program_key,
-                                    [mesh, fn, fenced, xf, xi, aot])
-        jax.block_until_ready(fn(xf, xi))          # warm (+ compile
-        samples = []                               # when not AOT-built)
-        for _ in range(self.spmd_samples):
-            t0 = _time.perf_counter_ns()
-            jax.block_until_ready(fn(xf, xi))
-            samples.append(_time.perf_counter_ns() - t0)
-        stats.host_sync_dispatches += 1 + self.spmd_samples
-        stats.measure_dispatches += 1
-        stats.spmd_rungs += 1
-        elapsed = float(np.median(samples))
-        res = self._observer_result(obs, buf, spec.iters, elapsed)
-        return res, fenced, int(max(samples) - min(samples)), aot
-
-
-# ---------------------------------------------------------------------------
-# Matrix-run result containers
-# ---------------------------------------------------------------------------
-
-
-@dataclass
-class ScenarioRun:
-    """One (scenario, observer, buffer) ladder."""
-    spec: ScenarioSpec
-    buffer_bytes: int
-    key: str
-    observer: Optional[ObserverSpec] = None   # which observer this curve is
-    scenarios: List[ScenarioResult] = field(default_factory=list)
-    # executed-vs-modeled provenance, persisted into CurveDB v2:
-    # {"backend", "executed_rungs", "modeled_rungs", ...}
-    execution: Dict[str, Any] = field(default_factory=dict)
-
-    def bandwidth_curve(self) -> List[Tuple[int, float]]:
-        return [(s.n_stressors,
-                 s.main.bandwidth_gbps if s.source == "executed"
-                 else (s.modeled_bw_gbps or s.main.bandwidth_gbps))
-                for s in self.scenarios]
-
-    def latency_curve(self) -> List[Tuple[int, float]]:
-        return [(s.n_stressors,
-                 s.main.latency_ns if s.source == "executed"
-                 else (s.modeled_lat_ns or s.main.latency_ns))
-                for s in self.scenarios]
-
-
-@dataclass
-class DispatchStats:
-    """Execution accounting for the matrix runner: the batched runner's
-    claim ("fewer dispatches than the per-point loop") and the spmd
-    backend's claim ("one fused SPMD dispatch per ladder rung") are
-    checked against these numbers in the tests."""
-    n_scenarios: int = 0            # ScenarioSpecs in the matrix
-    n_ladders: int = 0              # (spec, observer, buffer) ladders
-    measure_dispatches: int = 0     # timed executable measurement passes
-    model_evals: int = 0            # queueing-network solves
-    spmd_rungs: int = 0             # ladder rungs executed on the mesh
-    # host-blocking spmd program executions: the sweep-batched path
-    # does ONE per same-signature ladder GROUP (~ one per distinct
-    # program signature per sweep), the fused ladder path one per
-    # ladder, the legacy path 4 per RUNG (warm + 3 timed);
-    # benchmarks/perf_harness.py holds each contender to its number
-    host_sync_dispatches: int = 0
-    # compiled spmd programs (+ placed operands) reused from the
-    # coordinator-level LRU cache — across rungs, ladders, AND
-    # back-to-back run_matrix calls on one coordinator
-    program_cache_hits: int = 0
-    # sweep-level megabatching: distinct role-program signatures this
-    # run stacked ladders under (0 on the non-batched paths)
-    spmd_groups: int = 0
-    # spmd programs actually traced + compiled this run (cache
-    # misses), and how many of those went through the AOT
-    # lower().compile() pipeline (compat.aot_compile) — together with
-    # host_sync_dispatches these make the dispatch-vs-compile
-    # attribution in BENCH_spmd.json explicit
-    programs_built: int = 0
-    aot_compiles: int = 0
-
-
-@dataclass
-class MatrixResult:
-    runs: List[ScenarioRun] = field(default_factory=list)
-    stats: DispatchStats = field(default_factory=DispatchStats)
-
-
-# ---------------------------------------------------------------------------
-# The SPMD scenario program (the spin-lock sandwich, collective edition).
-# Built for any 1-D mesh of engines; executable on forced host devices in
-# this container and unchanged on a real slice.  The ``spmd`` backend
-# dispatches one of these programs per ladder rung.
-# ---------------------------------------------------------------------------
-
-_SPMD_CHASES = ("l", "m", "t")      # latency walks: dependent gathers
-_SPMD_STREAM_2X = ("c", "x")        # copy/rmw touch two lines per line
-
-
-def _build_rung_operands(roles, n_eng: int,
-                         rows_max: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-engine operands for one SPMD program: a float stream buffer
-    and an int chase chain (seeded by engine index), padded to the
-    widest role.  Operands are fully determined by the role layout, so
-    cached programs can reuse their placed arrays verbatim."""
-    from repro.kernels import ops as kops
-
-    xf = np.broadcast_to(
-        np.arange(rows_max * LINE_BYTES // 4, dtype=np.float32)
-        .reshape(rows_max, LINE_BYTES // 4),
-        (n_eng, rows_max, LINE_BYTES // 4)).copy()
-    xi = np.zeros((n_eng, rows_max, LINE_BYTES // 4), np.int32)
-    for e, (strategy, shape, rows, _ri) in enumerate(roles):
-        if resolve_strategy(strategy, shape) in _SPMD_CHASES:
-            if resolve_strategy(strategy, shape) == "t":
-                chain = kops.strided_chain_buffer(
-                    rows, getattr(shape, "stride", 8) or 8)
-            else:
-                chain = kops.chain_buffer(rows, seed=e)
-            xi[e, :rows, :chain.shape[1]] = chain
-    return xf, xi
-
-
-def _spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
-                    activity: str = "jnp"):
-    """Per-engine activity for one SPMD rung: ``(xf, xi) -> f32``.
-
-    All branches take the SAME operand pair and return a scalar so
-    ``lax.switch`` can fuse them; each closes over its own static row
-    count and iteration budget.  Loop bodies either carry the buffer or
-    re-issue it through ``optimization_barrier`` so XLA cannot hoist
-    the memory traffic out of the loop.
-
-    ``activity="pallas"`` builds the branch from the real kernel
-    library (:mod:`repro.kernels.stream` / ``chase``: mixed-stream,
-    copy, seeded write streams, strided/Sattolo chases — compiled on
-    TPU, interpret-mode elsewhere); ``"jnp"`` is the pure-jnp traffic
-    loop fallback for hosts where Pallas is unavailable
-    (``compat.pallas_supported``)."""
-    from repro import compat
-
-    strat = resolve_strategy(strategy, shape)
-    n = max(1, int(round(iters * _effective_duty(shape))))
-
-    if activity == "pallas" and strategy != "i":
-        return _pallas_branch_fn(strat, shape, rows, n)
-
-    if strategy == "i":
-        def idle(xf, xi):
-            def body(_, acc):
-                return acc * 0.999 + 1.0
-            # seeded from the (barrier-fenced) operand: even idle
-            # engines enter their spin only after the start barrier
-            return jax.lax.fori_loop(0, n * 8, body, xf[0, 0] * 1e-30)
-        return idle
-
-    if strat in _SPMD_CHASES:
-        def chase(xf, xi):
-            chain = xi[:rows, 0]
-
-            def step(_, idx):
-                return chain[idx]
-
-            def cycle(_, carry):
-                idx, acc = carry
-                idx = jax.lax.fori_loop(0, rows, step, idx)
-                return idx, acc + idx.astype(jnp.float32)
-
-            _, acc = jax.lax.fori_loop(
-                0, n, cycle, (jnp.int32(0), jnp.float32(0.0)))
-            return acc
-        return chase
-
-    if strat in ("w", "y"):
-        def write(xf, xi):
-            def body(_, x):
-                return x + 1.0
-            x = jax.lax.fori_loop(0, n, body, xf[:rows])
-            return x[0, 0]
-        return write
-
-    if strat in ("c", "x", "b"):
-        def readwrite(xf, xi):
-            def body(_, x):
-                return x * 1.0000001 + 0.25
-            x = jax.lax.fori_loop(0, n, body, xf[:rows])
-            return x[0, 0]
-        return readwrite
-
-    def read(xf, xi):
-        x = xf[:rows]
-
-        def body(_, acc):
-            # re-issue the buffer each pass: the barrier pins the reads
-            # inside the loop (a bare sum would be loop-invariant)
-            xx = compat.optimization_barrier(x)
-            return acc * 0.5 + jnp.sum(xx)
-
-        return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
-    return read
-
-
-def _pallas_branch_fn(strat: str, shape, rows: int, n: int):
-    """Pallas-kernel edition of one rung activity (resolved strategy
-    letter ``strat``, ``n`` active passes): the branch's memory traffic
-    is the real kernel library, not a jnp stand-in.  Every branch keeps
-    a dataflow edge from its (barrier-fenced) operands into each
-    kernel call — carried loop state where the kernel's output feeds
-    the next pass (copy/rmw/seeded write), ``optimization_barrier``
-    re-issue where it cannot (reads, mixed streams, chases) — so the
-    extended jaxpr fence check can verify every ``pallas_call``
-    consumes fenced data."""
-    from repro import compat
-    from repro.kernels import chase as _kchase
-    from repro.kernels import ops as kops
-    from repro.kernels import stream as _kstream
-    from repro.core.workloads import _fits_vmem
-
-    interp = not kops.on_tpu()
-    blk = min(512, rows)
-
-    if strat in _SPMD_CHASES:
-        vmem = strat == "l" and _fits_vmem(rows * LINE_BYTES)
-        kern = _kchase.chase_vmem if vmem else _kchase.chase_hbm
-
-        def chase(xf, xi):
-            buf = xi[:rows]
-
-            def cycle(_, acc):
-                # re-issued buffer: one dependent full traversal per
-                # pass, not hoistable/CSE-able across passes
-                bb = compat.optimization_barrier(buf)
-                idx = kern(bb, n_steps=rows, interpret=interp)
-                return acc + idx.astype(jnp.float32)
-
-            return jax.lax.fori_loop(0, n, cycle, jnp.float32(0.0))
-        return chase
-
-    if strat == "y":
-        def write_stream(xf, xi):
-            def body(_, acc):
-                # the seed depends on the previous pass, serialising
-                # the passes; the kernel's stores depend on the seed
-                seed = xf[:1, :1] + acc * 1e-30
-                out = _kstream.write_hbm_seeded(
-                    seed, rows, block_rows=blk, interpret=interp)
-                return acc * 0.5 + out[0, 0]
-
-            return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
-        return write_stream
-
-    if strat in ("w", "x"):
-        def rmw(xf, xi):
-            def body(_, x):
-                # write-allocate: read + write back, carried so pass
-                # t+1 depends on pass t's stores.  Deliberate for 'w'
-                # too (matching the jnp fallback branch): a cacheable
-                # write allocates the line, so its memory traffic IS
-                # read+write — the interpret backend's pure-store 'w'
-                # kernel is the approximation, not this.  Useful-bytes
-                # accounting stays the registry's convention: 'w'
-                # counts the written lines (1x), 'x' both (2x,
-                # _SPMD_STREAM_2X) — same elapsed, different useful BW.
-                return _kstream.rmw_hbm(x, block_rows=blk,
-                                        interpret=interp)
-
-            x = jax.lax.fori_loop(0, n, body, xf[:rows])
-            return x[0, 0]
-        return rmw
-
-    if strat == "c":
-        def copy(xf, xi):
-            def body(_, x):
-                return _kstream.copy_hbm(x, block_rows=blk,
-                                         interpret=interp)
-
-            x = jax.lax.fori_loop(0, n, body, xf[:rows])
-            return x[0, 0]
-        return copy
-
-    if strat == "b":
-        rf = (shape.read_fraction
-              if getattr(shape, "kind", None) == "mixed" else 0.5)
-
-        def mixed(xf, xi):
-            x = xf[:rows]
-
-            def body(_, acc):
-                xx = compat.optimization_barrier(x)
-                # the seed fences the write half of the mix (its store
-                # kernel consumes no other operand)
-                s, out = _kstream.mixed_hbm(
-                    xx, read_fraction=rf, block_rows=blk,
-                    interpret=interp, seed=xx[:1, :1])
-                # consume one written row: keeps the store kernel live
-                # under DCE without re-reading the whole destination
-                return acc * 0.5 + s + jnp.sum(out[:1])
-
-            return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
-        return mixed
-
-    def read(xf, xi):                   # r / s: pure read stream
-        x = xf[:rows]
-
-        def body(_, acc):
-            xx = compat.optimization_barrier(x)
-            return acc * 0.5 + _kstream.read_hbm(xx, block_rows=blk,
-                                                 interpret=interp)
-
-        return jax.lax.fori_loop(0, n, body, jnp.float32(0.0))
-    return read
-
-
-def build_rung_program(n_engines: int, branch_fns, engine_branch):
-    """One fused SPMD rung over an ("engine",) mesh.
-
-    Returns ``(mesh, f)`` with ``f(xf, xi) -> (per_engine_out, barrier)``
-    jit-compiled: engine ``e`` runs ``branch_fns[engine_branch[e]]`` on
-    its shard of the operands.  The measured region is *provably*
-    sandwiched (invariants 1-4 of the module docstring):
-
-      start — every engine all-reduces a token derived from its live
-          operand data (psum #1; a constant token would fold away at
-          trace time), and the operands are re-issued through
-          ``optimization_barrier`` together with that token, so every
-          activity's operands carry a dataflow dependency on the
-          collective: XLA cannot schedule measured work before the
-          barrier completes;
-      stop — the activity outputs are all-reduced (psum #2) into the
-          returned barrier value, so the dispatch only retires after
-          every engine's activity finished, and the next rung (a new
-          dispatch) cannot begin until the host unblocks.
-
-    :func:`measured_region_is_fenced` asserts the start edge
-    structurally (jaxpr dataflow), which the tests pin down.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    from repro import compat
-
-    devs = jax.devices()[:n_engines]
-    mesh = compat.make_mesh_from_devices(devs, ("engine",))
-    table = jnp.asarray(list(engine_branch), jnp.int32)
-
-    def per_engine(xf, xi):
-        xf, xi = xf[0], xi[0]
-        # barrier #1 (see docstring): data-derived token, all-reduced,
-        # then threaded into every operand
-        token = jax.lax.psum(xf[0, 0] + xi[0, 0].astype(xf.dtype),
-                             "engine")
-        xf, xi, token = compat.optimization_barrier((xf, xi, token))
-        eng = jax.lax.axis_index("engine")
-        out = jax.lax.switch(table[eng], branch_fns, xf, xi)
-        # barrier #2: consumes every engine's finished activity.  (The
-        # start token is alive through the operands' barrier edge; only
-        # the stop psum — statically replicated — is returned.)
-        done = jax.lax.psum(out, "engine")
-        return out[None], done
-
-    # check_rep=False: no replication rule is registered for
-    # pallas_call, so Pallas rung activities cannot trace under the
-    # checker; the stop psum still replicates `done` at runtime
-    f = compat.shard_map(per_engine, mesh=mesh,
-                         in_specs=(P("engine"), P("engine")),
-                         out_specs=(P("engine"), P()),
-                         check_rep=False)
-    return mesh, jax.jit(f)
-
-
-def build_ladder_program(n_engines: int, branch_fns, branch_table,
-                         samples: int = 3, donate: bool = False):
-    """The WHOLE contention ladder as one fused SPMD dispatch.
-
-    ``branch_table`` is a (K, n_engines) int table: scan step for rung
-    ``k`` runs ``branch_fns[branch_table[k][e]]`` on engine ``e``'s
-    shard.  Each rung is repeated ``samples`` times, and EVERY repeat
-    is its own psum sandwich — the scanned edition of
-    :func:`build_rung_program`'s spin-lock-sandwich invariants:
-
-      start — every sample's token psum is derived from live operand
-          data AND the loop carry (a loop-invariant psum would be
-          hoisted out of the scan), and the operands are re-issued with
-          an exact-zero contribution from the start timestamp, so no
-          engine's measured work can begin before the barrier completed
-          and the stamp's buffer was actually filled;
-      stop — the activity outputs are all-reduced (psum #2) and the
-          carry value-consumes the stop timestamp, so sample s+1's
-          start barrier cannot open until sample s fully retired —
-          invariant 4, enforced in-dispatch by dataflow instead of a
-          host round-trip per rung.
-
-    Per-rung elapsed time comes from ``compat.device_clock`` stamp
-    pairs taken inside the dispatch (engine 0's stop stamp follows the
-    stop psum, i.e. the SLOWEST engine's finish), returned as
-    ``(n_eng, K*samples, 2)`` int32 ``[s, ns]`` arrays alongside the
-    per-engine activity outputs.  Host-side cost of a whole ladder: ONE
-    synchronous dispatch, versus 4·K for the per-rung path.
-
-    Returns ``(mesh, fn)`` with ``fn(xf, xi) ->
-    (outs, t0s, t1s, xf, xi)``; the operands are passed through (and
-    donated when ``donate=True``) so callers can cache and rebind them
-    without any host->device re-transfer.
-    :func:`measured_region_is_fenced` verifies the sandwich of every
-    scanned step structurally (the scan body carries the psum fence)."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro import compat
-
-    devs = jax.devices()[:n_engines]
-    mesh = compat.make_mesh_from_devices(devs, ("engine",))
-    table = np.repeat(np.asarray(branch_table, np.int32),
-                      int(samples), axis=0)
-    table_j = jnp.asarray(table)
-
-    def per_engine(xf, xi):
-        xf, xi = xf[0], xi[0]
-        eng = jax.lax.axis_index("engine")
-
-        def clock(dep):
-            # only the OBSERVER engine pays the stamp cost (on the
-            # callback fallback each stamp is a host round-trip; 2
-            # per engine per sample would dominate small rungs); the
-            # other engines still serialize on it through the carry
-            # -> token psum collective below
-            return jax.lax.cond(eng == 0, compat.device_clock,
-                                lambda _d: jnp.zeros((2,), jnp.int32),
-                                dep)
-
-        def step(carry, row):
-            # barrier #1: data-derived, carry-dependent, all-reduced
-            token = jax.lax.psum(
-                xf[0, 0] + xi[0, 0].astype(xf.dtype) + carry * 1e-30,
-                "engine")
-            t0 = clock(token)
-            # thread the start stamp into every operand as an EXACT
-            # zero: min(t, 0) == 0 at runtime (monotonic clock parts
-            # are non-negative) but XLA cannot fold it away — the
-            # activity cannot start until the stamp exists.  A
-            # scheduling-only edge is not enough: the callback
-            # fallback fills its result buffer asynchronously.
-            z = jnp.minimum(t0[0] + t0[1], 0)
-            xf_, xi_, _tok = compat.optimization_barrier(
-                (xf + z.astype(xf.dtype), xi + z, token))
-            out = jax.lax.switch(row[eng], branch_fns, xf_, xi_)
-            # barrier #2: consumes every engine's finished activity
-            done = jax.lax.psum(out, "engine")
-            t1 = clock(done)
-            # the carry value-consumes the stop stamp: the next
-            # sample's start barrier waits for this one to retire
-            carry = (done * 1e-30
-                     + jnp.minimum(t1[0] + t1[1], 0).astype(xf.dtype))
-            return carry, (out, t0, t1)
-
-        _c, (outs, t0s, t1s) = jax.lax.scan(step, jnp.float32(0.0),
-                                            table_j)
-        return outs[None], t0s[None], t1s[None], xf[None], xi[None]
-
-    f = compat.shard_map(per_engine, mesh=mesh,
-                         in_specs=(P("engine"), P("engine")),
-                         out_specs=(P("engine", None),
-                                    P("engine", None, None),
-                                    P("engine", None, None),
-                                    P("engine"), P("engine")),
-                         check_rep=False)
-    kw = {"donate_argnums": (0, 1)} if donate else {}
-    return mesh, jax.jit(f, **kw)
-
-
-def build_scenario_program(n_engines: int, n_stressors: int,
-                           main_fn, stress_fn, idle_fn):
-    """Returns f(main_x, stress_x) -> (main_out, barrier) running under
-    ``shard_map`` over an ("engine",) mesh: engine 0 = observed, engines
-    1..n_stressors = stress, rest idle.  The measured region is fenced by
-    two psum barriers (invariants 1-4 above) — and the fence is
-    dataflow-enforced: the start psum is derived from live operand data
-    and re-issued into the operands via ``optimization_barrier``, so
-    the activities cannot be hoisted above it (the historical version
-    computed a psum nothing depended on, which JAX folds away at trace
-    time — invariant 1 was unenforced)."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro import compat
-
-    devs = jax.devices()[:n_engines]
-    mesh = compat.make_mesh_from_devices(devs, ("engine",))
-
-    def per_engine(main_x, stress_x):
-        eng = jax.lax.axis_index("engine")
-        # barrier #1: every engine signals ready before measurement
-        # starts, and the measured operands depend on the collective
-        seed = (jnp.ravel(main_x)[0].astype(jnp.float32)
-                + jnp.ravel(stress_x)[0].astype(jnp.float32))
-        ready = jax.lax.psum(seed, "engine")
-        main_x, stress_x, ready = compat.optimization_barrier(
-            (main_x, stress_x, ready))
-
-        def run_main(m, _s):
-            return main_fn(m)
-
-        def run_stress(_m, s):
-            return stress_fn(s)
-
-        def run_idle(_m, s):
-            return idle_fn(s)
-
-        branch = jnp.where(eng == 0, 0,
-                           jnp.where(eng <= n_stressors, 1, 2))
-        # operands passed positionally: the `operand=` kwarg is
-        # deprecated drift (the grep lint in tests/test_compat.py
-        # rejects it)
-        out = jax.lax.switch(branch, [run_main, run_stress, run_idle],
-                             main_x, stress_x)
-        # barrier #2: measurement closes only after every engine
-        # finished — `done` consumes each engine's activity output.
-        # (`ready` stays alive through the operand barrier edge; the
-        # returned value is the stop psum, which is statically
-        # replicated.)
-        done = jax.lax.psum(jnp.ravel(out)[0].astype(jnp.float32),
-                            "engine")
-        return out, done
-
-    f = compat.shard_map(per_engine, mesh=mesh,
-                         in_specs=(P("engine"), P("engine")),
-                         out_specs=(P("engine"), P()))
-    return mesh, f
-
-
-# ---------------------------------------------------------------------------
-# Structural fence verification (sandwich invariant 1, as a jaxpr check)
-# ---------------------------------------------------------------------------
-
-
-def measured_region_is_fenced(fn, *example_args, jaxpr=None) -> bool:
-    """Does the measured output depend — through DATAFLOW, not just
-    program order — on the start-barrier psum?
-
-    Walks the traced jaxpr: inside every ``shard_map`` body, takes the
-    first psum equation (the start barrier), computes the forward
-    dataflow closure of its outputs, and requires (a) the body's first
-    output (the measured activity result) to lie inside that closure,
-    and (b) every ``pallas_call`` reachable after the barrier —
-    recursing through switch branches and loop bodies — to consume at
-    least one operand inside the closure.  (b) extends the check past
-    the ``pallas_call`` boundary: a kernel is the *actual* memory
-    traffic of a Pallas rung activity, and one fed only by constants
-    (e.g. a no-operand write stream) could be hoisted above the
-    barrier even though the switch output downstream of it still
-    "depends" on the fence.  A program whose barrier is advisory only
-    — the pre-fix ``build_scenario_program``, where ``out`` had no
-    data dependency on ``ready`` — returns False: XLA was free to
-    begin the measured activity before the stressors were running.
-
-    Fused whole-ladder programs (:func:`build_ladder_program`) carry
-    their psum sandwiches INSIDE a ``lax.scan``: there the check
-    recurses into every psum-bearing scan/while body and requires the
-    step itself to pass — the step's first output is the loop carry,
-    which by construction value-consumes the stop barrier and stamp,
-    so verifying the body verifies EVERY scanned rung sample (one body
-    serves all steps structurally) — including every ladder of a
-    sweep-batched stacked program, whose scan table merely gains a
-    leading scenario axis.  Pass ``jaxpr=`` (a ClosedJaxpr, e.g. from
-    ``compat.aot_trace(fn, *args).jaxpr``) to reuse an existing trace
-    instead of paying a second one here."""
-    closed = jaxpr if jaxpr is not None \
-        else jax.make_jaxpr(fn)(*example_args)
-    bodies = _shard_map_bodies(closed.jaxpr)
-    if not bodies:
-        return False
-    return all(_first_out_depends_on_psum(b) for b in bodies)
-
-
-def _sub_jaxprs(params: Dict[str, Any]):
-    for v in params.values():
-        for u in (v if isinstance(v, (tuple, list)) else (v,)):
-            inner = getattr(u, "jaxpr", u)
-            if hasattr(inner, "eqns"):
-                yield inner
-
-
-def _shard_map_bodies(jaxpr) -> List[Any]:
-    out = []
-    for eqn in jaxpr.eqns:
-        for inner in _sub_jaxprs(eqn.params):
-            if "shard_map" in eqn.primitive.name:
-                out.append(inner)
-            else:
-                out.extend(_shard_map_bodies(inner))
-    return out
-
-
-def _jaxpr_has_psum(jaxpr) -> bool:
-    for eqn in jaxpr.eqns:
-        if "psum" in eqn.primitive.name:
-            return True
-        for inner in _sub_jaxprs(eqn.params):
-            if _jaxpr_has_psum(inner):
-                return True
-    return False
-
-
-def _first_out_depends_on_psum(body) -> bool:
-    live: set = set()
-    seen_psum = False
-    kernels_ok = True
-    for eqn in body.eqns:
-        invars = [v for v in eqn.invars if not hasattr(v, "val")]
-        if not seen_psum and "psum" in eqn.primitive.name:
-            seen_psum = True
-            live.update(eqn.outvars)
-            continue
-        if not seen_psum and eqn.primitive.name in ("scan", "while"):
-            inners = [j for j in _sub_jaxprs(eqn.params)
-                      if _jaxpr_has_psum(j)]
-            if inners:
-                # a scanned/looped sandwich (the fused whole-ladder
-                # program): every step must pass the same check — its
-                # first output is the loop carry, which must consume
-                # the step's own stop barrier, and every kernel inside
-                # the step must consume fence-dependent operands.  One
-                # body serves all steps, so this verifies every rung.
-                if all(_first_out_depends_on_psum(j) for j in inners):
-                    seen_psum = True
-                    live.update(eqn.outvars)
-                else:
-                    kernels_ok = False
-                continue
-        if seen_psum:
-            kernels_ok = kernels_ok and _kernels_fenced_in_eqn(eqn, live)
-            if any(v in live for v in invars):
-                live.update(eqn.outvars)
-    out0 = body.outvars[0]
-    return out0 in live and kernels_ok
-
-
-def _is_live(v, live) -> bool:
-    return not hasattr(v, "val") and v in live
-
-
-def _kernels_fenced_in_eqn(eqn, live) -> bool:
-    """Fence-reachability of the kernels *inside* one equation: a
-    ``pallas_call`` must consume at least one fence-dependent operand;
-    any other equation recurses into its sub-jaxprs (switch/cond
-    branches, while/scan loop bodies, inner pjit calls) with the live
-    set mapped onto the inner binders.  The mapping aligns outer
-    operands to inner invars from the END — exact for pjit/scan, and
-    for cond/switch (whose leading index operand has no binder) and
-    while bodies (whose leading cond-consts belong to the other
-    jaxpr) it aligns the carried values correctly, which is where the
-    fenced operands live."""
-    if "pallas_call" in eqn.primitive.name:
-        return any(_is_live(v, live) for v in eqn.invars)
-    ok = True
-    for inner in _sub_jaxprs(eqn.params):
-        inner_live = {iv for iv, ov in zip(reversed(inner.invars),
-                                           reversed(eqn.invars))
-                      if _is_live(ov, live)}
-        ok = ok and _kernels_fenced_in_jaxpr(inner, inner_live)
-    return ok
-
-
-def _kernels_fenced_in_jaxpr(jaxpr, live) -> bool:
-    live = set(live)
-    ok = True
-    for eqn in jaxpr.eqns:
-        ok = ok and _kernels_fenced_in_eqn(eqn, live)
-        if any(_is_live(v, live) for v in eqn.invars):
-            live.update(eqn.outvars)
-    return ok

@@ -1,0 +1,50 @@
+"""The spmd execution pipeline: plan -> build -> dispatch -> assemble.
+
+One stage per module, each consuming the previous stage's declarative
+output, so ROADMAP items inject themselves into exactly one seam:
+
+* :mod:`repro.core.exec.plan` — (specs -> triples -> signature groups)
+  as a :class:`DispatchPlan` of :class:`PlannedDispatch`es, plus the
+  pure planner transforms (engine-subset width-packing lives here).
+* :mod:`repro.core.exec.program` — branch/activity builders, operand
+  construction, the SPMD program builders, and
+  :func:`build_ladder_entry` producing a traced + fence-verified
+  :class:`CompiledProgram`.
+* :mod:`repro.core.exec.fence` — the structural psum-sandwich checker
+  (:func:`measured_region_is_fenced`), packed-subset aware.
+* :mod:`repro.core.exec.dispatch` — the program/operand LRU, AOT
+  compile + persistent-cache opt-in, dispatch, and the
+  (waves, subsets, rungs, samples) clock decode.
+* :mod:`repro.core.exec.assemble` — ScenarioRun / execution-provenance
+  construction from the dispatch results.
+
+``CoreCoordinator`` (repro.core.coordinator) is the thin facade over
+this package; its public API is unchanged.
+"""
+from repro.core.exec.assemble import (MatrixResult, ScenarioResult,
+                                      ScenarioRun, assemble_runs,
+                                      observer_result)
+from repro.core.exec.dispatch import Dispatcher, DispatchStats, ProgramCache
+from repro.core.exec.fence import measured_region_is_fenced
+from repro.core.exec.plan import (DispatchPlan, LadderEntry,
+                                  PlannedDispatch, build_plan,
+                                  effective_duty, group_key, ladder_depth,
+                                  observer_groups, pack_engine_subsets,
+                                  rung_roles)
+from repro.core.exec.program import (CompiledProgram, build_ladder_entry,
+                                     build_ladder_program,
+                                     build_rung_operands,
+                                     build_rung_program,
+                                     build_scenario_program,
+                                     spmd_branch_fn)
+
+__all__ = [
+    "MatrixResult", "ScenarioResult", "ScenarioRun", "assemble_runs",
+    "observer_result", "Dispatcher", "DispatchStats", "ProgramCache",
+    "measured_region_is_fenced", "DispatchPlan", "LadderEntry",
+    "PlannedDispatch", "build_plan", "effective_duty", "group_key",
+    "ladder_depth", "observer_groups", "pack_engine_subsets",
+    "rung_roles", "CompiledProgram", "build_ladder_entry",
+    "build_ladder_program", "build_rung_operands", "build_rung_program",
+    "build_scenario_program", "spmd_branch_fn",
+]

@@ -1,0 +1,300 @@
+"""plan — stage 1 of the spmd execution pipeline.
+
+Turns (specs -> (spec, observer, buffer) triples -> signature groups)
+into a declarative :class:`DispatchPlan`: a sequence of
+:class:`PlannedDispatch`es, each describing ONE host-synchronous mesh
+dispatch — which ladders it stacks, the per-rung per-engine role
+tables, the operand memory kind, and the mesh geometry (how many
+engine subsets run side by side, how many scan-stacked waves).
+
+Nothing in here touches jax: the plan is pure data, so planner
+transforms compose.  The first such transform is
+:func:`pack_engine_subsets` (engine-subset width-packing): on meshes
+with at least twice a ladder's width of engines, several same-signature
+shallow ladders run side by side on disjoint engine subsets of one
+dispatch — each subset keeps its own psum sandwich via grouped
+collectives — instead of scan-stacking every ladder behind the last.
+Future planner transforms slot in the same way: multi-host sharding
+splits a plan's dispatches across processes, and the worst-case
+contention search emits its "next grid" as a plan.
+
+The interpret/tpu measured pass groups through :func:`observer_groups`
+in this module too, so grouping logic lives in exactly one place.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.scenarios import ObserverSpec, ScenarioSpec
+from repro.core.workloads import rows_for as _wl_rows
+
+# ---------------------------------------------------------------------------
+
+
+def effective_duty(shape) -> float:
+    """Duty cycle of a role's traffic shape, with the degenerate-value
+    guard every call site must share: absent shapes and 0/None duties
+    count as always-on.  Work balancing *divides* by this (a 0-duty
+    role would otherwise get an infinite iteration budget) and the
+    observer's ``n_active`` stamping multiplies by it — both sides of
+    the accounting must use the same number."""
+    if shape is None:
+        return 1.0
+    return getattr(shape, "duty_cycle", 1.0) or 1.0
+
+
+def ladder_depth(spec: ScenarioSpec, platform_engines: int,
+                 mesh_engines: Optional[int] = None) -> int:
+    """Rungs this spec's ladder measures: ``max_stressors + 1`` capped
+    by the platform, and — on the spmd backend (``mesh_engines``
+    given) — by the mesh: rung k needs k stress engines + 1 observer,
+    plus one engine per coupled sibling observer, which runs live
+    inside every rung (same count for every observer)."""
+    n = (spec.max_stressors + 1 if spec.max_stressors is not None
+         else platform_engines)
+    n = min(n, platform_engines)
+    if mesh_engines is not None:
+        n = min(n, mesh_engines - spec.n_coupled_siblings)
+    return max(1, n)
+
+
+def rung_roles(spec: ScenarioSpec, obs: ObserverSpec, buf: int, k: int,
+               width: int) -> Tuple[List[Tuple], List[str]]:
+    """The per-engine role layout of rung k, padded to ``width``
+    engines: engine 0 runs the observer, the next engines its coupled
+    sibling observers (every observer of a coupled multi-observer spec
+    is live inside every sibling's measured region), then k stressor
+    engines (ensemble round-robin), the rest idle.  Returns
+    ``(roles, role_pools)`` with one ``(strategy, shape, rows, iters)``
+    tuple per engine.
+
+    Sibling and stressor iteration budgets are work-balanced against
+    the passes the observer branch will actually execute (its duty
+    cycle included, via :func:`effective_duty` on BOTH sides of the
+    division) so role imbalance does not masquerade as contention;
+    residual per-kind speed differences (a chase row costs more than a
+    stream row) remain and are what the in-dispatch rung clocks
+    measure."""
+    iters = spec.iters
+    obs_rows = _wl_rows(buf)
+    roles: List[Tuple] = [(obs.strategy, obs.shape, obs_rows, iters)]
+    role_pools = [obs.pool]
+    m = len(spec.stressors)
+    obs_work = obs_rows * max(
+        1, round(iters * effective_duty(obs.shape)))
+    for sib in spec.coupled_siblings(obs)[:width - 1]:
+        sib_rows = _wl_rows(sib.buffers[0])
+        sib_iters = max(1, round(
+            obs_work / (sib_rows * effective_duty(sib.shape))))
+        roles.append((sib.strategy, sib.shape, sib_rows, sib_iters))
+        role_pools.append(sib.pool)
+    for e in range(min(k, width - len(roles))):
+        if m:
+            s = spec.stressors[e % m]
+            s_rows = _wl_rows(s.buffer_bytes)
+            s_iters = max(1, round(
+                obs_work / (s_rows * effective_duty(s.shape))))
+            roles.append((s.strategy, s.shape, s_rows, s_iters))
+            role_pools.append(s.pool)
+        else:
+            roles.append(("i", None, 1, iters))
+            role_pools.append(obs.pool)
+    while len(roles) < width:
+        roles.append(("i", None, 1, iters))
+        role_pools.append(obs.pool)
+    return roles, role_pools
+
+
+def group_key(spec: ScenarioSpec, obs: ObserverSpec, buf: int,
+              pools) -> Tuple:
+    """Sweep-level grouping key: triples with equal keys expand to the
+    SAME per-rung role tables and operand placement, so their ladders
+    legally stack into one batched dispatch.  The spec-level role
+    signature (pool-free — see :meth:`ScenarioSpec.ladder_signature`)
+    is refined by each role pool's *effective* memory kind: pools that
+    differ only in name but land in one physical memory merge (like
+    the interpret path's signature groups); pools that really differ
+    split."""
+    kinds = tuple(pools.pool(p).effective_memory_kind()
+                  for p in spec.role_pools(obs))
+    return (spec.ladder_signature(obs, buf), kinds)
+
+
+def operand_kind(role_pools, pools) -> Optional[str]:
+    """Per-pool operand placement: when every engine's pool lands in
+    one effective memory kind, the stacked operands carry that kind's
+    sharding into the fused dispatch; mixed-pool programs fall back to
+    the default memory (one stacked array has one memory kind —
+    per-engine kinds need a real multi-chip slice and per-pool operand
+    splitting, the remaining ROADMAP item)."""
+    kinds = {pools.pool(p).effective_memory_kind() for p in role_pools}
+    return kinds.pop() if len(kinds) == 1 else None
+
+
+def observer_groups(triples, pools) -> "OrderedDict[Tuple, List[int]]":
+    """The interpret/tpu measured pass's signature groups — the same
+    planner owns every grouping decision.  Group signature: everything
+    that changes the compiled measured pass or the numbers stamped on
+    its results.  ``iters`` is part of the signature — members must be
+    measured at THEIR OWN budget, not silently at the group max.  The
+    pool appears only through its *effective* placement: observers
+    from different pools whose arrays land in the same physical memory
+    legally share one stacked vmapped batch; pools that really differ
+    split."""
+    groups: "OrderedDict[Tuple, List[int]]" = OrderedDict()
+    for i, (spec, obs, buf) in enumerate(triples):
+        pool = pools.pool(obs.pool)
+        sig = (obs.strategy, obs.shape, buf, spec.iters,
+               pool.effective_memory_kind(), pool.node.kind == "vmem")
+        groups.setdefault(sig, []).append(i)
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# The plan data model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LadderEntry:
+    """One (spec, observer, buffer) contention ladder in the matrix."""
+    index: int                  # position in the matrix's triple list
+    spec: ScenarioSpec
+    observer: ObserverSpec
+    buffer_bytes: int
+
+
+@dataclass(frozen=True)
+class PlannedDispatch:
+    """ONE host-synchronous mesh dispatch, fully described as data.
+
+    ``rungs`` holds the per-rung role tuples at ``subset_width``
+    engines; the program builder tiles them across ``n_subsets``
+    disjoint engine subsets (width-packed dispatches) and idles any
+    leftover engines, then scan-stacks the whole table ``waves``
+    times.  Unpacked dispatches are the degenerate geometry: one
+    subset as wide as the mesh, one wave per stacked ladder."""
+    entries: Tuple[LadderEntry, ...]
+    rungs: Tuple[Tuple[Tuple, ...], ...]    # (n_scen, subset_width)
+    n_scen: int
+    ladder_width: int       # engines one ladder really occupies
+    subset_width: int       # engines per subset (mesh width unpacked)
+    n_subsets: int          # ladders side by side per wave (1 unpacked)
+    waves: int              # scan-stacked repeats of the rung table
+    kind: Optional[str]     # operand memory kind (None = mixed pools)
+    packed: bool = False
+
+    @property
+    def group(self) -> int:
+        return len(self.entries)
+
+    def subsets(self) -> Optional[Tuple[Tuple[int, ...], ...]]:
+        """Engine-index tuples of the real (decoded) subsets; ``None``
+        for unpacked dispatches (global psum sandwich)."""
+        if not self.packed:
+            return None
+        return tuple(tuple(range(j * self.subset_width,
+                                 (j + 1) * self.subset_width))
+                     for j in range(self.n_subsets))
+
+    def member_slot(self, g: int) -> Tuple[int, int]:
+        """(wave, subset) coordinates of stacked ladder ``g``."""
+        return g // self.n_subsets, g % self.n_subsets
+
+    def cache_key(self, mode: str, n_eng: int, activity: str,
+                  samples: int) -> Tuple:
+        return (mode, n_eng, activity, self.kind, samples, self.group,
+                self.n_subsets, self.subset_width, self.waves,
+                self.rungs)
+
+
+@dataclass(frozen=True)
+class DispatchPlan:
+    n_engines: int
+    dispatches: Tuple[PlannedDispatch, ...]
+
+
+def _plan_dispatch(entries: List[LadderEntry], n_eng: int, pools,
+                   platform_engines: int) -> PlannedDispatch:
+    """One dispatch for a (possibly singleton) same-signature group:
+    roles expanded at mesh width, one wave per stacked ladder."""
+    first = entries[0]
+    spec, obs, buf = first.spec, first.observer, first.buffer_bytes
+    n_scen = ladder_depth(spec, platform_engines, n_eng)
+    per_rung = [rung_roles(spec, obs, buf, k, n_eng)
+                for k in range(n_scen)]
+    kind = operand_kind([p for _r, ps in per_rung for p in ps], pools)
+    return PlannedDispatch(
+        entries=tuple(entries),
+        rungs=tuple(tuple(r) for r, _p in per_rung),
+        n_scen=n_scen,
+        ladder_width=1 + spec.n_coupled_siblings + (n_scen - 1),
+        subset_width=n_eng, n_subsets=1, waves=len(entries),
+        kind=kind, packed=False)
+
+
+def build_plan(triples, n_eng: int, pools, platform_engines: int, *,
+               grouped: bool = True) -> DispatchPlan:
+    """Stage 1: the whole matrix as a DispatchPlan.  ``grouped=True``
+    (the sweep-batched mode) stacks same-signature ladders into one
+    dispatch per distinct :func:`group_key`; ``grouped=False`` plans
+    one dispatch per ladder (the fused-per-ladder mode)."""
+    entries = [LadderEntry(i, spec, obs, buf)
+               for i, (spec, obs, buf) in enumerate(triples)]
+    if not grouped:
+        return DispatchPlan(n_eng, tuple(
+            _plan_dispatch([e], n_eng, pools, platform_engines)
+            for e in entries))
+    groups: "OrderedDict[Tuple, List[LadderEntry]]" = OrderedDict()
+    for e in entries:
+        key = group_key(e.spec, e.observer, e.buffer_bytes, pools)
+        groups.setdefault(key, []).append(e)
+    return DispatchPlan(n_eng, tuple(
+        _plan_dispatch(members, n_eng, pools, platform_engines)
+        for members in groups.values()))
+
+
+# ---------------------------------------------------------------------------
+# Planner transforms
+# ---------------------------------------------------------------------------
+
+
+def pack_engine_subsets(plan: DispatchPlan, *,
+                        min_group: int = 2) -> DispatchPlan:
+    """Engine-subset width-packing, as a PURE plan transform.
+
+    A dispatch whose ladders occupy ``W = ladder_width`` engines on a
+    mesh with ``n_engines >= 2 * W`` wastes most of the mesh idling:
+    the stacked scan runs one ladder at a time with ``n_engines - W``
+    engines spinning.  This transform re-plans such a group to run
+    ``P = min(n_engines // W, group)`` ladders SIDE BY SIDE on
+    disjoint W-engine subsets of one dispatch — the rung table shrinks
+    to natural ladder width (the trailing idle padding drops off), the
+    program builder tiles it across the P subsets, and the scan stacks
+    only ``ceil(group / P)`` waves instead of ``group``.  An 8-device
+    mesh running 2-engine rungs executes 4 ladders per dispatch
+    instead of 1.
+
+    Each packed subset keeps an INDEPENDENT psum sandwich (grouped
+    collectives — see ``build_ladder_program(subsets=...)``), and the
+    fence checker verifies every subset's sandwich separately, so a
+    packed ladder's measurement is attributable to exactly its own
+    engine slice.  Dispatches that cannot pack (mesh too narrow,
+    singleton groups, already packed) pass through unchanged."""
+    out = []
+    for d in plan.dispatches:
+        w, g = d.ladder_width, d.group
+        if (d.packed or w < 1 or plan.n_engines < 2 * w
+                or g < min_group):
+            out.append(d)
+            continue
+        p = min(plan.n_engines // w, g)
+        out.append(replace(
+            d,
+            rungs=tuple(r[:w] for r in d.rungs),
+            subset_width=w, n_subsets=p,
+            waves=-(-g // p),           # ceil(group / P)
+            packed=True))
+    return replace(plan, dispatches=tuple(out))

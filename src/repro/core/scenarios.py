@@ -221,6 +221,13 @@ class ScenarioSpec:
         """All measured activities, primary first."""
         return (self.observer,) + self.co_observers
 
+    @property
+    def n_coupled_siblings(self) -> int:
+        """Engines each observer's ladder devotes to live sibling
+        observers — 0 when uncoupled or single-observer.  The planner
+        sizes ladder widths (and packing subsets) from this."""
+        return len(self.observers) - 1 if self.coupled else 0
+
     def coupled_siblings(self,
                          observer: ObserverSpec) -> Tuple[ObserverSpec, ...]:
         """The sibling observers sharing ``observer``'s measured region

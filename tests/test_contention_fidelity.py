@@ -550,6 +550,86 @@ def test_batched_sweep_equivalence_and_accounting():
     """)
 
 
+def test_packed_sweep_accounting_and_equivalence():
+    """Engine-subset width-packing (ISSUE 7): a sweep of narrow
+    same-signature ladders runs them SIDE BY SIDE on disjoint engine
+    subsets of one dispatch — the accounting must show the packing
+    (stats.packed_ladders / subset_width, per-curve subset slots), the
+    dispatch count must stay at one per signature, and the curves must
+    be IDENTICAL in keys, bytes and fence state to the same sweep with
+    packing forced off."""
+    run_forced("""
+    import jax
+    from repro.core.coordinator import CoreCoordinator
+    from repro.core.scenarios import (ObserverSpec, ScenarioSpec,
+                                      StressorSpec)
+
+    BUF = 64 << 10
+
+    def mk(name):
+        # max_stressors=1 -> 2-rung, width-2 ladders (observer +
+        # one stressor engine); all four share one signature
+        return ScenarioSpec(name, ObserverSpec("r", "hbm", (BUF,)),
+                            (StressorSpec("w", "hbm", BUF),),
+                            iters=3, max_stressors=1)
+
+    specs = [mk(n) for n in "abcd"]
+    n_dev = len(jax.devices())
+    depth = max(1, min(2, n_dev))
+    width = depth                   # 1 observer + (depth-1) scenarios
+    # the planner packs iff a full second subset fits
+    n_subsets = min(n_dev // width, 4) if n_dev >= 2 * width else 1
+
+    c = CoreCoordinator(backend="spmd")
+    res = c.run_matrix(specs)
+    st = res.stats
+    assert st.n_ladders == 4
+    assert st.spmd_groups == 1                 # one signature
+    assert st.host_sync_dispatches == 1        # ...one dispatch
+    assert st.programs_built == 1
+    assert st.spmd_rungs == 4 * depth          # every rung executed
+    if n_subsets > 1:
+        assert st.packed_ladders == 4
+        assert st.subset_width == width
+    else:
+        assert st.packed_ladders == 0
+    seen_subsets = set()
+    for run in res.runs:
+        ex = run.execution
+        assert ex["batched"] is True
+        assert ex["group_size"] == 4
+        assert ex["fenced"]
+        assert ex["packed"] is (n_subsets > 1)
+        assert ex["subset_width"] == (width if n_subsets > 1
+                                      else n_dev)
+        assert 0 <= ex["subset_index"] < n_subsets
+        seen_subsets.add(ex["subset_index"])
+    # packed ladders really occupy DISTINCT subsets of the mesh
+    assert len(seen_subsets) == min(n_subsets, 4)
+
+    # packing off: same sweep, same grouping, scan-stacked instead
+    off = CoreCoordinator(backend="spmd", spmd_pack="off")
+    unp = off.run_matrix(specs)
+    assert unp.stats.packed_ladders == 0
+    assert unp.stats.host_sync_dispatches == 1
+    assert [r.key for r in res.runs] == [r.key for r in unp.runs]
+    for rp, ru in zip(res.runs, unp.runs):
+        assert ru.execution["packed"] is False
+        assert ru.execution["fenced"]
+        assert rp.execution["executed_rungs"] \\
+            == ru.execution["executed_rungs"]
+        for sp, su in zip(rp.scenarios, ru.scenarios):
+            assert sp.source == su.source == "executed"
+            assert sp.main.strategy == su.main.strategy
+            assert sp.main.bytes_moved == su.main.bytes_moved
+            assert sp.main.elapsed_ns > 0 and su.main.elapsed_ns > 0
+            ratio = sp.main.elapsed_ns / su.main.elapsed_ns
+            assert 1 / 50 < ratio < 50, (rp.key, sp.n_stressors,
+                                         ratio)
+    print("packed OK:", n_subsets, "subsets on", n_dev, "devices")
+    """)
+
+
 def test_lru_eviction_deletes_operand_buffers():
     """Satellite regression: the spmd program cache cap is a MEMORY
     bound — evicting an entry must delete its placed operand device

@@ -289,3 +289,93 @@ def test_spmd_branch_fns_execute(strategy):
     out, barrier = f(xf, xi)
     assert np.isfinite(np.asarray(out)).all()
     assert measured_region_is_fenced(f, xf, xi)
+
+
+# ---------------------------------------------------------------------------
+# Width-packing: per-subset fence isolation (needs a >=4-engine mesh,
+# so this one test runs in a forced-host-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_fence_subset_isolation():
+    """A packed program is fenced only if EVERY collective in the
+    measured region respects the declared engine subsets: its own
+    grouped-psum sandwich passes; a cross-subset psum group, a
+    declaration that does not match the traced grouping, a global-psum
+    program claimed as packed, and a post-barrier cross-subset
+    ppermute leak must all be rejected."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro import compat
+        from repro.core.exec.fence import measured_region_is_fenced
+        from repro.core.exec.program import (build_ladder_program,
+                                             spmd_branch_fn)
+
+        fns = [spmd_branch_fn("r", None, 4, 2),
+               spmd_branch_fn("i", None, 1, 2)]
+        table = [[0, 1, 0, 1]]     # two width-2 ladders side by side
+        subsets = ((0, 1), (2, 3))
+        xf = np.ones((4, 4, 16), np.float32)
+        xi = np.zeros((4, 4, 16), np.int32)
+
+        _m, fn = build_ladder_program(4, fns, table, samples=1,
+                                      subsets=subsets)
+        # the packed program's sandwich isolates its own subsets...
+        assert measured_region_is_fenced(fn, xf, xi, subsets=subsets)
+        # ...but is NOT a fence for any other partition of the mesh
+        assert not measured_region_is_fenced(
+            fn, xf, xi, subsets=((0, 2), (1, 3)))
+        assert not measured_region_is_fenced(
+            fn, xf, xi, subsets=((0, 1, 2, 3),))
+
+        # a GLOBAL-psum program claimed as packed must be rejected
+        # (each subset's barrier would wait on the other's engines);
+        # the same program is a perfectly good unpacked fence
+        _m2, fn2 = build_ladder_program(4, fns, table, samples=1,
+                                        subsets=None)
+        assert not measured_region_is_fenced(fn2, xf, xi,
+                                             subsets=subsets)
+        assert measured_region_is_fenced(fn2, xf, xi)
+
+        # correct sandwich + a cross-subset ppermute INSIDE the
+        # measured region: data leaks between packed ladders
+        def leaky():
+            m = compat.make_mesh_from_devices(jax.devices()[:4],
+                                              ("engine",))
+            def per_engine(xf, xi):
+                xf = xf[0]
+                token = compat.psum_grouped(xf[0, 0], "engine",
+                                            subsets)
+                xf, _t = compat.optimization_barrier(
+                    (xf + token * 0, token))
+                stolen = jax.lax.ppermute(
+                    xf[0, 0], "engine",
+                    perm=[(2, 0), (0, 2), (1, 3), (3, 1)])
+                out = jnp.sum(xf) + stolen
+                done = compat.psum_grouped(out, "engine", subsets)
+                return (out + done * 0)[None]
+            f = compat.shard_map(per_engine, mesh=m,
+                                 in_specs=(P("engine"), P("engine")),
+                                 out_specs=P("engine"),
+                                 check_rep=False)
+            return jax.jit(f)
+        assert not measured_region_is_fenced(leaky(), xf, xi,
+                                             subsets=subsets)
+        print("PACKED_FENCE_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=src)
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=480,
+                       env=env)
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
+    assert "PACKED_FENCE_OK" in r.stdout
