@@ -93,13 +93,20 @@ class SurfaceAxis:
         ``(lo, hi, t, clamped)``.  Out-of-range coordinates clamp to
         the nearest edge with ``clamped=True`` — the caller surfaces
         that as an *extrapolated* query instead of silently returning
-        the edge point (the seed's ``min(n, len-1)`` bug)."""
+        the edge point (the seed's ``min(n, len-1)`` bug).
+
+        A coordinate ON an edge (``rw_ratio=1.0`` on a grid ending at
+        1.0, or any value of a single-point axis) is in-range, and so
+        is one that differs from the edge only by float noise
+        (``0.1 * 3 > 0.3``): the clamped flag uses a relative-epsilon
+        comparison, not strict inequality."""
         vals = self.values
+        eps = 1e-9 * max(1.0, abs(vals[0]), abs(vals[-1]))
         if v <= vals[0]:
-            return 0, 0, 0.0, v < vals[0]
+            return 0, 0, 0.0, v < vals[0] - eps
         if v >= vals[-1]:
             last = len(vals) - 1
-            return last, last, 0.0, v > vals[-1]
+            return last, last, 0.0, v > vals[-1] + eps
         hi = bisect_right(vals, v)
         lo = hi - 1
         t = (v - vals[lo]) / (vals[hi] - vals[lo])
@@ -146,11 +153,17 @@ class SurfaceQuery:
 @dataclass(frozen=True, order=True)
 class SurfaceKey:
     """Typed curve identity.  ``tag`` carries a stressor shape tag for
-    legacy per-shape curves ('' for steady / full surfaces);
-    ``qualifier`` preserves the exact legacy spelling of keys that
-    carry more than the canonical 4-tuple (observer shape tags,
-    stressor ensembles, ``buf=`` ladder suffixes), so v1/v2 files
-    round-trip byte-exactly through the typed store."""
+    legacy per-shape curves ('' for steady / full surfaces).
+
+    ``qualifier`` is overloaded two ways, told apart by spelling:
+
+    * a *structured* qualifier (``"worstcase"`` — no ``:|@``
+      characters) names a variant of the canonical surface and spells
+      as ``base[@tag]#qualifier`` (legacy keys never contain ``#``);
+    * a *verbatim* qualifier (contains ``:|@``) preserves the exact
+      legacy spelling of keys that carry more than the canonical
+      4-tuple (observer shape tags, stressor ensembles, ``buf=``
+      ladder suffixes), so v1/v2 files round-trip byte-exactly."""
     obs_pool: str
     obs_strat: str
     stress_pool: str
@@ -159,15 +172,18 @@ class SurfaceKey:
     qualifier: str = ""
 
     def to_string(self) -> str:
-        if self.qualifier:
-            return self.qualifier
+        if self.qualifier and any(c in self.qualifier for c in ":|@"):
+            return self.qualifier         # verbatim legacy spelling
         base = (f"{self.obs_pool}:{self.obs_strat}"
                 f"|{self.stress_pool}:{self.stress_strat}")
-        return f"{base}@{self.tag}" if self.tag else base
+        if self.tag:
+            base = f"{base}@{self.tag}"
+        return f"{base}#{self.qualifier}" if self.qualifier else base
 
     @staticmethod
     def from_string(key: str) -> "SurfaceKey":
-        obs, _, stress = key.partition("|")
+        base, _, qual = key.partition("#")
+        obs, _, stress = base.partition("|")
         op, _, orest = obs.partition(":")
         ostrat, _, otag = orest.partition("@")
         parts = stress.split("|")         # ["sp:ss@tag+...", "buf=..."]
@@ -176,7 +192,7 @@ class SurfaceKey:
         sstrat, _, stag = srest.partition("@")
         canonical = not otag and len(parts) == 1 and len(ensemble) == 1
         return SurfaceKey(op, ostrat, sp, sstrat, tag=stag,
-                          qualifier="" if canonical else key)
+                          qualifier=(qual if canonical else key))
 
     def with_tag(self, tag: str) -> "SurfaceKey":
         return SurfaceKey(self.obs_pool, self.obs_strat, self.stress_pool,
@@ -363,23 +379,32 @@ class CurveDB:
 
     # -- the coordinate query (what placement/roofline/simulate consume) -----
     def _resolve(self, obs_pool: str, obs_strat: str, stress_pool: str,
-                 stress_strat: str,
-                 shape_tag: str) -> Tuple[SurfaceKey, Surface, bool, bool]:
+                 stress_strat: str, shape_tag: str, qualifier: str = "",
+                 ) -> Tuple[SurfaceKey, Surface, bool, bool]:
         """Surface lookup with the v3 resolution ladder: exact shaped
         key -> exact steady key -> the canonical mixed surface (pure
         stressor strategies are edges of its rw_ratio axis).  Returns
-        (key, surface, tag_matched, fell_back)."""
+        (key, surface, tag_matched, fell_back).
+
+        A requested ``qualifier`` (e.g. ``"worstcase"``) prefers the
+        qualified surface at every ladder step, then falls through to
+        the unqualified ladder — the caller flags the fallback via
+        ``key.qualifier != qualifier``."""
+        quals = (qualifier, "") if qualifier else ("",)
         if shape_tag:
-            k = SurfaceKey(obs_pool, obs_strat, stress_pool, stress_strat,
-                           tag=shape_tag)
-            s = self.surfaces.get(k)
-            if s is not None:
-                return k, s, True, False
-        for sstrat in (stress_strat, "b"):
-            k = SurfaceKey(obs_pool, obs_strat, stress_pool, sstrat)
-            s = self.surfaces.get(k)
-            if s is not None:
-                return k, s, False, bool(shape_tag)
+            for q in quals:
+                k = SurfaceKey(obs_pool, obs_strat, stress_pool,
+                               stress_strat, tag=shape_tag, qualifier=q)
+                s = self.surfaces.get(k)
+                if s is not None:
+                    return k, s, True, False
+        for q in quals:
+            for sstrat in (stress_strat, "b"):
+                k = SurfaceKey(obs_pool, obs_strat, stress_pool, sstrat,
+                               qualifier=q)
+                s = self.surfaces.get(k)
+                if s is not None:
+                    return k, s, False, bool(shape_tag)
         raise KeyError(
             f"no surface for ({obs_pool!r}, {obs_strat!r}, "
             f"{stress_pool!r}, {stress_strat!r}); have "
@@ -389,7 +414,7 @@ class CurveDB:
               obs_strat: str = "r", stress_pool: Optional[str] = None,
               stress_strat: str = "w", rw_ratio: Optional[float] = None,
               inject_rate: Optional[float] = None,
-              shape_tag: str = "") -> SurfaceQuery:
+              shape_tag: str = "", qualifier: str = "") -> SurfaceQuery:
         """One interpolated reading of the characterized surface.
 
         ``rw_ratio`` / ``inject_rate`` select the stressor traffic mix
@@ -397,12 +422,15 @@ class CurveDB:
         the axis (a 1-axis legacy curve) an explicitly-requested
         coordinate flags the result as extrapolated instead of being
         silently dropped.  ``shape_tag`` keeps resolving legacy
-        per-shape curves exactly."""
+        per-shape curves exactly.  ``qualifier`` selects a variant
+        surface (e.g. the ``"worstcase"`` search envelope), flagging
+        the result when only the unqualified surface exists."""
         sp = stress_pool or pool
         key, surf, tag_hit, fell_back = self._resolve(
-            pool, obs_strat, sp, stress_strat, shape_tag)
+            pool, obs_strat, sp, stress_strat, shape_tag, qualifier)
+        flagged = fell_back or (bool(qualifier)
+                                and key.qualifier != qualifier)
         coords: Dict[str, float] = {AXIS_N: float(n_stressors)}
-        flagged = fell_back
         if surf.has_axis(AXIS_RW):
             coords[AXIS_RW] = (rw_ratio if rw_ratio is not None
                                else STRATEGY_RW_RATIO.get(stress_strat, 0.5))
@@ -423,22 +451,26 @@ class CurveDB:
                      strat: str = "r", stress_strat: str = "w",
                      shape_tag: str = "",
                      rw_ratio: Optional[float] = None,
-                     inject_rate: Optional[float] = None) -> float:
+                     inject_rate: Optional[float] = None,
+                     qualifier: str = "") -> float:
         return self.query(pool, n_stressors, obs_strat=strat,
                           stress_pool=stress_pool, stress_strat=stress_strat,
                           rw_ratio=rw_ratio, inject_rate=inject_rate,
-                          shape_tag=shape_tag).bandwidth_gbps
+                          shape_tag=shape_tag,
+                          qualifier=qualifier).bandwidth_gbps
 
     def effective_lat(self, pool: str, n_stressors: float,
                       stress_pool: Optional[str] = None,
                       stress_strat: str = "w",
                       shape_tag: str = "",
                       rw_ratio: Optional[float] = None,
-                      inject_rate: Optional[float] = None) -> float:
+                      inject_rate: Optional[float] = None,
+                      qualifier: str = "") -> float:
         return self.query(pool, n_stressors, obs_strat="l",
                           stress_pool=stress_pool, stress_strat=stress_strat,
                           rw_ratio=rw_ratio, inject_rate=inject_rate,
-                          shape_tag=shape_tag).latency_ns
+                          shape_tag=shape_tag,
+                          qualifier=qualifier).latency_ns
 
     # -- Little's law -------------------------------------------------------
     def _worst(self, pool: str, obs_strat: str,

@@ -28,7 +28,7 @@ from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.scenarios import ObserverSpec, ScenarioSpec
-from repro.core.workloads import rows_for as _wl_rows
+from repro.core.workloads import resolve_strategy, rows_for as _wl_rows
 
 # ---------------------------------------------------------------------------
 
@@ -175,7 +175,12 @@ class PlannedDispatch:
     disjoint engine subsets (width-packed dispatches) and idles any
     leftover engines, then scan-stacks the whole table ``waves``
     times.  Unpacked dispatches are the degenerate geometry: one
-    subset as wide as the mesh, one wave per stacked ladder."""
+    subset as wide as the mesh, one wave per stacked ladder.
+
+    ``probe=True`` marks a :func:`probe_batch` dispatch, whose rows are
+    already laid out at FULL packed width (``n_subsets * subset_width``
+    engines, one row per scan step): the builder pads each row to the
+    mesh and stacks them verbatim instead of tiling/repeating."""
     entries: Tuple[LadderEntry, ...]
     rungs: Tuple[Tuple[Tuple, ...], ...]    # (n_scen, subset_width)
     n_scen: int
@@ -185,6 +190,7 @@ class PlannedDispatch:
     waves: int              # scan-stacked repeats of the rung table
     kind: Optional[str]     # operand memory kind (None = mixed pools)
     packed: bool = False
+    probe: bool = False
 
     @property
     def group(self) -> int:
@@ -207,7 +213,7 @@ class PlannedDispatch:
                   samples: int) -> Tuple:
         return (mode, n_eng, activity, self.kind, samples, self.group,
                 self.n_subsets, self.subset_width, self.waves,
-                self.rungs)
+                self.probe, self.rungs)
 
 
 @dataclass(frozen=True)
@@ -282,11 +288,13 @@ def pack_engine_subsets(plan: DispatchPlan, *,
     fence checker verifies every subset's sandwich separately, so a
     packed ladder's measurement is attributable to exactly its own
     engine slice.  Dispatches that cannot pack (mesh too narrow,
-    singleton groups, already packed) pass through unchanged."""
+    singleton groups, already packed) pass through unchanged — as do
+    probe-batch dispatches, whose rows are already laid out at full
+    packed width by :func:`probe_batch`."""
     out = []
     for d in plan.dispatches:
         w, g = d.ladder_width, d.group
-        if (d.packed or w < 1 or plan.n_engines < 2 * w
+        if (d.packed or d.probe or w < 1 or plan.n_engines < 2 * w
                 or g < min_group):
             out.append(d)
             continue
@@ -298,3 +306,123 @@ def pack_engine_subsets(plan: DispatchPlan, *,
             waves=-(-g // p),           # ceil(group / P)
             packed=True))
     return replace(plan, dispatches=tuple(out))
+
+
+# ---------------------------------------------------------------------------
+# Probe batching (the worst-case search's planner transform)
+# ---------------------------------------------------------------------------
+
+
+def probe_batch(probes, n_eng: int, pools,
+                platform_engines: int) -> PlannedDispatch:
+    """ONE host-synchronous dispatch for a heterogeneous probe batch.
+
+    ``probes`` is a sequence of ``(spec, observer, buffer_bytes, k)``
+    tuples, each asking for a SINGLE contention rung (observer + ``k``
+    live stressor engines at the spec's shape) — the worst-case search
+    emits every iteration's candidate coordinates this way.  Unlike
+    :func:`build_plan`'s same-signature stacking, the probes may carry
+    DIFFERENT shapes, strategies and stressor counts: the per-rung
+    branch table is pure data, so heterogeneous rungs legally stack as
+    scan steps of one program.
+
+    Geometry: every probe occupies one ``subset_width``-wide slot
+    (the widest probe's natural width; narrower probes idle-pad their
+    slot).  When the mesh fits ``P >= 2`` slots the batch width-packs —
+    ``P`` probes run side by side per scan wave, each slot with its own
+    grouped-psum sandwich — otherwise the degenerate one-slot geometry
+    scan-stacks one probe per wave behind a global sandwich.  Each row
+    of ``rungs`` is one scan step at FULL packed width
+    (``n_subsets * subset_width``); a ragged last wave idle-fills its
+    spare slots.  ``member_slot`` and the dispatcher's clock decode
+    work unchanged: probe ``g`` is wave ``g // P``, slot ``g % P``,
+    ``n_scen == 1``.
+
+    The dispatch reuses the builder/dispatcher verbatim — no new
+    execution machinery — so a search iteration costs exactly one
+    host sync (``DispatchStats.host_sync_dispatches += 1``)."""
+    probes = list(probes)
+    if not probes:
+        raise ValueError("probe_batch needs at least one probe")
+    widths = []
+    for spec, obs, buf, k in probes:
+        depth = ladder_depth(spec, platform_engines, n_eng)
+        if not 0 <= k < depth:
+            raise ValueError(
+                f"probe {spec.name!r}: k={k} outside this mesh's ladder "
+                f"depth [0, {depth})")
+        widths.append(1 + spec.n_coupled_siblings + k)
+    w = max(widths)
+    p = max(1, min(n_eng // w, len(probes)))
+    if p == 1:
+        w = n_eng               # degenerate slot: global psum sandwich
+    waves = -(-len(probes) // p)
+    idle = ("i", None, 1, probes[0][0].iters)
+    rows: List[Tuple[Tuple, ...]] = []
+    role_pools: List[str] = []
+    for v in range(waves):
+        row: List[Tuple] = []
+        for j in range(p):
+            g = v * p + j
+            if g < len(probes):
+                spec, obs, buf, k = probes[g]
+                roles, rp = rung_roles(spec, obs, buf, k, w)
+                row.extend(roles)
+                role_pools.extend(rp)
+            else:
+                row.extend([idle] * w)
+        rows.append(tuple(row))
+    merge_probe_operand_roles(rows)     # raise on chain conflicts now
+    return PlannedDispatch(
+        entries=tuple(LadderEntry(g, spec, obs, buf)
+                      for g, (spec, obs, buf, _k) in enumerate(probes)),
+        rungs=tuple(rows),
+        n_scen=1,
+        ladder_width=w, subset_width=w, n_subsets=p, waves=waves,
+        kind=operand_kind(role_pools, pools),
+        packed=p > 1, probe=True)
+
+
+def _chain_req(role) -> Optional[Tuple]:
+    """The pointer-chain an engine running ``role`` needs seeded into
+    its int operand: ``None`` for streams/idle, ``("stride", s, rows)``
+    for strided chases, ``("cycle", rows)`` for seeded Sattolo walks."""
+    strategy, shape, rows, _iters = role
+    strat = resolve_strategy(strategy, shape)
+    if strat == "t":
+        return ("stride", getattr(shape, "stride", 8) or 8, rows)
+    if strat in ("l", "m"):
+        return ("cycle", rows)
+    return None
+
+
+def merge_probe_operand_roles(rows) -> List[Tuple]:
+    """One operand-seeding role per engine serving EVERY scan row of a
+    probe batch.  Operands are built once per dispatch, so an engine
+    whose rows disagree on the chain they need (different stride or
+    traversal length — a truncated Sattolo cycle is not a cycle) has no
+    single valid operand: that is a planning error, raised here with
+    the conflicting requirements named.  Streams only ever read the
+    shared float buffer, so a chase row and a stream row on one engine
+    coexist; among chain-free rows the widest wins (row count only
+    feeds the operand padding)."""
+    width = max(len(r) for r in rows)
+    merged: List[Optional[Tuple]] = [None] * width
+    chains: List[Optional[Tuple]] = [None] * width
+    for row in rows:
+        for e, role in enumerate(row):
+            req = _chain_req(role)
+            if req is not None:
+                if chains[e] is not None and chains[e] != req:
+                    raise ValueError(
+                        f"probe batch: engine {e} needs conflicting "
+                        f"chase chains {chains[e]} and {req} across "
+                        f"scan rows — split these probes into "
+                        f"separate batches")
+                if chains[e] is None:
+                    chains[e] = req
+                    merged[e] = role
+            elif chains[e] is None and (merged[e] is None
+                                        or role[2] > merged[e][2]):
+                merged[e] = role
+    return [m if m is not None else ("i", None, 1, 1) for m in merged]

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.exec.fence import measured_region_is_fenced
-from repro.core.exec.plan import PlannedDispatch, effective_duty
+from repro.core.exec.plan import (PlannedDispatch, effective_duty,
+                                  merge_probe_operand_roles)
 from repro.core.workloads import LINE_BYTES, resolve_strategy
 
 _SPMD_CHASES = ("l", "m", "t")      # latency walks: dependent gathers
@@ -80,8 +81,8 @@ def spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
         def idle(xf, xi):
             def body(_, acc):
                 return acc * 0.999 + 1.0
-            # seeded from the (barrier-fenced) operand: even idle
-            # engines enter their spin only after the start barrier
+            # seeded from the fenced operand: even idle engines enter
+            # their spin only after the start barrier
             return jax.lax.fori_loop(0, n * 8, body, xf[0, 0] * 1e-30)
         return idle
 
@@ -122,8 +123,7 @@ def spmd_branch_fn(strategy: str, shape, rows: int, iters: int,
         x = xf[:rows]
 
         def body(_, acc):
-            # re-issue the buffer each pass: the barrier pins the reads
-            # inside the loop (a bare sum would be loop-invariant)
+            # re-issued buffer: barrier pins reads inside the loop
             xx = compat.optimization_barrier(x)
             return acc * 0.5 + jnp.sum(xx)
 
@@ -184,14 +184,10 @@ def _pallas_branch_fn(strat: str, shape, rows: int, n: int):
         def rmw(xf, xi):
             def body(_, x):
                 # write-allocate: read + write back, carried so pass
-                # t+1 depends on pass t's stores.  Deliberate for 'w'
-                # too (matching the jnp fallback branch): a cacheable
-                # write allocates the line, so its memory traffic IS
-                # read+write — the interpret backend's pure-store 'w'
-                # kernel is the approximation, not this.  Useful-bytes
-                # accounting stays the registry's convention: 'w'
-                # counts the written lines (1x), 'x' both (2x,
-                # _SPMD_STREAM_2X) — same elapsed, different useful BW.
+                # t+1 depends on pass t's stores — deliberate for 'w'
+                # too (a cacheable write allocates the line).  Useful-
+                # bytes stays the registry's convention: 'w' counts
+                # written lines (1x), 'x' both (2x, _SPMD_STREAM_2X).
                 return _kstream.rmw_hbm(x, block_rows=blk,
                                         interpret=interp)
 
@@ -275,8 +271,7 @@ def build_rung_program(n_engines: int, branch_fns, engine_branch):
 
     def per_engine(xf, xi):
         xf, xi = xf[0], xi[0]
-        # barrier #1 (see docstring): data-derived token, all-reduced,
-        # then threaded into every operand
+        # barrier #1: data-derived token, all-reduced into operands
         token = jax.lax.psum(xf[0, 0] + xi[0, 0].astype(xf.dtype),
                              "engine")
         xf, xi, token = compat.optimization_barrier((xf, xi, token))
@@ -288,9 +283,9 @@ def build_rung_program(n_engines: int, branch_fns, engine_branch):
         done = jax.lax.psum(out, "engine")
         return out[None], done
 
-    # check_rep=False: no replication rule is registered for
-    # pallas_call, so Pallas rung activities cannot trace under the
-    # checker; the stop psum still replicates `done` at runtime
+    # check_rep=False: pallas_call has no replication rule, so Pallas
+    # rungs cannot trace under the checker; the stop psum still
+    # replicates `done` at runtime
     f = compat.shard_map(per_engine, mesh=mesh,
                          in_specs=(P("engine"), P("engine")),
                          out_specs=(P("engine"), P()),
@@ -377,11 +372,9 @@ def build_ladder_program(n_engines: int, branch_fns, branch_table,
         eng = jax.lax.axis_index("engine")
 
         def clock(dep):
-            # only each subset's LEADER engine pays the stamp cost (on
-            # the callback fallback each stamp is a host round-trip; 2
-            # per engine per sample would dominate small rungs); its
-            # siblings still serialize on it through the carry ->
-            # token psum collective below
+            # only each subset's LEADER engine pays the stamp cost
+            # (callback stamps are host round-trips); its siblings
+            # still serialize on it via the carry -> token psum below
             return jax.lax.cond(leaders_j[eng] == 1,
                                 compat.device_clock,
                                 lambda _d: jnp.zeros((2,), jnp.int32),
@@ -468,16 +461,13 @@ def build_scenario_program(n_engines: int, n_stressors: int,
 
         branch = jnp.where(eng == 0, 0,
                            jnp.where(eng <= n_stressors, 1, 2))
-        # operands passed positionally: the `operand=` kwarg is
-        # deprecated drift (the grep lint in tests/test_compat.py
-        # rejects it)
+        # operands positional: the `operand=` kwarg is lint-rejected
+        # deprecated drift (tests/test_compat.py)
         out = jax.lax.switch(branch, [run_main, run_stress, run_idle],
                              main_x, stress_x)
-        # barrier #2: measurement closes only after every engine
-        # finished — `done` consumes each engine's activity output.
-        # (`ready` stays alive through the operand barrier edge; the
-        # returned value is the stop psum, which is statically
-        # replicated.)
+        # barrier #2: `done` consumes every engine's finished activity
+        # output; only the statically-replicated stop psum is returned
+        # (`ready` stays alive through the operand barrier edge)
         done = jax.lax.psum(jnp.ravel(out)[0].astype(jnp.float32),
                             "engine")
         return out, done
@@ -537,7 +527,11 @@ def build_ladder_entry(planned: PlannedDispatch, n_eng: int,
     disjoint engine slices (leftover engines idle in their own barrier
     group) and scan-stack ``waves`` repeats; unpacked group dispatches
     reduce to the leading-scenario-axis stacking (one wave per
-    ladder).  The program is traced exactly ONCE (``compat.aot_trace``):
+    ladder).  Probe batches (``planned.probe``) carry their scan rows
+    verbatim — already at full packed width, one heterogeneous row per
+    step, no tiling — and seed operands from the MERGED role layout so
+    one operand set serves every row (``merge_probe_operand_roles``).
+    The program is traced exactly ONCE (``compat.aot_trace``):
     the same trace feeds the structural fence walk — packed dispatches
     pass their subsets so EVERY subset's sandwich is verified
     independently — and ``lower().compile()``."""
@@ -546,14 +540,19 @@ def build_ladder_entry(planned: PlannedDispatch, n_eng: int,
     idle_iters = planned.rungs[0][0][3]
     full_rungs = []
     for roles in planned.rungs:
-        row = list(roles) * planned.n_subsets
+        row = (list(roles) if planned.probe
+               else list(roles) * planned.n_subsets)
         while len(row) < n_eng:
             row.append(("i", None, 1, idle_iters))
         full_rungs.append(tuple(row))
 
-    deep_roles = full_rungs[-1]
-    rows_max = max(r[2] for r in deep_roles)
-    xf, xi = build_rung_operands(deep_roles, n_eng, rows_max)
+    if planned.probe:
+        op_roles = merge_probe_operand_roles(full_rungs)
+        rows_max = max(r[2] for row in full_rungs for r in row)
+    else:
+        op_roles = full_rungs[-1]
+        rows_max = max(r[2] for r in op_roles)
+    xf, xi = build_rung_operands(op_roles, n_eng, rows_max)
     branch_fns: List = []
     branch_of: Dict[Tuple, int] = {}
     table = np.zeros((len(full_rungs), n_eng), np.int32)
@@ -564,12 +563,13 @@ def build_ladder_entry(planned: PlannedDispatch, n_eng: int,
                 branch_fns.append(spmd_branch_fn(
                     *sig, activity=activity))
             table[k, e] = branch_of[sig]
-    if planned.waves > 1:
+    if planned.waves > 1 and not planned.probe:
         # the leading scenario axis: wave w's rungs are scan steps
         # [w*K, (w+1)*K) — every stacked rung keeps its own psum
         # sandwich and stamp pair, and the scan carry serializes wave
         # w+1 behind wave w exactly like rung k+1 behind rung k
-        # (invariant 4, across the whole group)
+        # (invariant 4, across the whole group).  Probe batches list
+        # every wave's row explicitly, so their table stacks as-is.
         table = np.tile(table, (planned.waves, 1))
     subsets = planned.subsets()
     mesh, fn = build_ladder_program(

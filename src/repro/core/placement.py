@@ -110,10 +110,20 @@ class PlacementPlan:
 
 
 class PlacementAdvisor:
+    """``pessimistic=True`` advises against the worst-case search
+    envelope (``SurfaceKey(qualifier="worstcase")``) instead of the
+    mean surface: the cost of a pool is what the ADVERSARIAL stressor
+    mix does to it at the given stressor count, whatever mix the
+    contention spec nominally expects.  Decisions fall back to the
+    mean surface (flagged extrapolated) when no envelope was
+    characterized for a pool."""
+
     def __init__(self, db: CurveDB, platform: Platform,
-                 pools: Optional[Sequence[str]] = None):
+                 pools: Optional[Sequence[str]] = None,
+                 pessimistic: bool = False):
         self.db = db
         self.platform = platform
+        self.pessimistic = pessimistic
         self.pools = list(pools) if pools is not None else \
             db.observer_pools()
 
@@ -127,6 +137,12 @@ class PlacementAdvisor:
                   shape_tag=contention.stress_shape_tag,
                   rw_ratio=contention.rw_ratio,
                   inject_rate=contention.inject_rate)
+        if self.pessimistic:
+            # the envelope is 1-axis (n_stressors): the adversarial
+            # search already minimized/maximized over the mix, duty and
+            # shape knobs, so the spec's mix coordinates do not apply
+            kw.update(qualifier="worstcase", shape_tag="",
+                      rw_ratio=None, inject_rate=None)
         bw_q = self.db.query(pool, contention.n_stressors,
                              obs_strat="r", **kw)
         lat_q = self.db.query(pool, contention.n_stressors,

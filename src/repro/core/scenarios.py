@@ -140,7 +140,12 @@ class TrafficShape:
             tag = f"dc{_exact(self.duty_cycle)}"
             # non-default burst lengths are part of the identity too
             return tag if self.burst_len == 64 else f"{tag}x{self.burst_len}"
-        return f"st{self.stride}"
+        tag = f"st{self.stride}"
+        # a duty-cycled strided chase (the search's inject_rate knob on
+        # the stride arm) must not alias the always-on chase of the
+        # same stride
+        return tag if self.duty_cycle == 1.0 else \
+            f"{tag}dc{_exact(self.duty_cycle)}"
 
 
 # ---------------------------------------------------------------------------

@@ -27,11 +27,14 @@ construction — that is their definition).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.devicetree import MemoryNode, Platform
+
+log = logging.getLogger(__name__)
 
 # traffic multiplier per access strategy: transactions on the memory
 # station per *useful* line delivered (WAWB: a write miss = read + victim
@@ -383,22 +386,54 @@ def calibrate_to_surface(platform: Platform, db, *,
 
     def edge(pool: str, obs_strat: str) -> float:
         # the n_stressors=0 edge is uncontended, so ANY characterized
-        # stressor pairing for this observer carries it
-        pairings = sorted((k.stress_pool, k.stress_strat)
-                          for k in db.surfaces
-                          if k.obs_pool == pool and k.obs_strat == obs_strat)
-        for sp, ss in pairings:
-            q = db.query(pool, 0, obs_strat=obs_strat,
-                         stress_pool=sp, stress_strat=ss)
-            return q.bandwidth_gbps if obs_strat == "r" else q.latency_ns
-        raise KeyError(f"no {obs_strat!r} surface for pool {pool!r}")
+        # stressor pairing for this observer carries it — but prefer a
+        # pairing the surface resolves WITHOUT extrapolating, tolerate
+        # pairings that only exist under a shape tag, and ignore
+        # variant surfaces (structured qualifiers like "worstcase":
+        # calibration fits the mean surface, not an envelope)
+        pairings = sorted({(k.stress_pool, k.stress_strat, k.tag)
+                           for k in db.surfaces
+                           if k.obs_pool == pool
+                           and k.obs_strat == obs_strat
+                           and (not k.qualifier
+                                or any(c in k.qualifier for c in ":|@"))})
+        if not pairings:
+            raise KeyError(
+                f"pool {pool!r} has no {obs_strat!r}-observer surface "
+                f"pairings at all; have "
+                f"{sorted(k.to_string() for k in db.surfaces)}")
+        fallback: Optional[Tuple[str, str, float]] = None
+        for sp, ss, tag in pairings:
+            try:
+                q = db.query(pool, 0, obs_strat=obs_strat,
+                             stress_pool=sp, stress_strat=ss,
+                             shape_tag=tag)
+            except KeyError:
+                continue    # tagged-only pairing with no steady fallback
+            v = q.bandwidth_gbps if obs_strat == "r" else q.latency_ns
+            if not q.extrapolated:
+                return v
+            if fallback is None:
+                fallback = (sp, ss, v)
+        if fallback is None:
+            raise KeyError(
+                f"no resolvable {obs_strat!r} pairing for pool {pool!r}")
+        sp, ss, v = fallback
+        log.warning("calibrate_to_surface: every %r pairing for pool %r "
+                    "extrapolates at the n_stressors=0 edge; using "
+                    "(%s, %s)", obs_strat, pool, sp, ss)
+        return v
 
     measured: Dict[str, Tuple[float, float]] = {}
     for pool in names:
         try:
             bw, lat = edge(pool, "r"), edge(pool, "l")
-        except KeyError:
-            continue        # pool not characterized with both probes
+        except KeyError as exc:
+            # pool not characterized with both probes: skip the fit for
+            # it, loudly — a silent skip here masked real coverage gaps
+            log.warning("calibrate_to_surface: skipping pool %r: %s",
+                        pool, exc)
+            continue
         if bw > 0.0 and lat > 0.0:
             measured[pool] = (bw, lat)
 

@@ -407,6 +407,238 @@ def test_serve_decode_mix_is_read_dominated():
 
 
 # ---------------------------------------------------------------------------
+# Edge-boundary bugfixes: on-edge queries, qualified keys, calibration
+# ---------------------------------------------------------------------------
+
+
+def test_surface_axis_edge_and_float_noise_not_clamped():
+    """A coordinate on (or within float noise of) a grid edge is
+    in-range; truly out-of-range values still flag."""
+    ax = SurfaceAxis("rw_ratio", (0.0, 0.5, 1.0))
+    assert ax.locate(1.0) == (2, 2, 0.0, False)
+    assert ax.locate(0.0) == (0, 0, 0.0, False)
+    # float-noise landing just past the edge (0.1 * 3 > 0.3)
+    noisy = SurfaceAxis("rw_ratio", (0.0, 0.1 * 3))
+    assert 0.1 * 3 > 0.3
+    assert noisy.locate(0.3)[3] is False
+    assert SurfaceAxis("x", (0.0, 0.3)).locate(0.1 * 3)[3] is False
+    # single-point axes: the one value is the whole in-range set
+    single = SurfaceAxis("inject_rate", (1.0,))
+    assert single.locate(1.0) == (0, 0, 0.0, False)
+    assert single.locate(1.0 + 1e-12)[3] is False
+    assert single.locate(2.0)[3] is True
+    assert single.locate(0.5)[3] is True
+    # genuinely out of range still flags
+    assert ax.locate(1.001)[3] is True
+    assert ax.locate(-0.001)[3] is True
+
+
+def test_query_on_axis_edges_not_extrapolated(surface_db):
+    """rw_ratio=1.0 / inject_rate=1.0 on grids ending at 1.0, and the
+    last characterized stressor count, are measurements — not
+    extrapolations."""
+    pts = surface_db.get("hbm", "r", "hbm", "b", "rf0.50")
+    n_max = pts[-1].n_stressors
+    q = surface_db.query("hbm", n_max, stress_strat="b", rw_ratio=1.0,
+                         inject_rate=1.0)
+    assert not q.extrapolated
+    q = surface_db.query("hbm", 0, stress_strat="b", rw_ratio=0.0,
+                         inject_rate=IRS[0])
+    assert not q.extrapolated
+    assert surface_db.query("hbm", n_max + 1, stress_strat="b").extrapolated
+
+
+@pytest.mark.parametrize("key", [
+    "hbm:r|hbm:b#worstcase",
+    "hbm:l|host:b@rf0.50#worstcase",
+])
+def test_surface_key_structured_qualifier_roundtrip(key):
+    k = SurfaceKey.from_string(key)
+    assert k.qualifier == "worstcase"
+    assert k.to_string() == key
+    # distinct from its unqualified sibling
+    assert k != SurfaceKey(k.obs_pool, k.obs_strat, k.stress_pool,
+                           k.stress_strat, tag=k.tag)
+
+
+def test_curvedb_prefers_qualified_surface_and_flags_fallback():
+    db = CurveDB(platform="test")
+    mean = Surface(axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+                   bandwidth_gbps=[100.0, 60.0], latency_ns=[100.0, 200.0])
+    env = Surface(axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+                  bandwidth_gbps=[90.0, 10.0], latency_ns=[120.0, 900.0])
+    db.surfaces[SurfaceKey("hbm", "r", "hbm", "b")] = mean
+    db.surfaces[SurfaceKey("hbm", "r", "hbm", "b",
+                           qualifier="worstcase")] = env
+    q = db.query("hbm", 2, stress_strat="w", qualifier="worstcase")
+    assert q.bandwidth_gbps == 10.0 and not q.extrapolated
+    assert db.query("hbm", 2, stress_strat="w").bandwidth_gbps == 60.0
+    # qualifier requested but only the mean exists: answer from the
+    # mean, honestly flagged
+    q = db.query("hbm", 2, obs_strat="r", stress_pool="hbm",
+                 stress_strat="w", qualifier="nosuch")
+    assert q.bandwidth_gbps == 60.0 and q.extrapolated
+    # a save/load round-trip keeps the qualified key distinct
+    assert SurfaceKey.from_string(
+        db.surfaces and "hbm:r|hbm:b#worstcase").qualifier == "worstcase"
+
+
+def _edge_db():
+    """Two stressor pairings for hbm: the alphabetically-first one has
+    no n=0 point (extrapolates at the edge), the second measures it."""
+    db = CurveDB(platform="test")
+    for ostrat, clipped, full in (("r", [50.0, 40.0], [100.0, 70.0]),
+                                  ("l", [500.0, 600.0], [200.0, 350.0])):
+        db.surfaces[SurfaceKey("hbm", ostrat, "aaa", "w")] = Surface(
+            axes=(SurfaceAxis(AXIS_N, (1.0, 2.0)),),
+            bandwidth_gbps=clipped, latency_ns=clipped)
+        db.surfaces[SurfaceKey("hbm", ostrat, "hbm", "w")] = Surface(
+            axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+            bandwidth_gbps=full, latency_ns=full)
+    return db
+
+
+def test_calibrate_edge_prefers_non_extrapolated_pairing(coord):
+    """The regression: ``edge()`` used to return the FIRST pairing even
+    when its n=0 query was clamped off-grid — the fit then anchored on
+    an extrapolated edge."""
+    from repro.core.simulate import _modeled_edge, calibrate_to_surface
+
+    cal = calibrate_to_surface(coord.platform, _edge_db(), pools=["hbm"])
+    bw, lat = _modeled_edge(cal.platform, "hbm")
+    # fit landed on the measured (non-extrapolated) pairing's edge
+    assert bw == pytest.approx(100.0, rel=0.05)
+    assert lat == pytest.approx(200.0, rel=0.05)
+
+
+def test_calibrate_warns_and_skips_uncovered_pools(coord, caplog):
+    from repro.core.simulate import calibrate_to_surface
+
+    db = CurveDB(platform="test")
+    db.surfaces[SurfaceKey("hbm", "r", "hbm", "w")] = Surface(
+        axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+        bandwidth_gbps=[100.0, 70.0], latency_ns=[0.0, 0.0])
+    with caplog.at_level(logging.WARNING, "repro.core.simulate"):
+        cal = calibrate_to_surface(coord.platform, db,
+                                   pools=["hbm", "host"])
+    # hbm has no latency probe, host nothing at all: both skipped LOUDLY
+    assert not cal.scale_bw
+    msgs = [r.message for r in caplog.records]
+    assert any("skipping pool 'hbm'" in m for m in msgs)
+    assert any("skipping pool 'host'" in m
+               and "at all" in m for m in msgs)
+
+
+def test_calibrate_resolves_tagged_only_pairings(coord):
+    """A pool characterized only under a shape tag used to KeyError out
+    of the fit (the steady-key ladder missed it); the tagged pairing
+    now resolves."""
+    from repro.core.simulate import calibrate_to_surface
+
+    db = CurveDB(platform="test")
+    for ostrat, vals in (("r", [80.0, 50.0]), ("l", [250.0, 400.0])):
+        db.surfaces[SurfaceKey("hbm", ostrat, "hbm", "w",
+                               tag="st8")] = Surface(
+            axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+            bandwidth_gbps=vals, latency_ns=vals)
+    cal = calibrate_to_surface(coord.platform, db, pools=["hbm"])
+    assert "hbm" in cal.scale_bw and cal.residual_bw["hbm"] < 0.05
+
+
+def test_calibration_ignores_worstcase_envelopes(coord):
+    """The fit anchors on the mean surface's edge even when a search
+    envelope (same pool, qualified key) is installed."""
+    from repro.core.simulate import _modeled_edge, calibrate_to_surface
+
+    db = _edge_db()
+    db.surfaces[SurfaceKey("hbm", "r", "hbm", "b",
+                           qualifier="worstcase")] = Surface(
+        axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+        bandwidth_gbps=[10.0, 5.0], latency_ns=[0.0, 0.0])
+    cal = calibrate_to_surface(coord.platform, db, pools=["hbm"])
+    bw, _lat = _modeled_edge(cal.platform, "hbm")
+    assert bw == pytest.approx(100.0, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Pessimistic placement: advise against the worst-case envelope
+# ---------------------------------------------------------------------------
+
+
+def _pessimism_db():
+    """Mean surfaces make hbm the obvious pick; the adversarial
+    envelopes reveal hbm collapses under worst-case contention while
+    host degrades gracefully."""
+    db = CurveDB(platform="test")
+
+    def surf(bw0, bw2, lat0, lat2):
+        return Surface(axes=(SurfaceAxis(AXIS_N, (0.0, 2.0)),),
+                       bandwidth_gbps=[bw0, bw2], latency_ns=[lat0, lat2])
+
+    db.surfaces[SurfaceKey("hbm", "r", "hbm", "b")] = surf(
+        100.0, 80.0, 0.0, 0.0)
+    db.surfaces[SurfaceKey("hbm", "l", "hbm", "b")] = surf(
+        0.0, 0.0, 100.0, 150.0)
+    db.surfaces[SurfaceKey("host", "r", "hbm", "b")] = surf(
+        60.0, 50.0, 0.0, 0.0)
+    db.surfaces[SurfaceKey("host", "l", "hbm", "b")] = surf(
+        200.0, 200.0, 250.0, 300.0)
+    for pool, bw, lat in (("hbm", [90.0, 8.0], [110.0, 2000.0]),
+                          ("host", [55.0, 40.0], [260.0, 400.0])):
+        db.surfaces[SurfaceKey(pool, "r", "hbm", "b",
+                               qualifier="worstcase")] = surf(
+            bw[0], bw[1], 0.0, 0.0)
+        db.surfaces[SurfaceKey(pool, "l", "hbm", "b",
+                               qualifier="worstcase")] = surf(
+            0.0, 0.0, lat[0], lat[1])
+    return db
+
+
+def test_pessimistic_placement_advises_against_envelope(coord):
+    db = _pessimism_db()
+    obj = MemObject("kv", 1 << 20, bytes_per_step=1e9)
+    contention = ContentionSpec(2, "hbm", "w")
+    mean_plan = PlacementAdvisor(db, coord.platform).advise(
+        [obj], contention)
+    worst_plan = PlacementAdvisor(db, coord.platform,
+                                  pessimistic=True).advise(
+        [obj], contention)
+    assert mean_plan.pool_of("kv") == "hbm"
+    assert worst_plan.pool_of("kv") == "host"
+    assert not worst_plan.decisions["kv"].extrapolated
+    # the pessimistic cost is the envelope's, not the mean's
+    assert worst_plan.decisions["kv"].predicted_step_ns == \
+        pytest.approx(1e9 / 40.0)
+
+
+def test_pessimistic_placement_ignores_mix_coordinates(coord):
+    """The envelope already maximized over the mix knobs: pessimistic
+    queries must not flag (or fail on) rw/ir coordinates the 1-axis
+    envelope does not carry."""
+    adv = PlacementAdvisor(_pessimism_db(), coord.platform,
+                           pessimistic=True)
+    obj = MemObject("kv", 1 << 20, bytes_per_step=1e9)
+    plan = adv.advise([obj], ContentionSpec(
+        2, "hbm", "b", rw_ratio=0.25, inject_rate=0.5,
+        stress_shape_tag="rf0.25dc0.50"))
+    assert plan.pool_of("kv") == "host"
+    assert not plan.decisions["kv"].extrapolated
+
+
+def test_pessimistic_placement_flags_missing_envelope(coord, caplog):
+    db = _pessimism_db()
+    db.surfaces = {k: s for k, s in db.surfaces.items()
+                   if k.qualifier != "worstcase"}
+    adv = PlacementAdvisor(db, coord.platform, pessimistic=True)
+    obj = MemObject("kv", 1 << 20, bytes_per_step=1e9)
+    with caplog.at_level(logging.WARNING, "repro.core.placement"):
+        plan = adv.advise([obj], ContentionSpec(2, "hbm", "w"))
+    # falls back to the mean surface, honestly flagged + warned
+    assert plan.decisions["kv"].extrapolated
+    assert any("EXTRAPOLATED" in r.message for r in caplog.records)
+
+
+# ---------------------------------------------------------------------------
 # The lint: consumers never string-split keys
 # ---------------------------------------------------------------------------
 
