@@ -152,10 +152,14 @@ def _time_modes(specs, n_sig: int, cache_dir=None) -> dict:
     CoreCoordinator(backend="spmd").run_matrix(specs[:1])
     coords, colds, cold_stats = {}, {}, {}
     for name, dispatch, pack in MODES:
+        # hermetic timing: faults pinned off (immune to a stray
+        # REPRO_FAULT_SPEC in the environment) and the quality gate
+        # off so no re-measure perturbs the dispatch accounting
         coord = CoreCoordinator(backend="spmd", spmd_dispatch=dispatch,
                                 spmd_pack=pack,
                                 spmd_cache_cap=CACHE_CAP,
-                                compile_cache_dir=cache_dir)
+                                compile_cache_dir=cache_dir,
+                                faults=False, quality="off")
         t0 = time.perf_counter()
         cold_res = coord.run_matrix(specs)
         colds[name] = time.perf_counter() - t0
@@ -247,7 +251,8 @@ def _packing_section(n_dev: int, cache_dir=None) -> dict:
         coords[name] = CoreCoordinator(backend="spmd",
                                        spmd_pack=pack,
                                        spmd_cache_cap=CACHE_CAP,
-                                       compile_cache_dir=cache_dir)
+                                       compile_cache_dir=cache_dir,
+                                       faults=False, quality="off")
         t0 = time.perf_counter()
         coords[name].run_matrix(specs)
         section[name] = {"wall_s_cold":

@@ -44,7 +44,7 @@ def _run() -> list:
         (StressorSpec("w", "hbm", BUF),),
         iters=20, max_stressors=3)
 
-    spmd = CoreCoordinator(backend="spmd")
+    spmd = CoreCoordinator(backend="spmd", faults=False, quality="off")
     res = spmd.run_matrix([spec])
     st = res.stats
     print(f"spmd ladder: {st.spmd_rungs} rungs "

@@ -53,7 +53,7 @@ def _run(smoke: bool, out: str) -> dict:
     from repro.core.scenarios import surface_matrix
 
     rws, irs = _grids(smoke)
-    coord = CoreCoordinator(backend="spmd")
+    coord = CoreCoordinator(backend="spmd", faults=False, quality="off")
     max_stressors = min(3, len(jax.devices()) - 1)
     db = characterize_surface(coord, pools=["hbm"], stress_pools=["hbm"],
                               buffer_bytes=BUF, rw_ratios=rws,

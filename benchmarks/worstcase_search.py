@@ -76,7 +76,8 @@ def _run(smoke: bool, out: str, fail_if_not_worse: bool) -> dict:
                                    worst_case_search)
 
     iterations, batch = _budget(smoke)
-    coord = CoreCoordinator(backend="spmd")
+    coord = CoreCoordinator(backend="spmd", faults=False,
+                            quality="off")
     max_n = min(3, len(jax.devices()) - 1)
     spec = SearchSpec(pool="hbm", iterations=iterations, batch=batch,
                       max_stressors=max_n, buffer_bytes=BUF,

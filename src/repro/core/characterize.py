@@ -33,6 +33,8 @@ to one stacked dispatch per distinct ladder signature.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 from bisect import bisect_right
 from dataclasses import asdict, dataclass, field
 from itertools import product
@@ -510,8 +512,24 @@ class CurveDB:
                               for k, v in self.curves.items()},
                    "provenance": self.provenance,
                    "meta": self.meta}
-        with open(path, "w") as f:
-            json.dump(doc, f, indent=1)
+        # atomic: write a sibling temp file and rename over the
+        # target, so a crash (or injected fault) mid-save leaves any
+        # existing database intact instead of torn
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".curvedb-",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @staticmethod
     def load(path: str) -> "CurveDB":
@@ -553,6 +571,7 @@ def characterize(
         Iterable[Tuple[str, TrafficShape]]] = None,
     iters: int = 500,
     batched: bool = True,
+    journal=None,
 ) -> CurveDB:
     """Build the curve database for the scenario matrix.
 
@@ -590,12 +609,14 @@ def characterize(
                                                 shape),),
                         iters=iters)
                     specs.append(spec)
-    return characterize_matrix(coord, specs, batched=batched)
+    return characterize_matrix(coord, specs, batched=batched,
+                               journal=journal)
 
 
 def characterize_matrix(coord: CoreCoordinator,
                         specs: List[ScenarioSpec], *,
-                        batched: bool = True) -> CurveDB:
+                        batched: bool = True,
+                        journal=None) -> CurveDB:
     """Run an explicit scenario matrix and persist it as a CurveDB.
 
     Each curve's provenance records the scenario spec AND an
@@ -605,8 +626,13 @@ def characterize_matrix(coord: CoreCoordinator,
     co-observers were ``coupled`` into the measured region) — an
     spmd-backend curve whose every point came from a live fused
     multi-engine dispatch is distinguishable from a queueing-model
-    curve after the fact, and a coupled curve from an uncoupled one."""
-    result: MatrixResult = coord.run_matrix(specs, batched=batched)
+    curve after the fact, and a coupled curve from an uncoupled one.
+
+    ``journal=<path>`` (spmd backend) makes the sweep crash-resumable:
+    completed dispatch groups restore value-identically from the
+    sidecar on re-run (see :class:`repro.core.exec.SweepJournal`)."""
+    result: MatrixResult = coord.run_matrix(specs, batched=batched,
+                                            journal=journal)
     return curvedb_from_result(result, coord.platform.name,
                                backend=coord.backend)
 
@@ -631,6 +657,15 @@ def _stats_meta(result: MatrixResult, backend: str) -> Dict[str, Any]:
         # on disjoint subsets, and the subset width they occupied
         "packed_ladders": result.stats.packed_ladders,
         "subset_width": result.stats.subset_width,
+        # resilient execution (PR 9): injected faults, retries and
+        # degradations survived, quality-gate activity, resumed groups
+        "faults_injected": result.stats.faults_injected,
+        "retried_dispatches": result.stats.retried_dispatches,
+        "degraded_ladders": result.stats.degraded_ladders,
+        "modeled_floor_ladders": result.stats.modeled_floor_ladders,
+        "noisy_remeasures": result.stats.noisy_remeasures,
+        "noisy_rungs": result.stats.noisy_rungs,
+        "resumed_ladders": result.stats.resumed_ladders,
     }
 
 
@@ -693,6 +728,7 @@ def characterize_surface(
     iters: int = 500,
     max_stressors: Optional[int] = None,
     batched: bool = True,
+    journal=None,
 ) -> CurveDB:
     """Characterize full bandwidth–latency surfaces.
 
@@ -730,7 +766,7 @@ def characterize_surface(
                 obs_strategies=obs_strategies, rw_ratios=rws,
                 inject_rates=irs, iters=iters,
                 max_stressors=max_stressors))
-    result = coord.run_matrix(specs, batched=batched)
+    result = coord.run_matrix(specs, batched=batched, journal=journal)
     return surfacedb_from_result(result, coord.platform.name,
                                  rw_ratios=rws, inject_rates=irs,
                                  backend=coord.backend)

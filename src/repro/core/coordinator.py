@@ -48,10 +48,11 @@ import jax
 
 from repro.core import simulate as sim
 from repro.core.devicetree import Platform, detect_platform
+from repro.core.exec import journal as exec_journal
 from repro.core.exec import plan as exec_plan
+from repro.core.exec import resilience as exec_resilience
 from repro.core.exec.assemble import (MatrixResult, ScenarioResult,
-                                      ScenarioRun, assemble_runs,
-                                      observer_result)
+                                      ScenarioRun, assemble_runs)
 from repro.core.exec.dispatch import Dispatcher, DispatchStats
 from repro.core.exec.fence import (_shard_map_bodies,
                                    measured_region_is_fenced)
@@ -173,7 +174,10 @@ class CoreCoordinator:
                  spmd_samples: int = 3,
                  spmd_cache_cap: Optional[int] = None,
                  spmd_pack: str = "auto",
-                 compile_cache_dir: Optional[str] = None):
+                 compile_cache_dir: Optional[str] = None,
+                 faults=None,
+                 retry: Optional[exec_resilience.RetryPolicy] = None,
+                 quality="auto"):
         self.platform = platform or detect_platform()
         self.pools = pool_mgr or PoolManager(self.platform)
         if backend == "auto":
@@ -210,10 +214,19 @@ class CoreCoordinator:
         self.spmd_cache_cap = (spmd_cache_cap if spmd_cache_cap
                                is not None else self._SPMD_CACHE_CAP)
         assert self.spmd_cache_cap >= 1, self.spmd_cache_cap
+        # resilience wiring (exec.resilience): deterministic fault
+        # injection (None reads REPRO_FAULT_SPEC), retry/degradation
+        # policy, and the per-rung measurement quality gate
+        self.fault_spec = exec_resilience.resolve_faults(faults)
+        self.retry_policy = retry or exec_resilience.RetryPolicy()
+        self.quality_gate = exec_resilience.resolve_gate(quality)
         # stage 3 of the exec pipeline: program/operand LRU, AOT
         # compile, opt-in persistent compile cache, dispatch + decode
         self._dispatcher = Dispatcher(self.spmd_cache_cap, spmd_samples,
-                                      compile_cache_dir)
+                                      compile_cache_dir,
+                                      faults=(self.fault_spec.injector()
+                                              if self.fault_spec
+                                              else None))
         self.compile_cache_dir = compile_cache_dir
         self.persistent_cache_enabled = \
             self._dispatcher.persistent_cache_enabled
@@ -492,7 +505,7 @@ class CoreCoordinator:
                                       mesh)
 
     def run_matrix(self, specs: List[ScenarioSpec], *,
-                   batched: bool = True) -> MatrixResult:
+                   batched: bool = True, journal=None) -> MatrixResult:
         """Execute a scenario matrix.
 
         The measured observer pass is where executable backends spend
@@ -519,7 +532,18 @@ class CoreCoordinator:
         effective ``coupled`` state, the rung ``activity``, and — for
         spmd — ``batched``/``group_size``/``aot`` plus the
         width-packing slot ``packed``/``subset_width``/
-        ``subset_index``."""
+        ``subset_index``.
+
+        Execution is resilient (see :mod:`repro.core.exec.resilience`):
+        a failed dispatch retries with backoff, degrades down the
+        packed->batched->ladder->rung->modeled ladder isolated to its
+        signature group, and noisy rungs re-measure under the quality
+        gate; pass ``journal=<path>`` (spmd fused paths) to make the
+        sweep crash-resumable via a :class:`SweepJournal` sidecar."""
+        if journal is not None and self.backend != "spmd":
+            raise ValidationError(
+                "journal= requires the spmd backend (other backends "
+                "model and have nothing to resume)")
         for spec in specs:
             self.validate_spec(spec)
         triples = [(spec, obs, b) for spec in specs
@@ -539,7 +563,7 @@ class CoreCoordinator:
             activity = self._resolved_activity()
             executed, fenced_by_triple, timing_by_triple = \
                 self._execute_spmd(triples, stats, activity,
-                                   batched=batched)
+                                   batched=batched, journal=journal)
         else:
             activity = "none"       # nothing executes on this backend
 
@@ -612,7 +636,7 @@ class CoreCoordinator:
 
     def _execute_spmd(
         self, triples, stats: DispatchStats, activity: str = "jnp",
-        batched: bool = True,
+        batched: bool = True, journal=None,
     ) -> Tuple[Dict[Tuple[int, int], WorkloadResult], Dict[int, bool],
                Dict[int, Dict[str, Any]]]:
         """Execute every (spec, observer, buffer) triple's contention
@@ -620,20 +644,19 @@ class CoreCoordinator:
         planner builds a DispatchPlan (one dispatch per same-signature
         group when ``spmd_dispatch="batched"``, per triple under
         ``"ladder"``), width-packing re-plans shallow groups onto
-        disjoint engine subsets, and the Dispatcher builds,
-        fence-verifies and runs each planned dispatch (``"rung"`` is
-        the legacy host-clocked one-dispatch-per-rung path).  Returns
-        per-(triple, rung) observer results, per-triple verified fence
-        state, and per-triple timing provenance."""
+        disjoint engine subsets, and the resilient executor
+        (:mod:`repro.core.exec.journal`) builds, fence-verifies, runs,
+        retries/degrades and optionally journals each planned dispatch
+        (``"rung"`` is the legacy host-clocked one-dispatch-per-rung
+        path).  Returns per-(triple, rung) observer results,
+        per-triple verified fence state, and per-triple timing
+        provenance."""
         n_eng = self._spmd_engines()
         if n_eng < 2:
             raise ValidationError(
                 "spmd backend needs >= 2 devices; start the process with "
                 "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                 "(CPU container) or run on a real multi-device slice")
-        executed: Dict[Tuple[int, int], WorkloadResult] = {}
-        fenced_by_triple: Dict[int, bool] = {}
-        timing_by_triple: Dict[int, Dict[str, Any]] = {}
         dispatch = self._resolved_dispatch()
         if dispatch == "batched" and not batched:
             dispatch = "ladder"       # megabatching explicitly disabled
@@ -645,54 +668,15 @@ class CoreCoordinator:
                 stats.spmd_groups += len(plan.dispatches)
                 if self.spmd_pack == "auto":
                     plan = exec_plan.pack_engine_subsets(plan)
-            for planned in plan.dispatches:
-                med, spread, fenced, aot = self._dispatcher.run_planned(
-                    planned, n_eng, activity, dispatch, stats)
-                for g, entry in enumerate(planned.entries):
-                    i = entry.index
-                    obs, buf = entry.observer, entry.buffer_bytes
-                    for k in range(planned.n_scen):
-                        executed[(i, k)] = observer_result(
-                            obs, buf, entry.spec.iters,
-                            float(max(med[g, k], 1.0)))
-                    fenced_by_triple[i] = fenced
-                    _wave, subset = planned.member_slot(g)
-                    timing_by_triple[i] = {
-                        "timing_source": "device",
-                        "samples": self.spmd_samples,
-                        "rung_time_spread_ns": [int(s)
-                                                for s in spread[g]],
-                        "dispatches": 1,
-                        "batched": dispatch == "batched",
-                        "group_size": planned.group,
-                        "aot": aot,
-                        "packed": planned.packed,
-                        "subset_width": planned.subset_width,
-                        "subset_index": subset,
-                    }
-            return executed, fenced_by_triple, timing_by_triple
-        for i, (spec, obs, buf) in enumerate(triples):
-            fenced, timing = True, {
-                "timing_source": "host",
-                "samples": self.spmd_samples,
-                "rung_time_spread_ns": [], "dispatches": 0,
-                "batched": False, "group_size": 1, "aot": True,
-                "packed": False, "subset_width": n_eng,
-                "subset_index": 0}
-            for k in range(self._ladder_depth(spec)):
-                roles, role_pools = exec_plan.rung_roles(
-                    spec, obs, buf, k, n_eng)
-                kind = exec_plan.operand_kind(role_pools, self.pools)
-                elapsed, rung_fenced, spread, rung_aot = \
-                    self._dispatcher.run_rung(roles, n_eng, activity,
-                                              kind, stats)
-                executed[(i, k)] = observer_result(obs, buf, spec.iters,
-                                                   elapsed)
-                fenced = fenced and rung_fenced
-                timing["aot"] = timing["aot"] and rung_aot
-                timing["rung_time_spread_ns"].append(spread)
-                # 1 warm + the timed samples
-                timing["dispatches"] += 1 + self.spmd_samples
-            fenced_by_triple[i] = fenced
-            timing_by_triple[i] = timing
-        return executed, fenced_by_triple, timing_by_triple
+            return exec_journal.execute_plan(
+                self._dispatcher, plan, n_eng=n_eng, activity=activity,
+                mode=dispatch, stats=stats, policy=self.retry_policy,
+                gate=self.quality_gate, journal=journal)
+        if journal is not None:
+            raise ValidationError(
+                "journal= needs a fused dispatch path "
+                "(spmd_dispatch='batched' or 'ladder'), not 'rung'")
+        return exec_journal.execute_rung_path(
+            self._dispatcher, triples, n_eng=n_eng, activity=activity,
+            stats=stats, depth_fn=self._ladder_depth, pools=self.pools,
+            policy=self.retry_policy, gate=self.quality_gate)

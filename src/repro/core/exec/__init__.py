@@ -17,6 +17,11 @@ output, so ROADMAP items inject themselves into exactly one seam:
   (waves, subsets, rungs, samples) clock decode.
 * :mod:`repro.core.exec.assemble` — ScenarioRun / execution-provenance
   construction from the dispatch results.
+* :mod:`repro.core.exec.resilience` — fault injection, retry with the
+  packed->batched->ladder->rung->modeled degradation ladder, and the
+  per-rung measurement quality gate.
+* :mod:`repro.core.exec.journal` — sweep-level resilient plan
+  execution and the crash-resume :class:`SweepJournal`.
 
 ``CoreCoordinator`` (repro.core.coordinator) is the thin facade over
 this package; its public API is unchanged.
@@ -26,11 +31,20 @@ from repro.core.exec.assemble import (MatrixResult, ScenarioResult,
                                       observer_result)
 from repro.core.exec.dispatch import Dispatcher, DispatchStats, ProgramCache
 from repro.core.exec.fence import measured_region_is_fenced
+from repro.core.exec.journal import (SweepJournal, entry_key,
+                                     execute_plan, execute_rung_path,
+                                     plan_fingerprint)
 from repro.core.exec.plan import (DispatchPlan, LadderEntry,
                                   PlannedDispatch, build_plan,
                                   effective_duty, group_key, ladder_depth,
                                   observer_groups, pack_engine_subsets,
-                                  rung_roles)
+                                  rung_roles, rung_row, split_ladders,
+                                  split_probes, unpack_dispatch)
+from repro.core.exec.resilience import (FaultInjector, FaultSpec,
+                                        GroupExecutionError,
+                                        InjectedFault, QualityGate,
+                                        RetryPolicy, run_group,
+                                        resolve_faults, resolve_gate)
 from repro.core.exec.program import (CompiledProgram, build_ladder_entry,
                                      build_ladder_program,
                                      build_rung_operands,
@@ -44,7 +58,12 @@ __all__ = [
     "measured_region_is_fenced", "DispatchPlan", "LadderEntry",
     "PlannedDispatch", "build_plan", "effective_duty", "group_key",
     "ladder_depth", "observer_groups", "pack_engine_subsets",
-    "rung_roles", "CompiledProgram", "build_ladder_entry",
+    "rung_roles", "rung_row", "split_ladders", "split_probes",
+    "unpack_dispatch", "CompiledProgram", "build_ladder_entry",
     "build_ladder_program", "build_rung_operands", "build_rung_program",
-    "build_scenario_program", "spmd_branch_fn",
+    "build_scenario_program", "spmd_branch_fn", "FaultInjector",
+    "FaultSpec", "GroupExecutionError", "InjectedFault", "QualityGate",
+    "RetryPolicy", "run_group", "resolve_faults", "resolve_gate",
+    "SweepJournal", "entry_key", "execute_plan", "execute_rung_path",
+    "plan_fingerprint",
 ]

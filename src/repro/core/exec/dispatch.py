@@ -9,6 +9,7 @@ ladder's stamp pairs back to per-rung elapsed medians.
 """
 from __future__ import annotations
 
+import hashlib
 import time as _time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -22,6 +23,14 @@ from repro.core.exec.plan import PlannedDispatch
 from repro.core.exec.program import (CompiledProgram, build_ladder_entry,
                                      build_rung_operands,
                                      build_rung_program, spmd_branch_fn)
+
+
+def _fault_site(key: Tuple) -> str:
+    """Stable fault-injection site id for a program cache key.  The
+    key's repr is deterministic (frozen dataclasses and primitives
+    only), so the same dispatch gets the same site in every process —
+    which is what makes a seeded fault schedule byte-reproducible."""
+    return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
 
 
 @dataclass
@@ -62,6 +71,26 @@ class DispatchStats:
     # subset used (0 when nothing packed this run)
     packed_ladders: int = 0
     subset_width: int = 0
+    # the resilience layer (exec.resilience): faults consumed from the
+    # injector, failed attempts retried, ladders that finished BELOW
+    # their planned dispatch level, ladders that fell all the way to
+    # the modeled floor, quality-gate re-measurements (each one is an
+    # extra honest host_sync_dispatch) + rungs still noisy after them,
+    # and ladders restored from a sweep journal instead of re-executed
+    faults_injected: int = 0
+    retried_dispatches: int = 0
+    degraded_ladders: int = 0
+    modeled_floor_ladders: int = 0
+    noisy_remeasures: int = 0
+    noisy_rungs: int = 0
+    resumed_ladders: int = 0
+
+    def resilience_clean(self) -> bool:
+        """True while no fault, retry, degradation or re-measurement
+        has perturbed the dispatch accounting — the strict
+        one-sync-per-group equalities only hold then."""
+        return not (self.faults_injected or self.retried_dispatches
+                    or self.degraded_ladders or self.noisy_remeasures)
 
 
 class ProgramCache:
@@ -107,10 +136,17 @@ class Dispatcher:
     compile cache); the coordinator facade delegates here."""
 
     def __init__(self, cache_cap: int, samples: int,
-                 compile_cache_dir: Optional[str] = None):
+                 compile_cache_dir: Optional[str] = None,
+                 faults=None):
         assert samples >= 1, samples
         self.cache = ProgramCache(cache_cap)
         self.samples = samples
+        # the fault-injection seam (exec.resilience.FaultInjector or
+        # None): consulted at the compile / dispatch / decode sites of
+        # both dispatch paths.  Deterministic — draws are pure hashes
+        # of (seed, site, phase, attempt) — and duck-typed, so this
+        # module never imports the resilience layer
+        self.faults = faults
         # NOTE: the underlying JAX config is PROCESS-GLOBAL — enabling
         # it here serves every compile in the process (other
         # dispatchers included), and a second dispatcher with a
@@ -126,6 +162,22 @@ class Dispatcher:
         else:
             self.persistent_cache_enabled = False
 
+    def _fault(self, site: str, phase: str, stats: DispatchStats):
+        """Consult the fault-injection seam.  Raising phases
+        ("compile"/"dispatch") raise the injector's fault; the
+        "decode" phase returns the fault kind so the caller can
+        corrupt the decoded timings instead (a corrupted-timing fault
+        must produce bad VALUES — detection is the resilience layer's
+        validator, not an exception)."""
+        if self.faults is None:
+            return None
+        kind = self.faults.check(site, phase)
+        if kind is not None:
+            stats.faults_injected += 1
+            if phase != "decode":
+                raise self.faults.error(kind, site)
+        return kind
+
     # -- the fused/batched/packed path ---------------------------------
 
     def run_planned(self, planned: PlannedDispatch, n_eng: int,
@@ -137,13 +189,16 @@ class Dispatcher:
         ``(med, spread, fenced, aot)`` with ``med``/``spread`` of
         shape (group, n_scen) nanoseconds."""
         key = planned.cache_key(mode, n_eng, activity, self.samples)
+        site = _fault_site(key)
         entry = self.cache.get(key, stats)
         if entry is None:
+            self._fault(site, "compile", stats)
             entry = build_ladder_entry(planned, n_eng, activity,
                                        self.samples, stats)
             self.cache.put(key, entry)
         aot = entry[5]
         _mesh, call, fenced, xf, xi = entry[:5]
+        self._fault(site, "dispatch", stats)
         out = jax.block_until_ready(call(xf, xi))
         stats.host_sync_dispatches += 1
         stats.measure_dispatches += 1
@@ -175,6 +230,8 @@ class Dispatcher:
                  * 1_000_000_000 + (t1[..., 1] - t0[..., 1]))
             med[g] = np.median(d, axis=1)
             spread[g] = d.max(axis=1) - d.min(axis=1)
+        if self._fault(site, "decode", stats):
+            med = -np.abs(med)      # corrupted timings: non-positive
         return med, spread, fenced, aot
 
     # -- the legacy per-rung path ---------------------------------------
@@ -203,6 +260,7 @@ class Dispatcher:
         # the kind joins the cache key: identical role programs from
         # differently-placed pools must not share operands
         key = ("rung", n_eng, activity, kind, roles)
+        site = _fault_site(key)
         entry = self.cache.get(key, stats)
 
         if entry is not None:
@@ -211,6 +269,7 @@ class Dispatcher:
             # no host-side rebuild, no repeated host->device transfer
             _mesh, fn, fenced, xf, xi, aot = entry
         else:
+            self._fault(site, "compile", stats)
             xf, xi = build_rung_operands(roles, n_eng, rows_max)
             branch_fns: List = []
             engine_branch: List[int] = []
@@ -252,6 +311,7 @@ class Dispatcher:
             fn = compiled if compiled is not None else fn
             self.cache.put(key, CompiledProgram(mesh, fn, fenced,
                                                 xf, xi, aot))
+        self._fault(site, "dispatch", stats)
         jax.block_until_ready(fn(xf, xi))          # warm (+ compile
         samples = []                               # when not AOT-built)
         for _ in range(self.samples):
@@ -262,4 +322,6 @@ class Dispatcher:
         stats.measure_dispatches += 1
         stats.spmd_rungs += 1
         elapsed = float(np.median(samples))
+        if self._fault(site, "decode", stats):
+            elapsed = -abs(elapsed)     # corrupted timing: non-positive
         return elapsed, fenced, int(max(samples) - min(samples)), aot

@@ -308,6 +308,74 @@ def pack_engine_subsets(plan: DispatchPlan, *,
     return replace(plan, dispatches=tuple(out))
 
 
+def unpack_dispatch(d: PlannedDispatch) -> PlannedDispatch:
+    """The inverse degradation rewrite of :func:`pack_engine_subsets`:
+    re-plan a width-packed dispatch at the degenerate one-subset
+    geometry (global psum sandwich, one scan wave per stacked ladder).
+
+    The rung rows stay at their truncated natural width — the program
+    builder pads every row back to the mesh with the same idle role
+    the original unpacked plan carried (observer ``iters``), so the
+    rewritten dispatch compiles to exactly the program the group would
+    have run had packing never happened.  The resilience layer uses
+    this as the first rung of the retry-degradation ladder: a packed
+    dispatch that keeps faulting falls back to plain batched stacking.
+    Unpacked and probe dispatches pass through unchanged (probe rows
+    are laid out at full packed width — see :func:`split_probes`)."""
+    if not d.packed or d.probe:
+        return d
+    return replace(d, subset_width=d.ladder_width, n_subsets=1,
+                   waves=d.group, packed=False)
+
+
+def split_ladders(d: PlannedDispatch) -> Tuple[PlannedDispatch, ...]:
+    """Degradation rewrite: one single-ladder dispatch per stacked
+    entry (the ``batched -> fused ladder`` step of the resilience
+    ladder).  Every member of a batched group shares ONE rung table —
+    that is what made them a group — so the split is pure geometry:
+    the same rungs, one entry, one wave.  All the splits also share
+    one program-cache key (entries are not part of the key), so a
+    healthy split re-dispatches without re-tracing.  Packed dispatches
+    unpack first; probe batches go through :func:`split_probes`."""
+    if d.probe:
+        return split_probes(d)
+    base = unpack_dispatch(d)
+    return tuple(replace(base, entries=(e,), waves=1)
+                 for e in base.entries)
+
+
+def split_probes(d: PlannedDispatch) -> Tuple[PlannedDispatch, ...]:
+    """Degradation rewrite for probe batches: one single-probe
+    dispatch per entry.  Probe rows are laid out at FULL packed width
+    (``n_subsets * subset_width`` engines, slot ``g % P`` of wave
+    ``g // P``), so probe ``g``'s roles are a contiguous slice of its
+    wave's row; the single-probe dispatch carries that slice as its
+    one scan row (the builder pads it back to the mesh) behind a
+    global sandwich."""
+    if not d.probe:
+        return split_ladders(d)
+    w = d.subset_width
+    out = []
+    for g, e in enumerate(d.entries):
+        wave, slot = d.member_slot(g)
+        row = d.rungs[wave][slot * w:(slot + 1) * w]
+        out.append(replace(d, entries=(e,), rungs=(tuple(row),),
+                           ladder_width=w, subset_width=w, n_subsets=1,
+                           waves=1, packed=False))
+    return tuple(out)
+
+
+def rung_row(d: PlannedDispatch, k: int, n_eng: int) -> Tuple[Tuple, ...]:
+    """Rung ``k``'s role row padded to the mesh — the per-rung
+    degradation floor hands this straight to ``Dispatcher.run_rung``.
+    Probe dispatches have exactly one row (``n_scen == 1``)."""
+    row = list(d.rungs[0 if d.probe else k])
+    idle = ("i", None, 1, d.rungs[0][0][3])
+    while len(row) < n_eng:
+        row.append(idle)
+    return tuple(row)
+
+
 # ---------------------------------------------------------------------------
 # Probe batching (the worst-case search's planner transform)
 # ---------------------------------------------------------------------------

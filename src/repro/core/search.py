@@ -54,6 +54,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.characterize import AXIS_N, CurveDB, Surface, SurfaceAxis, \
     SurfaceKey
 from repro.core.exec import plan as exec_plan
+from repro.core.exec import resilience as exec_resilience
 from repro.core.exec.assemble import observer_result
 from repro.core.exec.dispatch import DispatchStats
 from repro.core.scenarios import ObserverSpec, ScenarioSpec, StressorSpec, \
@@ -285,12 +286,18 @@ def measure_candidates(coord, spec: SearchSpec, arm: SearchArm, cands,
     """Measure every (n, rw, ir) candidate under every observer strategy
     with ONE host-synchronous batched dispatch
     (:func:`repro.core.exec.plan.probe_batch`).  Returns
-    ``({(cand_index, obs_strat): (bw_gbps, lat_ns)}, fenced)``.
+    ``({(cand_index, obs_strat): (bw_gbps, lat_ns) | None}, fenced)``
+    — a ``None`` value is a DEAD probe: its dispatch exhausted the
+    resilience ladder (see :mod:`repro.core.exec.resilience`) and the
+    caller must treat the arm as unplayed rather than fold a modeled
+    number into the acquisition state.
 
     This is the only execution path of the search — the equal-budget
     fixed-grid baseline in ``benchmarks/worstcase_search.py`` measures
     its grid through the same call, so search and baseline pay the
-    same per-probe cost."""
+    same per-probe cost.  On a clean dispatch (no faults, retries,
+    degradations or re-measures) the 1-host-sync accounting is still
+    asserted exactly."""
     stats = stats if stats is not None else DispatchStats()
     sp = spec.stress_pool or spec.pool
     n_eng = coord._spmd_engines()
@@ -303,20 +310,35 @@ def measure_candidates(coord, spec: SearchSpec, arm: SearchArm, cands,
     planned = exec_plan.probe_batch(probes, n_eng, coord.pools,
                                     coord.platform.n_engines)
     before = stats.host_sync_dispatches
-    med, _spread, fenced, _aot = coord._dispatcher.run_planned(
-        planned, n_eng, coord._resolved_activity(), "batched", stats)
-    if stats.host_sync_dispatches != before + 1:
+    dirty_before = (stats.faults_injected + stats.retried_dispatches
+                    + stats.degraded_ladders + stats.noisy_remeasures)
+    outcomes = exec_resilience.run_group(
+        coord._dispatcher, planned, n_eng=n_eng,
+        activity=coord._resolved_activity(), mode="batched",
+        stats=stats, policy=getattr(coord, "retry_policy", None),
+        gate=getattr(coord, "quality_gate", None))
+    dirty = (stats.faults_injected + stats.retried_dispatches
+             + stats.degraded_ladders + stats.noisy_remeasures
+             - dirty_before)
+    if not dirty and stats.host_sync_dispatches != before + 1:
         raise AssertionError(
-            f"probe batch took {stats.host_sync_dispatches - before} "
-            f"host syncs, expected exactly 1")
-    out: Dict[Tuple[int, str], Tuple[float, float]] = {}
+            f"clean probe batch took "
+            f"{stats.host_sync_dispatches - before} host syncs, "
+            f"expected exactly 1")
+    out: Dict[Tuple[int, str], Optional[Tuple[float, float]]] = {}
+    fenced = True
     n_obs = len(spec.obs_strategies)
-    for g, entry in enumerate(planned.entries):
-        res = observer_result(entry.observer, entry.buffer_bytes,
-                              entry.spec.iters, float(max(med[g, 0], 1.0)))
+    for g, oc in enumerate(outcomes):
         ci, oi = divmod(g, n_obs)
+        m = oc.med[0]
+        if m is None:                   # probe died: modeled floor
+            out[(ci, spec.obs_strategies[oi])] = None
+            continue
+        res = observer_result(oc.entry.observer, oc.entry.buffer_bytes,
+                              oc.entry.spec.iters, float(max(m, 1.0)))
         out[(ci, spec.obs_strategies[oi])] = (res.bandwidth_gbps,
                                               res.latency_ns)
+        fenced = fenced and oc.fenced
     return out, fenced
 
 
@@ -376,9 +398,14 @@ def worst_case_search(coord, spec: SearchSpec = SearchSpec(),
     arm_value = [0.0] * len(spec.arms)
 
     for it in range(spec.iterations):
-        # -- bandit: pick the arm (play each once, then UCB) ------------
-        if it < len(spec.arms):
-            ai = it
+        # -- bandit: pick the arm (play each once, then UCB).  An arm
+        # whose whole probe batch DIED never got a play recorded, so
+        # the unplayed-first rule naturally replays it on the next
+        # iteration instead of dividing by arm_plays == 0.
+        unplayed = [i for i in range(len(spec.arms))
+                    if arm_plays[i] == 0]
+        if unplayed:
+            ai = unplayed[0]
         else:
             total = sum(arm_plays)
             ai = max(range(len(spec.arms)),
@@ -413,6 +440,7 @@ def worst_case_search(coord, spec: SearchSpec = SearchSpec(),
         chosen = scored[:spec.batch]
 
         # -- ONE batched dispatch for the whole iteration ---------------
+        sync_before = stats.host_sync_dispatches
         if execute:
             results, fenced = measure_candidates(
                 coord, spec, arm, [(n, rw, ir)
@@ -425,11 +453,20 @@ def worst_case_search(coord, spec: SearchSpec = SearchSpec(),
                        in enumerate(chosen) for o in spec.obs_strategies}
 
         # -- fold measurements back into the acquisition state ----------
+        # (a dead probe — resilience ladder exhausted — contributes
+        # nothing: folding its modeled floor would teach the bandit
+        # the corner is harmless when in fact it is unmeasured)
         gaps: List[float] = []
         reward = 0.0
+        alive = dead = 0
         for ci, (_acq, n, rw, ir, vec, model) in enumerate(chosen):
             for o in spec.obs_strategies:
-                bw, lat = results[(ci, o)]
+                r = results[(ci, o)]
+                if r is None:
+                    dead += 1
+                    continue
+                bw, lat = r
+                alive += 1
                 mb = model[o][2]
                 meas = _badness(o, bw, lat, edges[o])
                 ratio = meas / max(mb, 1e-12)
@@ -442,8 +479,9 @@ def worst_case_search(coord, spec: SearchSpec = SearchSpec(),
                     n_stressors=n, rw_ratio=rw, inject_rate=ir,
                     obs_strat=o, bandwidth_gbps=bw, latency_ns=lat,
                     model_badness=mb, measured_badness=meas))
-        arm_plays[ai] += 1
-        arm_value[ai] += reward
+        if alive:
+            arm_plays[ai] += 1
+            arm_value[ai] += reward
         trace.append({
             "iteration": it, "arm": arm.label(),
             "candidates": [[n, rw, ir]
@@ -451,11 +489,14 @@ def worst_case_search(coord, spec: SearchSpec = SearchSpec(),
             "acquisition": [s[0] for s in chosen],
             "reward": reward,
             "model_gap": (sum(gaps) / len(gaps)) if gaps else 0.0,
-            "host_sync_dispatches": 1 if execute else 0,
+            "host_sync_dispatches": (stats.host_sync_dispatches
+                                     - sync_before if execute else 0),
+            "dead_probes": dead,
         })
 
     envelope = _envelope(spec, sp, points, trace, executed=execute)
-    if execute and stats.host_sync_dispatches != spec.iterations:
+    if (execute and stats.resilience_clean()
+            and stats.host_sync_dispatches != spec.iterations):
         raise AssertionError(
             f"search ran {stats.host_sync_dispatches} host syncs for "
             f"{spec.iterations} iterations — expected exactly one each")

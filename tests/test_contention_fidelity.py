@@ -421,11 +421,14 @@ def test_fused_dispatch_accounting():
     assert st.n_ladders == 2
     assert st.spmd_rungs == 2 * depth
     assert st.measure_dispatches == st.n_ladders          # 1 per ladder
-    assert st.host_sync_dispatches == st.n_ladders
+    # quality-gate re-measures (rare: a real noise event during the
+    # run) each add one honest host sync on top of the 1-per-ladder
+    assert st.host_sync_dispatches == st.n_ladders + st.noisy_remeasures
     for run in fused.runs:
         ex = run.execution
         assert ex["timing_source"] == "device"
-        assert ex["dispatches"] == 1
+        assert ex["dispatches"] == 1 + ex["remeasures"]
+        assert ex["attempts"] == 1 and ex["degraded_from"] is None
         assert ex["samples"] == 3
         assert len(ex["rung_time_spread_ns"]) == depth
         assert all(s >= 0 for s in ex["rung_time_spread_ns"])
@@ -516,7 +519,8 @@ def test_batched_sweep_equivalence_and_accounting():
     st = bat.stats
     assert st.n_ladders == 4
     assert st.spmd_groups == 2
-    assert st.host_sync_dispatches == 2        # one per SIGNATURE
+    # one per SIGNATURE (+ any rare quality-gate re-measures)
+    assert st.host_sync_dispatches == 2 + st.noisy_remeasures
     assert st.measure_dispatches == 2
     assert st.spmd_rungs == 4 * depth          # every rung executed
     assert st.programs_built == 2              # one program per group
@@ -525,14 +529,15 @@ def test_batched_sweep_equivalence_and_accounting():
         assert ex["batched"] is True
         assert ex["group_size"] == 2
         assert ex["timing_source"] == "device"
-        assert ex["dispatches"] == 1
+        assert ex["dispatches"] == 1 + ex["remeasures"]
         assert ex["fenced"]
         assert isinstance(ex["aot"], bool)
 
     # batching off: same coordinator API, one fused dispatch per ladder
     unb = CoreCoordinator(backend="spmd").run_matrix(specs,
                                                      batched=False)
-    assert unb.stats.host_sync_dispatches == 4   # one per LADDER
+    assert unb.stats.host_sync_dispatches == \
+        4 + unb.stats.noisy_remeasures           # one per LADDER
     assert unb.stats.spmd_groups == 0
     assert [r.key for r in bat.runs] == [r.key for r in unb.runs]
     for rb, ru in zip(bat.runs, unb.runs):
@@ -585,7 +590,8 @@ def test_packed_sweep_accounting_and_equivalence():
     st = res.stats
     assert st.n_ladders == 4
     assert st.spmd_groups == 1                 # one signature
-    assert st.host_sync_dispatches == 1        # ...one dispatch
+    assert st.host_sync_dispatches == \
+        1 + st.noisy_remeasures                # ...one dispatch
     assert st.programs_built == 1
     assert st.spmd_rungs == 4 * depth          # every rung executed
     if n_subsets > 1:
@@ -611,7 +617,8 @@ def test_packed_sweep_accounting_and_equivalence():
     off = CoreCoordinator(backend="spmd", spmd_pack="off")
     unp = off.run_matrix(specs)
     assert unp.stats.packed_ladders == 0
-    assert unp.stats.host_sync_dispatches == 1
+    assert unp.stats.host_sync_dispatches == \
+        1 + unp.stats.noisy_remeasures
     assert [r.key for r in res.runs] == [r.key for r in unp.runs]
     for rp, ru in zip(res.runs, unp.runs):
         assert ru.execution["packed"] is False
