@@ -11,8 +11,8 @@ from benchmarks import (fig4_homogeneous_bw, fig5_homogeneous_lat,
                         fig6_7_heterogeneous, fig8_9_scratchpad,
                         fig10_validation, fig11_13_partition,
                         fig14_applications, resilience_bench, roofline,
-                        scenario_matrix, spmd_ladder, surface_sweep,
-                        tab2_3_mlp, worstcase_search)
+                        scenario_matrix, serve_bench, spmd_ladder,
+                        surface_sweep, tab2_3_mlp, worstcase_search)
 
 SUITES = [
     ("fig4_homogeneous_bw", fig4_homogeneous_bw.main),
@@ -28,6 +28,7 @@ SUITES = [
     ("surface_sweep", surface_sweep.main),
     ("worstcase_search", worstcase_search.main),
     ("resilience_bench", resilience_bench.main),
+    ("serve_bench", serve_bench.main),
     ("roofline", roofline.main),
 ]
 

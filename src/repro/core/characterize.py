@@ -838,6 +838,103 @@ def surfacedb_from_result(result: MatrixResult, platform: str, *,
     return db
 
 
+# ---------------------------------------------------------------------------
+# Targeted-cell online refresh (serving-time re-characterization)
+# ---------------------------------------------------------------------------
+
+#: qualifier under which online re-characterization stores refreshed
+#: surfaces (the serving watchdog's probe sweeps) — consumers opt in
+#: via ``db.query(..., qualifier=ONLINE_QUALIFIER)``, which prefers the
+#: online surface at every resolution-ladder step and falls through to
+#: the offline one when no refresh has happened yet.
+ONLINE_QUALIFIER = "online"
+
+
+def refresh_surface_cells(
+    coord: CoreCoordinator,
+    db: CurveDB,
+    *,
+    pools: Iterable[str],
+    rw_ratio: float,
+    inject_rate: float,
+    stress_pools: Optional[Iterable[str]] = None,
+    obs_strategies: Tuple[str, ...] = ("r", "l"),
+    buffer_bytes: int = 64 << 10,
+    iters: int = 50,
+    max_stressors: Optional[int] = None,
+    qualifier: str = ONLINE_QUALIFIER,
+    drift: Optional[Dict[str, Any]] = None,
+    batched: bool = True,
+    journal=None,
+) -> Tuple[List[SurfaceKey], Dict[str, Any]]:
+    """Re-characterize ONE surface grid cell at live coordinates.
+
+    Instead of the full rf x dc grid, this sweeps only the
+    ``(rw_ratio, inject_rate)`` cell the serving engine is actually
+    operating at — a single-cell probe sweep small enough to run in
+    the background of a serving loop.  Each refreshed surface is
+    stored *into* ``db`` under ``qualifier`` (default
+    :data:`ONLINE_QUALIFIER`) as a single-point rw/ir surface that
+    REPLACES any previous online surface for the same pairing: the
+    online qualifier always reflects the latest observed regime, it
+    is not a merged history (the offline full-grid surface stays
+    untouched underneath it).
+
+    Provenance: each refreshed surface records ``provenance["online"]``
+    with the refresh ordinal, the caller's ``drift`` evidence
+    (observed-vs-predicted gap), and the sweep's resilience stats
+    (faults injected, degradations, noisy rungs ...) so a surface that
+    survived a chaotic probe sweep is distinguishable from a clean one.
+
+    ``journal=<path>`` (spmd backend only) makes the probe sweep
+    crash-resumable through :class:`repro.core.exec.SweepJournal` —
+    a serving-engine restart resumes the sweep value-identically
+    instead of restarting it.
+
+    Returns ``(refreshed_keys, stats_meta)``.
+    """
+    rw = float(rw_ratio)
+    ir = float(inject_rate)
+    pool_names = list(pools)
+    s_pools = list(stress_pools) if stress_pools is not None else pool_names
+
+    specs: List[ScenarioSpec] = []
+    for op in pool_names:
+        cap = coord.pools.pool(op).node.size_bytes
+        nb_o = min(buffer_bytes, cap // 2)
+        for sp in s_pools:
+            s_cap = coord.pools.pool(sp).node.size_bytes
+            nb = min(nb_o, s_cap // 2)
+            specs.extend(surface_matrix(
+                pools=[op], stress_pools=[sp], buffer_bytes=nb,
+                obs_strategies=obs_strategies, rw_ratios=(rw,),
+                inject_rates=(ir,), iters=iters,
+                max_stressors=max_stressors, name_prefix="online."))
+    result = coord.run_matrix(specs, batched=batched, journal=journal)
+    fresh = surfacedb_from_result(result, coord.platform.name,
+                                  rw_ratios=(rw,), inject_rates=(ir,),
+                                  backend=coord.backend)
+    stats = _stats_meta(result, coord.backend)
+
+    refreshed: List[SurfaceKey] = []
+    for key, surf in fresh.surfaces.items():
+        qkey = SurfaceKey(key.obs_pool, key.obs_strat, key.stress_pool,
+                          key.stress_strat, tag=key.tag,
+                          qualifier=qualifier)
+        prev = db.surfaces.get(qkey)
+        n_prev = (prev.provenance.get("online", {}).get("refreshes", 0)
+                  if prev is not None else 0)
+        surf.provenance["online"] = {
+            "refreshes": n_prev + 1,
+            "coord": {AXIS_RW: rw, AXIS_IR: ir},
+            "drift": dict(drift or {}),
+            "sweep": stats,
+        }
+        db.surfaces[qkey] = surf
+        refreshed.append(qkey)
+    return refreshed, stats
+
+
 def mlp_table(db: CurveDB, platform: Platform) -> str:
     """Tables II/III, for every characterized module."""
     lines = ["pool      pairing        lat(ns/Tx)  BW(Tx/ns)   MLP"]

@@ -116,14 +116,21 @@ class PlacementAdvisor:
     mix does to it at the given stressor count, whatever mix the
     contention spec nominally expects.  Decisions fall back to the
     mean surface (flagged extrapolated) when no envelope was
-    characterized for a pool."""
+    characterized for a pool.
+
+    ``qualifier`` selects a variant surface for every cost query —
+    serving passes :data:`repro.core.characterize.ONLINE_QUALIFIER` so
+    that, once the contention watchdog has refreshed a cell, the
+    re-advise runs against the LIVE measurement and falls through to
+    the offline surface where no refresh has happened."""
 
     def __init__(self, db: CurveDB, platform: Platform,
                  pools: Optional[Sequence[str]] = None,
-                 pessimistic: bool = False):
+                 pessimistic: bool = False, qualifier: str = ""):
         self.db = db
         self.platform = platform
         self.pessimistic = pessimistic
+        self.qualifier = qualifier
         self.pools = list(pools) if pools is not None else \
             db.observer_pools()
 
@@ -136,7 +143,8 @@ class PlacementAdvisor:
                   stress_strat=contention.stress_strategy,
                   shape_tag=contention.stress_shape_tag,
                   rw_ratio=contention.rw_ratio,
-                  inject_rate=contention.inject_rate)
+                  inject_rate=contention.inject_rate,
+                  qualifier=self.qualifier)
         if self.pessimistic:
             # the envelope is 1-axis (n_stressors): the adversarial
             # search already minimized/maximized over the mix, duty and
@@ -221,6 +229,65 @@ class PlacementAdvisor:
                     f"object {obj.name} ({obj.size_bytes}B) fits no pool "
                     f"(free: { {p: c for p, c in caps.items()} })")
         return plan
+
+    # -- the online re-advise (migration-guarded serving path) ---------------
+    def readvise(self, objects: Sequence[MemObject],
+                 contention: ContentionSpec,
+                 current: Dict[str, str], *,
+                 capacities: Optional[Dict[str, int]] = None,
+                 min_gain_frac: float = 0.1) -> "ReadviseDecision":
+        """Re-run the placement solve against the CURRENT placement
+        with hysteresis: an object only *moves* when the fresh plan
+        puts it elsewhere AND the predicted per-step gain of the move
+        is at least ``min_gain_frac`` of its current predicted cost.
+        Marginal flips are ``held`` (with the reason), so surface noise
+        around a decision boundary cannot flap live caches between
+        pools.  The solver itself is unchanged — this is a pure
+        post-filter over :meth:`advise`."""
+        plan = self.advise(objects, contention, capacities)
+        moves: Dict[str, Tuple[str, str]] = {}
+        held: Dict[str, str] = {}
+        gain_ns = 0.0
+        cur_total = 0.0
+        for obj in objects:
+            d = plan.decisions[obj.name]
+            cur = current.get(obj.name)
+            if cur is None:
+                continue            # not currently placed: nothing to move
+            cur_cost = d.alternatives.get(cur)
+            if cur_cost is None:
+                # current pool wasn't even a candidate (capacity lost?):
+                # that is a forced move, not a hysteresis question
+                moves[obj.name] = (cur, d.pool)
+                continue
+            cur_total += cur_cost
+            if d.pool == cur:
+                continue
+            gain = cur_cost - d.predicted_step_ns
+            frac = gain / max(cur_cost, 1e-9)
+            if frac < min_gain_frac:
+                held[obj.name] = (
+                    f"predicted gain {frac:.1%} below the "
+                    f"{min_gain_frac:.0%} hysteresis floor "
+                    f"({cur} {cur_cost:.0f}ns -> {d.pool} "
+                    f"{d.predicted_step_ns:.0f}ns)")
+                continue
+            moves[obj.name] = (cur, d.pool)
+            gain_ns += gain
+        return ReadviseDecision(
+            plan=plan, moves=moves, held=held,
+            predicted_gain_ns=gain_ns,
+            predicted_gain_frac=gain_ns / max(cur_total, 1e-9))
+
+
+@dataclass
+class ReadviseDecision:
+    """The hysteresis-filtered outcome of one re-advise pass."""
+    plan: PlacementPlan
+    moves: Dict[str, Tuple[str, str]]   # name -> (from_pool, to_pool)
+    held: Dict[str, str]                # name -> why the flip was held
+    predicted_gain_ns: float
+    predicted_gain_frac: float
 
 
 # ---------------------------------------------------------------------------

@@ -37,8 +37,8 @@ from repro.data.pipeline import DataLoader
 from repro.launch.mesh import describe, make_host_mesh, mesh_from_config
 from repro.models import lm
 from repro.parallel.sharding import make_rules
-from repro.runtime.fault_tolerance import (InjectedFault, ResilientLoop,
-                                           StragglerMonitor)
+from repro.runtime.fault_tolerance import (ResilientLoop, StragglerMonitor,
+                                           drill_at)
 from repro.train import step as step_mod
 
 
@@ -139,12 +139,6 @@ def main(argv=None) -> int:
 
     # --- resilient loop -------------------------------------------------------
     ckpt = CheckpointManager(args.ckpt_dir, keep=tcfg.keep_checkpoints)
-    fault_state = {"fired": False}
-
-    def fault_hook(step: int):
-        if step == args.inject_fault_at and not fault_state["fired"]:
-            fault_state["fired"] = True
-            raise InjectedFault(f"drill at step {step}")
 
     t0 = time.time()
     metrics_log = []
@@ -156,7 +150,9 @@ def main(argv=None) -> int:
     loop = ResilientLoop(
         logging_step, loader.device_batch, ckpt,
         checkpoint_every=tcfg.checkpoint_every,
-        fault_hook=fault_hook if args.inject_fault_at >= 0 else None,
+        faults=None,  # resolve REPRO_FAULT_SPEC like the sweep dispatcher
+        fault_hook=(drill_at(args.inject_fault_at)
+                    if args.inject_fault_at >= 0 else None),
         monitor=StragglerMonitor())
     result = loop.run(state, args.steps)
 

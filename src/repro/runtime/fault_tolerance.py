@@ -4,12 +4,19 @@ Designed for the 1000-node regime where *something is always failing*:
 
 * :class:`ResilientLoop` — wraps the train step; on a step failure it
   restores the last checkpoint, rebuilds the (restart-safe) data stream
-  at the restored step, and continues.  Fault injection hooks let tests
-  exercise the real recovery path.
-* :class:`StragglerMonitor` — per-step wall-time EWMA + deviation; a step
-  slower than ``threshold x`` the running median is flagged.  On a real
-  fleet the action is re-scheduling/evicting the slow host; here the
-  monitor records events and (optionally) triggers an elastic re-mesh.
+  at the restored step, and continues.  Fault-injection drills go
+  through the SHARED seam (:class:`repro.core.exec.resilience.FaultSpec`
+  — one spelling, one env var, one deterministic hash schedule): pass
+  ``faults="runtime=0.1,seed=3"`` / a :class:`FaultSpec`, or let the
+  default resolution read ``REPRO_FAULT_SPEC`` exactly like the sweep
+  dispatcher.  The legacy ``fault_hook`` stays as an escape hatch for
+  step-pinned drills (see :func:`drill_at`).
+* :class:`StragglerMonitor` — per-step wall-time EWMA + rolling median;
+  a step slower than ``threshold x`` the running median is flagged.  On
+  a real fleet the action is re-scheduling/evicting the slow host; here
+  the monitor records events.  The EWMA/median machinery is shared: the
+  serving-time contention watchdog (:mod:`repro.serve.monitor`) builds
+  its hysteresis band on this class.
 * :func:`elastic_remesh` — moves a TrainState onto a *different* mesh
   (fewer/more devices) via the mesh-agnostic checkpoint contract: gather
   to host, re-device_put under the new shardings.  This is the node-loss
@@ -25,6 +32,12 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core.exec.resilience import (FaultInjector, FaultSpec,
+                                        InjectedFault, resolve_faults)
+
+__all__ = ["InjectedFault", "FaultSpec", "LoopResult", "ResilientLoop",
+           "StragglerEvent", "StragglerMonitor", "drill_at",
+           "elastic_remesh"]
 
 
 @dataclass
@@ -35,18 +48,44 @@ class StragglerEvent:
 
 
 class StragglerMonitor:
-    def __init__(self, threshold: float = 3.0, window: int = 32):
+    """Per-step wall-time tracker: rolling median over ``window`` steps
+    plus an exponentially-weighted moving average (``ewma_alpha``).
+    :meth:`record` flags a step slower than ``threshold x`` the running
+    median; :meth:`median` / ``ewma_s`` expose the smoothed state for
+    composition (the serve watchdog's deviation test runs on them)."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 32,
+                 ewma_alpha: float = 0.2):
         self.threshold = threshold
         self.window = window
+        self.ewma_alpha = ewma_alpha
+        self.ewma_s: Optional[float] = None
         self.times: List[float] = []
         self.events: List[StragglerEvent] = []
 
+    def median(self, exclude_last: bool = False) -> Optional[float]:
+        """Rolling median of the last ``window`` recorded steps."""
+        hist = self.times[-self.window:]
+        if exclude_last:
+            hist = hist[:-1]
+        if not hist:
+            return None
+        return float(np.median(hist))
+
+    def reset(self) -> None:
+        """Forget the timing history (events are kept) — called when
+        the regime legitimately changed (re-mesh, cache migration)."""
+        self.times.clear()
+        self.ewma_s = None
+
     def record(self, step: int, wall_s: float) -> Optional[StragglerEvent]:
         self.times.append(wall_s)
-        hist = self.times[-self.window:]
-        if len(hist) < 5:
+        a = self.ewma_alpha
+        self.ewma_s = (wall_s if self.ewma_s is None
+                       else a * wall_s + (1.0 - a) * self.ewma_s)
+        if len(self.times[-self.window:]) < 5:
             return None
-        med = float(np.median(hist[:-1]))
+        med = self.median(exclude_last=True)
         if wall_s > self.threshold * med:
             ev = StragglerEvent(step, wall_s, med)
             self.events.append(ev)
@@ -54,8 +93,18 @@ class StragglerMonitor:
         return None
 
 
-class InjectedFault(RuntimeError):
-    """Raised by fault-injection hooks (tests / chaos drills)."""
+def drill_at(at_step: int) -> Callable[[int], None]:
+    """A step-pinned one-shot drill hook in the shared fault spelling:
+    raises :class:`InjectedFault("runtime_error", ...)` the first time
+    the loop reaches ``at_step`` (the ``--inject-fault-at`` CLI path)."""
+    fired = {"done": False}
+
+    def hook(step: int) -> None:
+        if step == at_step and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("runtime_error", f"train-drill-{step}")
+
+    return hook
 
 
 @dataclass
@@ -63,6 +112,7 @@ class LoopResult:
     final_step: int
     metrics_history: List[Dict[str, float]] = field(default_factory=list)
     restarts: int = 0
+    faults_injected: int = 0
     straggler_events: List[StragglerEvent] = field(default_factory=list)
 
 
@@ -72,11 +122,20 @@ class ResilientLoop:
     ``step_fn(state, batch) -> (state, metrics)`` must be pure (jit'd);
     ``batch_fn(step) -> batch`` must be restart-safe (pure function of the
     step index — see data.pipeline.SyntheticSource).
+
+    ``faults`` resolves exactly like the sweep coordinator's
+    (:func:`repro.core.exec.resilience.resolve_faults`): ``None`` reads
+    ``REPRO_FAULT_SPEC``, ``False``/``"off"`` pins injection off, a
+    spec string parses, a :class:`FaultSpec` passes through.  Each step
+    is one injection site (``train-step-<n>``), so a restart that
+    replays the step sees a FRESH deterministic draw — the same
+    attempt-counter discipline the dispatcher uses.
     """
 
     def __init__(self, step_fn: Callable, batch_fn: Callable,
                  ckpt: CheckpointManager, *, checkpoint_every: int = 100,
                  max_restarts: int = 3,
+                 faults=False,
                  fault_hook: Optional[Callable[[int], None]] = None,
                  monitor: Optional[StragglerMonitor] = None,
                  async_checkpoint: bool = True):
@@ -85,9 +144,20 @@ class ResilientLoop:
         self.ckpt = ckpt
         self.checkpoint_every = checkpoint_every
         self.max_restarts = max_restarts
+        self.fault_spec = resolve_faults(faults)
+        self._injector: Optional[FaultInjector] = (
+            self.fault_spec.injector() if self.fault_spec else None)
         self.fault_hook = fault_hook
         self.monitor = monitor or StragglerMonitor()
         self.async_checkpoint = async_checkpoint
+
+    def _maybe_inject(self, step: int) -> None:
+        if self._injector is not None:
+            kind = self._injector.check(f"train-step-{step}", "dispatch")
+            if kind is not None:
+                raise self._injector.error(kind, f"train-step-{step}")
+        if self.fault_hook is not None:
+            self.fault_hook(step)
 
     def run(self, state, n_steps: int, start_step: int = 0) -> LoopResult:
         result = LoopResult(final_step=start_step)
@@ -95,8 +165,7 @@ class ResilientLoop:
         restarts = 0
         while step < n_steps:
             try:
-                if self.fault_hook is not None:
-                    self.fault_hook(step)
+                self._maybe_inject(step)
                 batch = self.batch_fn(step)
                 t0 = time.perf_counter()
                 state, metrics = self.step_fn(state, batch)
@@ -117,6 +186,7 @@ class ResilientLoop:
                     else:
                         self.ckpt.save(state, step)
             except InjectedFault:
+                result.faults_injected += 1
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise

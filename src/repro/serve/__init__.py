@@ -1,0 +1,16 @@
+"""Serving: the placed-KV engine + the online drift-monitoring loop."""
+from repro.serve.engine import (GenerateResult, ServeEngine, cache_bytes,
+                                choose_kv_pool, decode_rw_mix,
+                                pool_capacities)
+from repro.serve.monitor import (ContentionWatchdog, DriftEvent,
+                                 GuardConfig, MigrationGuard,
+                                 MigrationRecord, MonitorAction,
+                                 OnlineRecharacterizer, RefreshResult,
+                                 ServeMonitor, WatchdogConfig)
+
+__all__ = ["ContentionWatchdog", "DriftEvent", "GenerateResult",
+           "GuardConfig", "MigrationGuard", "MigrationRecord",
+           "MonitorAction", "OnlineRecharacterizer", "RefreshResult",
+           "ServeEngine", "ServeMonitor", "WatchdogConfig",
+           "cache_bytes", "choose_kv_pool", "decode_rw_mix",
+           "pool_capacities"]

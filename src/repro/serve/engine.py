@@ -7,12 +7,21 @@ when HBM capacity is the binding constraint — the long-context regime),
 and materialises it through the chosen upool.  This is the paper's
 Fig. 14 loop (characterize -> place -> run) applied to an inference
 server.
+
+The loop also closes *online*: pass a
+:class:`repro.serve.monitor.ServeMonitor` and the engine times every
+decode step on a monitored python loop — the watchdog detects contention
+drift against the surface's expectation, a resilient background probe
+sweep refreshes the drifted cells under ``qualifier="online"``, and the
+migration guard moves the live caches (with hysteresis + rollback) when
+the refreshed surface flips the advisor's decision.  Every drift event,
+probe sweep, migration and rollback lands in :class:`GenerateResult`.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,10 +57,39 @@ def decode_rw_mix(batch: int, max_len: int) -> float:
     return reads / (reads + 1.0)
 
 
+def pool_capacities(advisor, *, pool_mgr=None,
+                    hbm_free_bytes: Optional[int] = None,
+                    ) -> Optional[Dict[str, int]]:
+    """Candidate-pool capacities for the KV placement solve.
+
+    Live accounting first: a pool manager knows what is *actually*
+    free (``pool.available`` = capacity - allocated), so a half-full
+    HBM constrains the solve instead of its nameplate size.  Without a
+    manager the advisor's own platform capacities apply (the advise()
+    default), overridden per-pool by ``hbm_free_bytes`` — no pool's
+    capacity is ever invented (the seed hard-coded ``host: 256 GiB``).
+    """
+    caps: Dict[str, int] = {}
+    if pool_mgr is not None:
+        for p in advisor.pools:
+            try:
+                caps[p] = pool_mgr.pool(p).available
+            except Exception:
+                continue            # pool not backed on this platform
+    elif hbm_free_bytes is not None:
+        caps = {p: advisor.platform.memories[p].size_bytes
+                for p in advisor.pools if p in advisor.platform.memories}
+    if hbm_free_bytes is not None and ("hbm" in caps or not caps):
+        caps["hbm"] = hbm_free_bytes
+    return caps or None
+
+
 def choose_kv_pool(cfg: ModelConfig, batch: int, max_len: int, *,
                    advisor=None, scfg: Optional[ServeConfig] = None,
+                   pool_mgr=None,
                    hbm_free_bytes: Optional[int] = None,
-                   rw_mix: Optional[float] = None) -> str:
+                   rw_mix: Optional[float] = None,
+                   inject_rate: Optional[float] = None) -> str:
     scfg = scfg or ServeConfig()
     if scfg.kv_placement != "auto":
         return scfg.kv_placement
@@ -60,16 +98,18 @@ def choose_kv_pool(cfg: ModelConfig, batch: int, max_len: int, *,
     from repro.core.placement import ContentionSpec, kv_cache_object
     nbytes = cache_bytes(cfg, batch, max_len)
     obj = kv_cache_object("kv", nbytes, bytes_read_per_token=float(nbytes))
-    caps = None
-    if hbm_free_bytes is not None:
-        caps = {"hbm": hbm_free_bytes, "host": 256 << 30}
+    caps = pool_capacities(advisor, pool_mgr=pool_mgr,
+                           hbm_free_bytes=hbm_free_bytes)
     # advise at the engine's observed decode traffic coordinates: the
     # surface interpolates its rw_ratio axis at the cache's actual
-    # read/write mix instead of a letter-keyed worst case
+    # read/write mix (and its inject_rate axis at the engine's observed
+    # decode duty cycle) instead of a letter-keyed worst case
     if rw_mix is None:
         rw_mix = decode_rw_mix(batch, max_len)
-    plan = advisor.advise([obj], ContentionSpec(0, rw_ratio=rw_mix),
-                          capacities=caps)
+    plan = advisor.advise(
+        [obj], ContentionSpec(0, rw_ratio=rw_mix,
+                              inject_rate=inject_rate),
+        capacities=caps)
     return plan.pool_of("kv")
 
 
@@ -123,48 +163,105 @@ def sample_token(logits, key, temperature: float = 0.0):
 class GenerateResult:
     tokens: Any                 # (B, T)
     steps: int
-    kv_pool: str
+    kv_pool: str                # the pool the caches ENDED in
+    # online-loop provenance (monitored decode only; empty otherwise)
+    drift_events: List[Any] = field(default_factory=list)
+    migrations: List[Any] = field(default_factory=list)
+    probe_sweeps: int = 0
 
 
 class ServeEngine:
-    """Batched prefill+decode over a placed KV cache."""
+    """Batched prefill+decode over a placed KV cache.
+
+    ``monitor`` (a :class:`repro.serve.monitor.ServeMonitor`) switches
+    ``generate`` onto the monitored decode loop: per-step wall timing
+    feeds the contention watchdog and the engine applies the monitor's
+    migrate/rollback actions to the live caches between steps.  The
+    unmonitored path keeps the fused ``lax.scan`` decode loop."""
 
     def __init__(self, cfg: ModelConfig, params: Params,
                  rules: ShardingRules, scfg: Optional[ServeConfig] = None,
-                 advisor=None, pool_mgr=None):
+                 advisor=None, pool_mgr=None, monitor=None):
         self.cfg = cfg
         self.params = params
         self.rules = rules
         self.scfg = scfg or ServeConfig()
         self.advisor = advisor
         self.pool_mgr = pool_mgr
+        self.monitor = monitor
         self._decode = jax.jit(make_decode_step(cfg, rules),
                                donate_argnums=(1,))
+        # jitted prefill per max_len: repeated generate calls at the
+        # same shape reuse ONE trace (the seed re-jitted every call)
+        self._prefill_cache: Dict[int, Callable] = {}
+        # observed decode duty cycle (EWMA across generate calls): the
+        # inject_rate coordinate the engine feeds back into placement
+        self._duty: Optional[float] = None
 
+    # -- jit caches ----------------------------------------------------------
+    def _prefill(self, max_len: int) -> Callable:
+        fn = self._prefill_cache.get(max_len)
+        if fn is None:
+            fn = jax.jit(make_prefill_step(self.cfg, self.rules,
+                                           max_len=max_len))
+            self._prefill_cache[max_len] = fn
+        return fn
+
+    # -- placement -----------------------------------------------------------
     def _place_caches(self, caches: Params, pool_name: str) -> Params:
-        if self.pool_mgr is None or pool_name == "hbm":
+        """Materialise the cache pytree in ``pool_name`` via its upool.
+        With a pool manager every pool goes through ``upool.place`` —
+        including "hbm", so a rollback moves host-placed arrays BACK to
+        device memory instead of silently leaving them put."""
+        if self.pool_mgr is None:
             return caches
-        upool = self.pool_mgr.upool(pool_name)
+        try:
+            upool = self.pool_mgr.upool(pool_name)
+        except Exception:
+            return caches           # pool not backed on this platform
         return upool.place(caches)
 
+    def duty_cycle(self) -> Optional[float]:
+        return self._duty
+
+    def _observe_duty(self, busy_s: float, wall_s: float) -> None:
+        if wall_s <= 0.0:
+            return
+        d = min(1.0, busy_s / wall_s)
+        self._duty = d if self._duty is None else 0.2 * d + 0.8 * self._duty
+
+    # -- generation ----------------------------------------------------------
     def generate(self, tokens, *, max_new_tokens: int = 32,
                  temperature: float = 0.0, seed: int = 0,
-                 frontend=None) -> GenerateResult:
+                 frontend=None,
+                 on_step: Optional[Callable[[int, str], None]] = None,
+                 ) -> GenerateResult:
         cfg, rules = self.cfg, self.rules
         b, s = tokens.shape
         max_len = s + max_new_tokens
+        rw_mix = decode_rw_mix(b, max_len)
         kv_pool = choose_kv_pool(cfg, b, max_len, advisor=self.advisor,
-                                 scfg=self.scfg,
-                                 rw_mix=decode_rw_mix(b, max_len))
+                                 scfg=self.scfg, pool_mgr=self.pool_mgr,
+                                 rw_mix=rw_mix, inject_rate=self._duty)
 
-        prefill = jax.jit(make_prefill_step(cfg, rules, max_len=max_len),
-                          static_argnames=())
-        caches, logits = prefill(self.params, tokens, frontend)
+        caches, logits = self._prefill(max_len)(self.params, tokens,
+                                                frontend)
         caches = self._place_caches(caches, kv_pool)
 
         key = jax.random.PRNGKey(seed)
         tok = sample_token(logits, key, temperature)[:, None]
 
+        if self.monitor is None and on_step is None:
+            return self._generate_scan(caches, tok, key, s,
+                                       max_new_tokens, temperature,
+                                       kv_pool)
+        return self._generate_monitored(caches, tok, key, s, b, max_len,
+                                        max_new_tokens, temperature,
+                                        kv_pool, rw_mix, on_step)
+
+    def _generate_scan(self, caches, tok, key, s: int,
+                       max_new_tokens: int, temperature: float,
+                       kv_pool: str) -> GenerateResult:
         def body(carry, i):
             caches, tok, key = carry
             key, sub = jax.random.split(key)
@@ -181,3 +278,60 @@ class ServeEngine:
             [jnp.moveaxis(toks, 0, 1), last], axis=1) \
             if max_new_tokens > 1 else last
         return GenerateResult(out, max_new_tokens, kv_pool)
+
+    def _generate_monitored(self, caches, tok, key, s: int, b: int,
+                            max_len: int, max_new_tokens: int,
+                            temperature: float, kv_pool: str,
+                            rw_mix: float, on_step) -> GenerateResult:
+        """The python decode loop: token-identical to the scan path
+        (same split order, same pre-update emission), with each step
+        wall-timed for the watchdog.  ``on_step(abs_step, pool)`` runs
+        INSIDE the timed window — it stands in for the external
+        contention the step experiences (benchmarks inject load
+        there)."""
+        mon = self.monitor
+        d0 = m0 = r0 = 0
+        if mon is not None:
+            mon.bind(kv_bytes=cache_bytes(self.cfg, b, max_len),
+                     rw_mix=rw_mix, pool=kv_pool,
+                     inject_rate=self._duty,
+                     capacities=pool_capacities(self.advisor,
+                                                pool_mgr=self.pool_mgr)
+                     if self.advisor is not None else None)
+            kv_pool = mon.pool or kv_pool
+            d0 = len(mon.drift_events)
+            m0 = len(mon.migrations)
+            r0 = len(mon.refreshes)
+
+        emitted: List[Any] = []
+        busy_s = 0.0
+        t_loop = time.perf_counter()
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            t0 = time.perf_counter()
+            if on_step is not None:
+                on_step(s + i, kv_pool)
+            caches, logits = self._decode(self.params, caches, tok,
+                                          s + i)
+            logits.block_until_ready()
+            wall_s = time.perf_counter() - t0
+            busy_s += wall_s
+            nxt = sample_token(logits, sub, temperature)[:, None]
+            emitted.append(tok[:, 0])
+            tok = nxt
+            if mon is not None:
+                action = mon.on_step(wall_s * 1e9)
+                if action is not None:
+                    caches = self._place_caches(caches, action.to_pool)
+                    kv_pool = action.to_pool
+        self._observe_duty(busy_s, time.perf_counter() - t_loop)
+
+        out = jnp.concatenate(
+            [jnp.stack(emitted, axis=1), tok], axis=1) \
+            if max_new_tokens > 1 else tok
+        result = GenerateResult(out, max_new_tokens, kv_pool)
+        if mon is not None:
+            result.drift_events = list(mon.drift_events[d0:])
+            result.migrations = list(mon.migrations[m0:])
+            result.probe_sweeps = len(mon.refreshes) - r0
+        return result

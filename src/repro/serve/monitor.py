@@ -1,0 +1,496 @@
+"""Serving-time drift monitoring: watchdog -> probe sweep -> migration.
+
+The offline loop (characterize -> place -> run) trusts its surface
+forever; real contention drifts.  This module closes the loop *online*,
+in three guarded stages, all running inside the serving process:
+
+* :class:`ContentionWatchdog` — per-decode-step wall timing on the
+  shared EWMA/median machinery
+  (:class:`repro.runtime.fault_tolerance.StragglerMonitor`).  After a
+  warmup calibration it compares each step against ``base_median +
+  (surface_prediction_now - surface_prediction_at_calibration)`` — the
+  surface enters as a *delta*, so the watchdog needs no absolute model
+  of the step (model compute dominates the wall; the surface only
+  predicts how the memory term moves).  Sustained deviation beyond a
+  hysteresis band raises a typed :class:`DriftEvent`; a cooldown and a
+  re-arm band keep one incident from firing a stream of events.
+
+* :class:`OnlineRecharacterizer` — on drift, a SMALL probe sweep at
+  the live surface coordinates through the ordinary coordinator path
+  (:func:`repro.core.characterize.refresh_surface_cells`) with the
+  resilience stack engaged: faulted/noisy probes degrade or flag per
+  ``core/exec/resilience`` and a failed sweep returns a flagged
+  :class:`RefreshResult` instead of raising into the serving loop.
+  On the spmd backend the sweep journals to a deterministic sidecar
+  (:class:`repro.core.exec.SweepJournal`), so an engine restart
+  *resumes* a half-done probe sweep value-identically; the sidecar is
+  deleted after a successful merge so a LATER refresh at the same
+  coordinates measures fresh instead of replaying stale values.
+
+* :class:`MigrationGuard` — when the refreshed surface flips the
+  advisor's KV-pool decision (via
+  :meth:`repro.core.placement.PlacementAdvisor.readvise`), the actual
+  migration is guarded twice: a minimum predicted gain + cool-down so
+  placement cannot flap, and a post-migration verification window that
+  ROLLS BACK if the observed step time regresses beyond
+  ``regress_band`` of the pre-migration median.
+
+:class:`ServeMonitor` composes the three into the single ``on_step``
+hook the engine calls from its monitored decode loop.
+"""
+from __future__ import annotations
+
+import logging
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.characterize import ONLINE_QUALIFIER, refresh_surface_cells
+from repro.core.placement import (ContentionSpec, MemObject,
+                                  PlacementAdvisor, kv_cache_object)
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+log = logging.getLogger(__name__)
+
+__all__ = ["ContentionWatchdog", "DriftEvent", "GuardConfig",
+           "MigrationGuard", "MigrationRecord", "MonitorAction",
+           "OnlineRecharacterizer", "RefreshResult", "ServeMonitor",
+           "WatchdogConfig"]
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WatchdogConfig:
+    """Hysteresis band for the drift detector.
+
+    ``band`` — a step slower than ``band x`` expected (or faster than
+    ``1/band x``) counts toward the deviation streak; ``rearm`` — the
+    streak resets once steps come back inside ``[1/rearm, rearm]``;
+    ``sustain`` — consecutive deviating steps before a
+    :class:`DriftEvent` fires; ``warmup`` — steps used to calibrate
+    the base median after a (re)base; ``cooldown`` — steps after an
+    event before the next may fire."""
+    band: float = 1.5
+    rearm: float = 1.2
+    sustain: int = 8
+    warmup: int = 8
+    window: int = 64
+    cooldown: int = 64
+
+    def __post_init__(self):
+        if self.band <= 1.0 or self.rearm <= 1.0 or self.rearm > self.band:
+            raise ValueError(
+                f"need 1 < rearm <= band, got rearm={self.rearm} "
+                f"band={self.band}")
+        if self.sustain < 1 or self.warmup < 1:
+            raise ValueError("sustain and warmup must be >= 1")
+
+
+@dataclass(frozen=True)
+class DriftEvent:
+    """Sustained deviation of observed step time from the surface's
+    expectation at the live coordinates."""
+    step: int
+    observed_ns: float
+    expected_ns: float
+    ratio: float
+    pool: str
+    coord: Dict[str, float] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"step": self.step, "observed_ns": self.observed_ns,
+                "expected_ns": self.expected_ns, "ratio": self.ratio,
+                "pool": self.pool, "coord": dict(self.coord)}
+
+
+class ContentionWatchdog:
+    """Deviation detector over the shared :class:`StragglerMonitor`.
+
+    ``record(step, wall_ns, pred_ns)`` feeds one observed step plus
+    the surface's current prediction of the memory term; the first
+    ``warmup`` steps after a (re)base calibrate ``(base_median,
+    base_pred)``, after which the expectation tracks the surface:
+    ``expected = base_median + (pred - base_pred)``."""
+
+    def __init__(self, cfg: Optional[WatchdogConfig] = None):
+        self.cfg = cfg or WatchdogConfig()
+        self.monitor = StragglerMonitor(window=self.cfg.window)
+        self.base_median_ns: Optional[float] = None
+        self.base_pred_ns: float = 0.0
+        self._streak = 0
+        self._cooldown_until = -1
+        self.events: List[DriftEvent] = []
+
+    def rebase(self) -> None:
+        """Restart calibration — the regime legitimately changed
+        (migration, rollback, new binding)."""
+        self.monitor.reset()
+        self.base_median_ns = None
+        self._streak = 0
+
+    def expected_ns(self, pred_ns: float) -> Optional[float]:
+        if self.base_median_ns is None:
+            return None
+        return max(self.base_median_ns + (pred_ns - self.base_pred_ns),
+                   1e-9)
+
+    def record(self, step: int, wall_ns: float, pred_ns: float, *,
+               pool: str = "", coord: Optional[Dict[str, float]] = None,
+               ) -> Optional[DriftEvent]:
+        cfg = self.cfg
+        self.monitor.record(step, wall_ns)
+        if self.base_median_ns is None:
+            if len(self.monitor.times) >= cfg.warmup:
+                self.base_median_ns = self.monitor.median()
+                self.base_pred_ns = pred_ns
+            return None
+        expected = self.expected_ns(pred_ns)
+        ratio = wall_ns / expected
+        if ratio > cfg.band or ratio < 1.0 / cfg.band:
+            self._streak += 1
+        elif 1.0 / cfg.rearm <= ratio <= cfg.rearm:
+            self._streak = 0
+        if self._streak >= cfg.sustain and step >= self._cooldown_until:
+            self._streak = 0
+            self._cooldown_until = step + cfg.cooldown
+            ev = DriftEvent(step, wall_ns, expected, ratio, pool,
+                            dict(coord or {}))
+            self.events.append(ev)
+            return ev
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Background re-characterization
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RefreshResult:
+    """One probe sweep's outcome.  ``failed=True`` + ``error`` instead
+    of an exception — a broken probe path must never kill serving."""
+    keys: List[Any] = field(default_factory=list)
+    stats: Dict[str, Any] = field(default_factory=dict)
+    failed: bool = False
+    error: str = ""
+    journal: str = ""
+
+
+class OnlineRecharacterizer:
+    """Runs :func:`refresh_surface_cells` at the live coordinates with
+    the coordinator's resilience stack engaged, journaled, and with
+    every failure downgraded to a flagged :class:`RefreshResult`.
+
+    ``refresh`` is the injection seam for tests/benchmarks: it defaults
+    to :func:`refresh_surface_cells` and receives the same kwargs."""
+
+    def __init__(self, coord, db, *, pools: Optional[List[str]] = None,
+                 stress_pools: Optional[List[str]] = None,
+                 buffer_bytes: int = 64 << 10, iters: int = 50,
+                 max_stressors: Optional[int] = None,
+                 journal_dir: Optional[str] = None,
+                 refresh=None):
+        self.coord = coord
+        self.db = db
+        self.pools = pools
+        self.stress_pools = stress_pools
+        self.buffer_bytes = buffer_bytes
+        self.iters = iters
+        self.max_stressors = max_stressors
+        self.journal_dir = journal_dir
+        self.refresh = refresh or refresh_surface_cells
+
+    def _journal_path(self, rw: float, ir: float) -> Optional[str]:
+        """Deterministic per-coordinate sidecar — a restarted engine
+        that drifts at the SAME coordinates resumes the same journal.
+        Journaling needs the spmd backend (the journal records planned
+        dispatch groups)."""
+        if self.journal_dir is None or self.coord.backend != "spmd":
+            return None
+        os.makedirs(self.journal_dir, exist_ok=True)
+        return os.path.join(self.journal_dir,
+                            f"online-rw{rw:.4f}-ir{ir:.4f}.jsonl")
+
+    def run(self, rw_ratio: float, inject_rate: float,
+            drift: Optional[Dict[str, Any]] = None) -> RefreshResult:
+        pools = self.pools if self.pools is not None \
+            else self.db.observer_pools()
+        journal = self._journal_path(rw_ratio, inject_rate)
+        try:
+            keys, stats = self.refresh(
+                self.coord, self.db, pools=pools,
+                stress_pools=self.stress_pools, rw_ratio=rw_ratio,
+                inject_rate=inject_rate, buffer_bytes=self.buffer_bytes,
+                iters=self.iters, max_stressors=self.max_stressors,
+                drift=drift, journal=journal)
+        except Exception as exc:        # noqa: BLE001 — flag, never raise
+            log.warning("online probe sweep failed (%s); serving "
+                        "continues on the stale surface", exc)
+            return RefreshResult(failed=True, error=repr(exc),
+                                 journal=journal or "")
+        if journal and os.path.exists(journal):
+            # the sidecar served its purpose: a LATER refresh at the
+            # same coordinates must measure fresh, not replay this one
+            os.unlink(journal)
+        return RefreshResult(keys=list(keys), stats=dict(stats),
+                             journal=journal or "")
+
+
+# ---------------------------------------------------------------------------
+# Migration guard
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """``min_gain_frac`` — re-advise hysteresis (the readvise floor);
+    ``cooldown_steps`` — steps between guarded actions; ``verify_steps``
+    — post-migration observation window; ``regress_band`` — roll back
+    when the post-migration median exceeds this multiple of the
+    pre-migration median."""
+    min_gain_frac: float = 0.1
+    cooldown_steps: int = 256
+    verify_steps: int = 16
+    regress_band: float = 1.1
+
+
+@dataclass
+class MigrationRecord:
+    step: int
+    from_pool: str
+    to_pool: str
+    predicted_gain_frac: float
+    rolled_back: bool = False
+    reason: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"step": self.step, "from_pool": self.from_pool,
+                "to_pool": self.to_pool,
+                "predicted_gain_frac": self.predicted_gain_frac,
+                "rolled_back": self.rolled_back, "reason": self.reason}
+
+
+@dataclass
+class MonitorAction:
+    """What the engine must do to the live caches this step."""
+    kind: str               # "migrate" | "rollback"
+    to_pool: str
+    record: MigrationRecord
+
+
+class MigrationGuard:
+    """Cool-down + post-migration verification with rollback."""
+
+    def __init__(self, cfg: Optional[GuardConfig] = None):
+        self.cfg = cfg or GuardConfig()
+        self._last_action_step: Optional[int] = None
+        self._active: Optional[Tuple[MigrationRecord, float,
+                                     List[float]]] = None
+
+    @property
+    def verifying(self) -> bool:
+        return self._active is not None
+
+    def allows(self, step: int) -> bool:
+        if self._active is not None:
+            return False
+        if self._last_action_step is None:
+            return True
+        return step - self._last_action_step >= self.cfg.cooldown_steps
+
+    def begin(self, step: int, record: MigrationRecord,
+              pre_median_ns: float) -> None:
+        if not self.allows(step):
+            raise RuntimeError("migration guard: begin() while "
+                               "cooling down or verifying")
+        self._last_action_step = step
+        self._active = (record, float(pre_median_ns), [])
+
+    def observe(self, step: int, wall_ns: float,
+                ) -> Optional[MigrationRecord]:
+        """Feed one post-migration step.  Returns the migration record
+        (marked ``rolled_back``) when the verification window closed on
+        a regression; ``None`` otherwise."""
+        if self._active is None:
+            return None
+        record, pre_med, walls = self._active
+        walls.append(float(wall_ns))
+        if len(walls) < self.cfg.verify_steps:
+            return None
+        walls_sorted = sorted(walls)
+        post_med = walls_sorted[len(walls_sorted) // 2]
+        self._active = None
+        self._last_action_step = step
+        if post_med > self.cfg.regress_band * pre_med:
+            record.rolled_back = True
+            record.reason = (
+                f"post-migration median {post_med:.0f}ns regressed "
+                f"beyond {self.cfg.regress_band:.2f}x pre-migration "
+                f"median {pre_med:.0f}ns")
+            return record
+        record.reason = (f"verified: post-migration median "
+                         f"{post_med:.0f}ns vs pre {pre_med:.0f}ns")
+        return None
+
+
+# ---------------------------------------------------------------------------
+# The composed monitor
+# ---------------------------------------------------------------------------
+
+
+class ServeMonitor:
+    """The engine-facing composition: ``bind`` the live KV workload,
+    then call :meth:`on_step` once per timed decode step; the returned
+    :class:`MonitorAction` (if any) tells the engine to move its
+    caches.  The advisor should carry
+    ``qualifier=``:data:`~repro.core.characterize.ONLINE_QUALIFIER`
+    so re-advice prefers refreshed cells (see :meth:`online_advisor`).
+    """
+
+    def __init__(self, advisor: PlacementAdvisor,
+                 recharacterizer: Optional[OnlineRecharacterizer] = None,
+                 *, watchdog: Optional[WatchdogConfig] = None,
+                 guard: Optional[GuardConfig] = None,
+                 capacities: Optional[Dict[str, int]] = None):
+        self.advisor = advisor
+        self.recharacterizer = recharacterizer
+        self.watchdog = ContentionWatchdog(watchdog)
+        self.guard = MigrationGuard(guard)
+        self.capacities = capacities
+        self.step = 0
+        self.pool = ""
+        self.drift_events: List[DriftEvent] = []
+        self.migrations: List[MigrationRecord] = []
+        self.refreshes: List[RefreshResult] = []
+        self.held: List[Tuple[int, str]] = []
+        self._obj: Optional[MemObject] = None
+        self._contention: Optional[ContentionSpec] = None
+        self._pred_ns: float = 0.0
+
+    @staticmethod
+    def online_advisor(db, platform, *, pools=None) -> PlacementAdvisor:
+        """An advisor that resolves refreshed-online surfaces first."""
+        return PlacementAdvisor(db, platform, pools=pools,
+                                qualifier=ONLINE_QUALIFIER)
+
+    # -- binding -------------------------------------------------------------
+    def bind(self, *, kv_bytes: int, rw_mix: float, pool: str,
+             inject_rate: Optional[float] = None,
+             capacities: Optional[Dict[str, int]] = None) -> None:
+        """(Re)bind the live KV workload.  Rebasing only happens when
+        the binding actually changed, so repeated ``generate`` calls at
+        the same shape keep the calibrated watchdog."""
+        obj = kv_cache_object("kv", kv_bytes,
+                              bytes_read_per_token=float(kv_bytes))
+        contention = ContentionSpec(0, rw_ratio=float(rw_mix),
+                                    inject_rate=inject_rate)
+        if capacities is not None:
+            self.capacities = capacities
+        changed = (obj != self._obj or contention != self._contention
+                   or pool != self.pool)
+        self._obj = obj
+        self._contention = contention
+        self.pool = pool
+        if changed:
+            self.watchdog.rebase()
+        self._refresh_prediction()
+
+    def _refresh_prediction(self) -> None:
+        try:
+            self._pred_ns = self.advisor.predict_ns(
+                self._obj, self.pool, self._contention)
+        except KeyError:
+            # no surface for the live pool at all: the watchdog still
+            # works — the prediction delta is simply always zero
+            self._pred_ns = 0.0
+
+    def coord(self) -> Dict[str, float]:
+        c = self._contention
+        out: Dict[str, float] = {}
+        if c is not None and c.rw_ratio is not None:
+            out["rw_ratio"] = c.rw_ratio
+        if c is not None and c.inject_rate is not None:
+            out["inject_rate"] = c.inject_rate
+        return out
+
+    # -- the per-step hook ---------------------------------------------------
+    def on_step(self, wall_ns: float) -> Optional[MonitorAction]:
+        if self._obj is None:
+            raise RuntimeError("ServeMonitor.on_step before bind()")
+        self.step += 1
+        step = self.step
+
+        # 1. an active post-migration verification window sees the
+        #    step FIRST — a regression rolls the caches back before the
+        #    watchdog can re-interpret it as fresh drift
+        rb = self.guard.observe(step, wall_ns)
+        if rb is not None:
+            self.pool = rb.from_pool
+            self._refresh_prediction()
+            self.watchdog.rebase()
+            log.warning("migration rolled back: %s", rb.reason)
+            return MonitorAction("rollback", rb.from_pool, rb)
+        if self.guard.verifying:
+            return None                  # verifying: watchdog holds off
+
+        # 2. the watchdog
+        ev = self.watchdog.record(step, wall_ns, self._pred_ns,
+                                  pool=self.pool, coord=self.coord())
+        if ev is None:
+            return None
+        self.drift_events.append(ev)
+        log.warning("contention drift at step %d: observed %.0fns vs "
+                    "expected %.0fns (%.2fx) on pool %r", step,
+                    ev.observed_ns, ev.expected_ns, ev.ratio, self.pool)
+
+        # 3. probe sweep at the live coordinates (resilient, journaled)
+        if self.recharacterizer is None:
+            return None
+        c = self._contention
+        res = self.recharacterizer.run(
+            c.rw_ratio if c.rw_ratio is not None else 0.5,
+            c.inject_rate if c.inject_rate is not None else 1.0,
+            drift=ev.to_dict())
+        self.refreshes.append(res)
+        if res.failed:
+            return None                  # flagged; serving continues
+
+        # 4. re-advise against the refreshed surface, migrate if the
+        #    guarded gain clears the hysteresis floor
+        self._refresh_prediction()
+        decision = self.advisor.readvise(
+            [self._obj], c, {self._obj.name: self.pool},
+            capacities=self.capacities,
+            min_gain_frac=self.guard.cfg.min_gain_frac)
+        move = decision.moves.get(self._obj.name)
+        if move is None:
+            reason = decision.held.get(
+                self._obj.name, "re-advice kept the current pool")
+            self.held.append((step, reason))
+            return None
+        if not self.guard.allows(step):
+            self.held.append((step, "migration guard cooling down"))
+            return None
+        src, dst = move
+        record = MigrationRecord(step, src, dst,
+                                 decision.predicted_gain_frac)
+        # the rollback baseline is the DRIFTED regime the migration is
+        # escaping (the samples that formed the deviation streak), not
+        # the full window — else a migration that improves on drift but
+        # not on the old calm regime would falsely roll back
+        recent = sorted(
+            self.watchdog.monitor.times[-self.watchdog.cfg.sustain:])
+        pre_med = recent[len(recent) // 2] if recent else wall_ns
+        self.guard.begin(step, record, pre_med)
+        self.migrations.append(record)
+        self.pool = dst
+        self._refresh_prediction()
+        self.watchdog.rebase()
+        log.warning("migrating KV cache %s -> %s (predicted gain "
+                    "%.1f%%)", src, dst,
+                    100.0 * decision.predicted_gain_frac)
+        return MonitorAction("migrate", dst, record)

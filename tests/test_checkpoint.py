@@ -93,7 +93,7 @@ def test_resilient_loop_recovers(tmp_path):
     def fault(step):
         if step == 7 and not fired["done"]:
             fired["done"] = True
-            raise InjectedFault("chaos")
+            raise InjectedFault("runtime_error", "test-chaos")
 
     mgr = CheckpointManager(str(tmp_path))
     loop = ResilientLoop(step_fn, batch_fn, mgr, checkpoint_every=5,
@@ -112,13 +112,51 @@ def test_resilient_loop_gives_up(tmp_path):
         return state, {}
 
     def fault(step):
-        raise InjectedFault("always")
+        raise InjectedFault("runtime_error", "test-always")
 
     mgr = CheckpointManager(str(tmp_path))
     loop = ResilientLoop(step_fn, lambda s: None, mgr, max_restarts=2,
                          fault_hook=fault, async_checkpoint=False)
     with pytest.raises(InjectedFault):
         loop.run({"x": jnp.zeros(1)}, 5)
+
+
+def test_resilient_loop_shared_fault_seam(tmp_path):
+    """faults="runtime=1.0,..." goes through the SAME FaultSpec machinery
+    as the sweep dispatcher: deterministic injection at every step until
+    max_restarts is exhausted, counted in LoopResult.faults_injected."""
+    def step_fn(state, batch):
+        return state, {}
+
+    mgr = CheckpointManager(str(tmp_path))
+    loop = ResilientLoop(step_fn, lambda s: None, mgr, max_restarts=2,
+                         faults="runtime=1.0,seed=3",
+                         async_checkpoint=False)
+    with pytest.raises(InjectedFault) as ei:
+        loop.run({"x": jnp.zeros(1)}, 5)
+    assert ei.value.kind == "runtime_error"
+    assert "train-step-0" in str(ei.value)
+
+
+def test_resilient_loop_fault_env_resolution(tmp_path, monkeypatch):
+    """faults=None resolves REPRO_FAULT_SPEC — one env var for the whole
+    repo.  An injected fault recovers exactly like a hook-raised one
+    because it IS the same exception type."""
+    monkeypatch.setenv("REPRO_FAULT_SPEC", "runtime=1.0,seed=3")
+
+    def step_fn(state, batch):
+        return state, {}
+
+    mgr = CheckpointManager(str(tmp_path))
+    loop = ResilientLoop(step_fn, lambda s: None, mgr, max_restarts=1,
+                         faults=None, async_checkpoint=False)
+    with pytest.raises(InjectedFault):
+        loop.run({"x": jnp.zeros(1)}, 5)
+    # pinned off -> env ignored, loop completes cleanly
+    loop_off = ResilientLoop(step_fn, lambda s: None, mgr,
+                             faults=False, async_checkpoint=False)
+    res = loop_off.run({"x": jnp.zeros(1)}, 5)
+    assert res.final_step == 5 and res.faults_injected == 0
 
 
 def test_straggler_monitor():
